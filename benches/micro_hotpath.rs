@@ -1,0 +1,90 @@
+//! Hot-path micro-benchmarks (the §Perf profiling instrument):
+//!   * per-forward engine cost per chain member (T_i) + dispatch overhead
+//!   * RemoteModel channel round-trip tax
+//!   * sampler / verifier / softmax costs per decode event
+//!
+//!   cargo bench --bench micro_hotpath
+
+use std::time::Instant;
+
+use polyspec::harness::artifacts_dir;
+use polyspec::runtime::EngineHost;
+use polyspec::spec::rng::Pcg32;
+use polyspec::spec::sampler;
+use polyspec::spec::types::{softmax, LanguageModel, VerifyRule};
+use polyspec::spec::verify;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = start.elapsed().as_secs_f64() / iters as f64;
+    let (val, unit) = if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else {
+        (per * 1e6, "us")
+    };
+    println!("{name:<44} {val:>9.3} {unit}/iter  ({iters} iters)");
+    per
+}
+
+fn main() {
+    println!("== micro: CPU-side decode-event costs ==");
+    let vocab = 256;
+    let mut rng = Pcg32::seeded(1);
+    let logits: Vec<f32> = (0..vocab).map(|i| ((i * 37 % 97) as f32) / 17.0).collect();
+
+    bench("softmax(256) + temperature", 20_000, || {
+        let p = softmax(&logits, 0.8);
+        std::hint::black_box(p);
+    });
+    let probs = softmax(&logits, 1.0);
+    bench("categorical sample(256)", 20_000, || {
+        std::hint::black_box(sampler::sample_categorical(&probs, &mut rng));
+    });
+    bench("residual + resample (rejection path)", 20_000, || {
+        let r = sampler::residual(&probs, &probs.iter().rev().copied().collect::<Vec<_>>());
+        std::hint::black_box(r);
+    });
+    let p_rows: Vec<Vec<f32>> = (0..8).map(|_| probs.clone()).collect();
+    let q_rows = p_rows.clone();
+    let toks: Vec<i32> = (0..8).collect();
+    bench("verify_block(8 tokens, speculative)", 20_000, || {
+        let v = verify::verify_block(&toks, &p_rows, &q_rows, VerifyRule::Speculative, &mut rng);
+        std::hint::black_box(v);
+    });
+
+    println!("\n== micro: engine forward costs (requires artifacts) ==");
+    let artifacts = artifacts_dir();
+    let host = match EngineHost::load(&artifacts, "v7b", &["target", "intermediate", "draft"]) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("skipping engine micro-benches: {e:#}");
+            return;
+        }
+    };
+    for (i, role) in ["target", "intermediate", "draft"].iter().enumerate() {
+        for ctx in [16usize, 64, 128] {
+            let t = host.measure_cost_ms(i, ctx, 5).unwrap();
+            println!("forward {role:<13} ctx={ctx:<4} {t:>9.3} ms (on engine thread)");
+        }
+    }
+    // Channel tax: same forward via the RemoteModel proxy.
+    let m = host.model(2);
+    let ctx: Vec<i32> = (0..64).map(|i| i % 256).collect();
+    let _ = m.forward(&ctx);
+    let t0 = Instant::now();
+    let iters = 20;
+    for _ in 0..iters {
+        let _ = m.forward(&ctx).unwrap();
+    }
+    let via_proxy = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    let direct = host.measure_cost_ms(2, 64, iters).unwrap();
+    println!(
+        "\nRemoteModel channel tax: {:.3} ms (proxy {via_proxy:.3} - direct {direct:.3})",
+        via_proxy - direct
+    );
+}

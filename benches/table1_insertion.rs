@@ -1,0 +1,183 @@
+//! Paper Table 1 / §4.2 "Theoretical Validation": Theorem 3.2's insertion
+//! criterion checked against measured end-to-end speedups.
+//!
+//!   Case 1 (non-compliant): insert an *uncorrelated* model (the `decoy`
+//!           role — our Vicuna-1B stand-in) between target and drafter.
+//!           Criterion fails -> measured speedup must drop.
+//!   Case 2 (compliant): insert the W4-quantized early-exit `intermediate`
+//!           (the paper's quantized Vicuna-7B). Criterion holds -> speedup
+//!           must improve.
+//!   Case 3 (CS Drafting): same check on a CS-Drafting cascade whose lowest
+//!           tier is the statistical bigram drafter.
+//!
+//!   cargo bench --bench table1_insertion
+
+use std::sync::Arc;
+
+use polyspec::harness::{artifacts_dir, hr, queries_per_task, run_cell, BenchMethod};
+use polyspec::runtime::EngineHost;
+use polyspec::spec::csdraft::{self, CsDraftConfig};
+use polyspec::spec::ngram::BigramModel;
+use polyspec::spec::planner::measure_pair_acceptance;
+use polyspec::spec::theory::InsertionCheck;
+use polyspec::spec::types::{LanguageModel, SamplingParams, VerifyRule};
+use polyspec::spec::{polybasic, PolyConfig};
+use polyspec::workload::tasks::{make_query, TaskKind};
+
+fn main() {
+    let artifacts = artifacts_dir();
+    let family = std::env::var("POLYSPEC_FAMILY").unwrap_or_else(|_| "v7b".into());
+    let host = match EngineHost::load(&artifacts, &family, &["target", "intermediate", "draft", "decoy"])
+    {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("need target/intermediate/draft/decoy artifacts for {family}: {e:#}");
+            return;
+        }
+    };
+    let target = host.model(0) as Arc<dyn LanguageModel>;
+    let inter = host.model(1) as Arc<dyn LanguageModel>;
+    let draft = host.model(2) as Arc<dyn LanguageModel>;
+    let decoy = host.model(3) as Arc<dyn LanguageModel>;
+
+    // ---- measured per-forward costs (T_i, ms) -----------------------------
+    let t_target = host.measure_cost_ms(0, 100, 5).unwrap();
+    let t_inter = host.measure_cost_ms(1, 100, 5).unwrap();
+    let t_draft = host.measure_cost_ms(2, 100, 5).unwrap();
+    let t_decoy = host.measure_cost_ms(3, 100, 5).unwrap();
+    println!("== measured per-forward costs (ms) ==");
+    println!(
+        "T_target={t_target:.2}  T_int={t_inter:.2}  T_draft={t_draft:.2}  T_decoy={t_decoy:.2}\n"
+    );
+
+    // ---- pairwise acceptance lengths (L) ----------------------------------
+    let vocab = target.vocab();
+    let probes: Vec<Vec<i32>> = (0..3)
+        .map(|i| make_query(TaskKind::Qa, i, vocab).prompt)
+        .collect();
+    let sampling = SamplingParams::default();
+    let l =
+        |ver: &Arc<dyn LanguageModel>, prop: &Arc<dyn LanguageModel>| -> f64 {
+            // draft_k must exceed the expected acceptance length or the
+            // probe saturates at k+1 and understates L for strong pairs.
+            measure_pair_acceptance(ver.clone(), prop.clone(), &probes, 10, 40, sampling)
+                .expect("acceptance probe")
+        };
+    let l_target_draft = l(&target, &draft); // L_i (current pair)
+    let l_target_inter = l(&target, &inter); // L_{i-new}, compliant
+    let l_inter_draft = l(&inter, &draft); // L_new, compliant
+    let l_target_decoy = l(&target, &decoy); // L_{i-new}, non-compliant
+    let l_decoy_draft = l(&decoy, &draft); // L_new, non-compliant
+
+    // ---- measured end-to-end speedups -------------------------------------
+    let qpt = queries_per_task().max(2);
+    let queries: Vec<_> = (0..qpt).map(|i| make_query(TaskKind::MultiTurn, i as u64, vocab)).collect();
+    let two_chain = vec![target.clone(), draft.clone()];
+    let dec_chain = vec![target.clone(), decoy.clone(), draft.clone()];
+    let int_chain = vec![target.clone(), inter.clone(), draft.clone()];
+
+    let vanilla = run_cell(&two_chain, &queries, BenchMethod::Vanilla, VerifyRule::Speculative)
+        .unwrap();
+    let base = run_cell(&two_chain, &queries, BenchMethod::Eagle { draft_k: 4 },
+                        VerifyRule::Speculative).unwrap();
+    let poly = |chain: &[Arc<dyn LanguageModel>]| {
+        let mut total = 0.0;
+        let mut n = 0u64;
+        for (i, q) in queries.iter().enumerate() {
+            let mut cfg = PolyConfig::for_chain(3, 6, 8, q.max_new);
+            cfg.sampling =
+                SamplingParams { temperature: q.temperature, seed: 2000 + i as u64, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let out = polybasic::generate(chain, &q.prompt, &cfg).unwrap();
+            total += t0.elapsed().as_secs_f64();
+            n += out.tokens.len() as u64;
+        }
+        (total, n)
+    };
+    let (decoy_wall, _) = poly(&dec_chain);
+    let (int_wall, _) = poly(&int_chain);
+
+    let c_base = vanilla.wall_s / base.wall_s;
+    let c_decoy = vanilla.wall_s / decoy_wall;
+    let c_int = vanilla.wall_s / int_wall;
+
+    // ---- Theorem 3.2 verdicts ---------------------------------------------
+    let beta = 1.0;
+    let noncompliant = InsertionCheck {
+        t_i: t_target, t_new: t_decoy, t_next: t_draft,
+        l_i: l_target_draft, l_i_new: l_target_decoy, l_new: l_decoy_draft, beta,
+    }
+    .evaluate();
+    let compliant = InsertionCheck {
+        t_i: t_target, t_new: t_inter, t_next: t_draft,
+        l_i: l_target_draft, l_i_new: l_target_inter, l_new: l_inter_draft, beta,
+    }
+    .evaluate();
+
+    println!("== Table 1: Theoretical Validation via Model Insertion ==");
+    let head = format!(
+        "{:<14} {:>7} {:>8} {:>8} {:>7} {:>8} {:>6} | {:>18} | {:>9} {:>9}",
+        "Case", "T_i", "L_i-new", "T_new", "L_new", "T_i+1", "L_i", "Speedup", "Thm3.2", "Agrees?"
+    );
+    println!("{head}");
+    println!("{}", hr(head.len()));
+    let row = |case: &str, t_new: f64, l_i_new: f64, l_new: f64, c_to: f64,
+               verdict: &polyspec::spec::theory::InsertionVerdict| {
+        let predicted = verdict.predicts_improvement();
+        let actual = c_to > c_base;
+        println!(
+            "{:<14} {:>7.2} {:>8.2} {:>8.2} {:>7.2} {:>8.2} {:>6.2} | {:>7.2}x -> {:>6.2}x | {:>9} {:>9}",
+            case, t_target, l_i_new, t_new, l_new, t_draft, l_target_draft,
+            c_base, c_to,
+            if predicted { "improves" } else { "degrades" },
+            if predicted == actual { "YES" } else { "NO" },
+        );
+        println!(
+            "{:<14}   cond1: {:.3} < {:.3} ? {}   cond2: {:.3} < {:.3} ? {}",
+            "", verdict.cond1_lhs, verdict.cond1_rhs, verdict.cond1,
+            verdict.cond2_lhs, verdict.cond2_rhs, verdict.cond2
+        );
+    };
+    row("Non-compliant", t_decoy, l_target_decoy, l_decoy_draft, c_decoy, &noncompliant);
+    row("Compliant", t_inter, l_target_inter, l_inter_draft, c_int, &compliant);
+
+    // ---- Case 3: CS Drafting cascade ---------------------------------------
+    let bigram: Arc<dyn LanguageModel> = Arc::new(BigramModel::new(target.seq_len(), vocab));
+    let cs_base_models = vec![target.clone(), draft.clone(), bigram.clone()];
+    let cs_ins_models = vec![target.clone(), inter.clone(), draft.clone(), bigram.clone()];
+    let run_cs = |models: &[Arc<dyn LanguageModel>], lens: Vec<usize>| -> f64 {
+        let mut wall = 0.0;
+        for (i, q) in queries.iter().enumerate() {
+            let cfg = CsDraftConfig {
+                lens: lens.clone(),
+                rule: VerifyRule::Speculative,
+                sampling: SamplingParams {
+                    temperature: q.temperature, seed: 3000 + i as u64, ..Default::default()
+                },
+                max_new: q.max_new,
+            };
+            let t0 = std::time::Instant::now();
+            csdraft::generate(models, &q.prompt, &cfg).unwrap();
+            wall += t0.elapsed().as_secs_f64();
+        }
+        wall
+    };
+    let cs_base_wall = run_cs(&cs_base_models, vec![4, 2]);
+    let cs_ins_wall = run_cs(&cs_ins_models, vec![2, 3, 2]);
+    let c_cs_base = vanilla.wall_s / cs_base_wall;
+    let c_cs_ins = vanilla.wall_s / cs_ins_wall;
+    let cs_check = InsertionCheck {
+        t_i: t_target, t_new: t_inter, t_next: t_draft,
+        l_i: l_target_draft, l_i_new: l_target_inter, l_new: l_inter_draft, beta,
+    }
+    .evaluate();
+    println!(
+        "{:<14} {:>7.2} {:>8.2} {:>8.2} {:>7.2} {:>8.2} {:>6.2} | {:>7.2}x -> {:>6.2}x | {:>9} {:>9}",
+        "CS Drafting", t_target, l_target_inter, t_inter, l_inter_draft, t_draft,
+        l_target_draft, c_cs_base, c_cs_ins,
+        if cs_check.predicts_improvement() { "improves" } else { "degrades" },
+        if cs_check.predicts_improvement() == (c_cs_ins > c_cs_base) { "YES" } else { "NO" },
+    );
+    println!("\n(paper shape: non-compliant insertion degrades, compliant and CS");
+    println!(" insertions improve, and Thm 3.2's verdict agrees with measurement)");
+}

@@ -1,0 +1,68 @@
+//! Theory-driven chain planning (paper §3.2 workflow): measure T_i and
+//! pairwise acceptance lengths for every candidate, evaluate Theorem 3.2,
+//! and print the chain the planner selects — including the decoy model it
+//! must reject.
+//!
+//!   make artifacts && cargo run --release --example plan_chain
+
+use std::sync::Arc;
+
+use polyspec::runtime::EngineHost;
+use polyspec::spec::planner::{plan_chain, ModelProfile};
+use polyspec::spec::types::{LanguageModel, SamplingParams};
+use polyspec::workload::tasks::make_query;
+
+fn main() -> anyhow::Result<()> {
+    let roles = ["target", "intermediate", "decoy", "draft"];
+    let host = EngineHost::load("artifacts", "v7b", &roles)?;
+    let models: Vec<Arc<dyn LanguageModel>> =
+        (0..roles.len()).map(|i| host.model(i) as Arc<dyn LanguageModel>).collect();
+
+    println!("measuring per-forward costs (T_i)...");
+    let profiles: Vec<ModelProfile> = roles
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let t_ms = host.measure_cost_ms(i, 100, 5).unwrap();
+            println!("  {r:<13} {t_ms:>7.2} ms/forward");
+            ModelProfile { name: r.to_string(), t_ms }
+        })
+        .collect();
+
+    let vocab = models[0].vocab();
+    let prompts: Vec<Vec<i32>> =
+        (0..3).map(|i| make_query(polyspec::workload::TaskKind::MultiTurn, i, vocab).prompt).collect();
+
+    println!("\nevaluating insertions (Theorem 3.2)...");
+    let plan = plan_chain(
+        &models,
+        &profiles,
+        &prompts,
+        10,
+        40,
+        SamplingParams::default(),
+        1.0,
+    )?;
+
+    for r in &plan.reports {
+        println!("\ncandidate {:?}:", r.candidate);
+        println!(
+            "  cond1: T_new/T_i = {:.3}  vs  L_new(1/L_i - 1/L_i-new) = {:.3}  -> {}",
+            r.verdict.cond1_lhs, r.verdict.cond1_rhs, r.verdict.cond1
+        );
+        println!(
+            "  cond2: T_new/T_next = {:.3}  vs  beta(L_new/L_i - 1) = {:.3}  -> {}",
+            r.verdict.cond2_lhs, r.verdict.cond2_rhs, r.verdict.cond2
+        );
+        println!(
+            "  Lemma 3.1 prediction per 100 tokens: {:.0} ms -> {:.0} ms ({})",
+            r.predicted_ms_without,
+            r.predicted_ms_with,
+            if r.verdict.predicts_improvement() { "INSERT" } else { "SKIP" }
+        );
+    }
+
+    println!("\nplanned chain: {:?}", plan.names);
+    println!("(expected: target / intermediate / draft, decoy rejected)");
+    Ok(())
+}

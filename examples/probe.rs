@@ -1,0 +1,46 @@
+//! Dev probe: per-model costs + (draft_k, mu) parameter sweep for the
+//! polybasic chain. Used during the perf pass (EXPERIMENTS.md §Perf).
+use polyspec::runtime::EngineHost;
+use polyspec::spec::{polybasic, PolyConfig, autoregressive, dualistic};
+use polyspec::spec::types::SamplingParams;
+
+fn main() {
+    let fam = std::env::var("POLYSPEC_FAMILY").unwrap_or_else(|_| "v7b".into());
+    let host = EngineHost::load("artifacts", &fam, &["target", "intermediate", "draft"]).unwrap();
+    for (i, name) in ["target", "int", "draft"].iter().enumerate() {
+        println!("{name}: {:.3} ms/fwd", host.measure_cost_ms(i, 100, 8).unwrap());
+    }
+    let chain = host.chain();
+    let prompt: Vec<i32> = (0..24).collect();
+    let n = 64;
+    let sampling = SamplingParams { temperature: 0.8, seed: 3, ..Default::default() };
+    let mut ar_wall = 0.0;
+    for s in 0..2 {
+        let sp = SamplingParams { seed: s, ..sampling };
+        ar_wall += autoregressive::generate(chain[0].as_ref(), &prompt, n, &sp).unwrap().wall.as_secs_f64();
+    }
+    println!("AR: {:.0} ms/run", ar_wall / 2.0 * 1e3);
+    for k in [4usize, 6, 8] {
+        let cfg = dualistic::DualisticConfig { draft_k: k, rule: polyspec::spec::VerifyRule::Speculative, sampling, max_new: n };
+        let mut w = 0.0; let mut mu = 0.0;
+        for s in 0..2 {
+            let mut c = cfg; c.sampling.seed = s;
+            let out = dualistic::generate(chain[0].as_ref(), chain[2].as_ref(), &prompt, &c).unwrap();
+            w += out.wall.as_secs_f64(); mu += out.mean_accept();
+        }
+        println!("dual k={k}: {:.2}x mu={:.2}", ar_wall / w, mu / 2.0);
+    }
+    for k in [4usize, 6, 8, 10] {
+        for mu in [4usize, 6, 8, 10, 12] {
+            let mut w = 0.0; let mut mu_m = 0.0; let mut fwds = vec![0u64; 3];
+            for s in 0..2 {
+                let mut cfg = PolyConfig::for_chain(3, k, mu, n);
+                cfg.sampling = SamplingParams { seed: s, ..sampling };
+                let out = polybasic::generate(&chain, &prompt, &cfg).unwrap();
+                w += out.wall.as_secs_f64(); mu_m += out.mean_accept();
+                for i in 0..3 { fwds[i] += out.forward_passes[i]; }
+            }
+            println!("poly k={k:<2} mu={mu:<2}: {:.2}x mu={:.2} fwds={:?}", ar_wall / w, mu_m / 2.0, fwds);
+        }
+    }
+}

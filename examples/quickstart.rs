@@ -1,0 +1,55 @@
+//! Quickstart: load the v7b chain, decode a prompt with polybasic
+//! speculative decoding, and compare against vanilla autoregressive.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use polyspec::runtime::EngineHost;
+use polyspec::spec::types::{SamplingParams, VerifyRule};
+use polyspec::spec::{autoregressive, polybasic, PolyConfig};
+use polyspec::workload::tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT-compiled chain: target / W4 intermediate / draft.
+    //    Python never runs here — artifacts/ were built once by `make`.
+    let host = EngineHost::load("artifacts", "v7b", &["target", "intermediate", "draft"])?;
+    let chain = host.chain();
+    println!("chain loaded:");
+    for m in host.metas() {
+        println!(
+            "  {:<12} layers={:<2} d_model={:<4} params={}",
+            m.name, m.n_layers, m.d_model, m.param_count
+        );
+    }
+
+    // 2. Encode a prompt (byte-level tokenizer over the synthetic vocab).
+    let prompt = tokenizer::encode("Q: what makes polybasic decoding fast? A:", chain[0].vocab());
+    let max_new = 48;
+
+    // 3. Vanilla decode (the baseline).
+    let sampling = SamplingParams { temperature: 0.8, seed: 7, ..Default::default() };
+    let ar = autoregressive::generate(chain[0].as_ref(), &prompt, max_new, &sampling)?;
+    println!(
+        "\nvanilla:   {:>7.1} ms  ({} target forwards)",
+        ar.wall.as_secs_f64() * 1e3,
+        ar.forward_passes[0]
+    );
+
+    // 4. Polybasic decode: M3 drafts, M2 filters, M1 verifies blocks.
+    let mut cfg = PolyConfig::for_chain(chain.len(), 6, 8, max_new);
+    cfg.rule = VerifyRule::Speculative;
+    cfg.sampling = sampling;
+    let out = polybasic::generate(&chain, &prompt, &cfg)?;
+    println!(
+        "polybasic: {:>7.1} ms  ({} target forwards, mu = {:.2})",
+        out.wall.as_secs_f64() * 1e3,
+        out.forward_passes[0],
+        out.mean_accept()
+    );
+    println!(
+        "speedup:   {:>7.2}x",
+        ar.wall.as_secs_f64() / out.wall.as_secs_f64()
+    );
+    println!("\noutput tokens ({}): {:?}", out.tokens.len(), &out.tokens[..12.min(out.tokens.len())]);
+    println!("as text: {:?}", tokenizer::decode(&out.tokens));
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT exporter: lower every chain member to HLO *text* + a weights blob.
+
+Interchange contract with the rust runtime (rust/src/runtime/):
+
+  artifacts/
+    manifest.json            — families -> roles -> {hlo, params_bin, args[]}
+    <family>/<role>.hlo.txt  — HLO text of  f(tokens [S] i32, *weights) ->
+                               (logits [S, V] f32,)
+    <family>/<role>.params.bin — weights, concatenated little-endian in the
+                               exact order of the ``args`` list (f32 or int8)
+
+HLO **text**, not a serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).  Weights are *arguments*, not
+embedded constants, so the rust side uploads them to device buffers once and
+reuses them across every forward (``execute_b``).
+
+Python runs only here — `make artifacts` — and never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs
+from .model import forward
+from .params import build_role_params
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params):
+    """Deterministic (name, leaf) list for the weights blob + manifest."""
+    leaves_with_path, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in leaves_with_path:
+        name = "/".join(_path_key(k) for k in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def _path_key(k):
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+_DTYPES = {np.dtype(np.float32): "f32", np.dtype(np.int8): "s8",
+           np.dtype(np.int32): "s32"}
+
+
+def export_role(family_cfg, role, out_dir):
+    """Lower one chain member; returns its manifest entry."""
+    cfg, params = build_role_params(family_cfg, role)
+    # Skip non-array leaves (the quant "group" ints ride in the manifest).
+    named = [(n, a) for n, a in flatten_params(params)
+             if isinstance(a, np.ndarray) and a.dtype != object and a.ndim > 0]
+    # Quant group sizes are static python ints; strip them from the traced
+    # pytree by rebuilding the param tree from the named leaves at call time.
+    flat_leaves = [a for _, a in named]
+    treedef_params = params
+
+    def fn(tokens, *leaves):
+        rebuilt = _rebuild(treedef_params, list(leaves))
+        return (forward(rebuilt, tokens, cfg),)
+
+    token_spec = jax.ShapeDtypeStruct((cfg.seq_len,), jnp.int32)
+    leaf_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat_leaves]
+    lowered = jax.jit(fn).lower(token_spec, *leaf_specs)
+    hlo = to_hlo_text(lowered)
+
+    fam_dir = os.path.join(out_dir, family_cfg.family)
+    os.makedirs(fam_dir, exist_ok=True)
+    hlo_rel = f"{family_cfg.family}/{role}.hlo.txt"
+    bin_rel = f"{family_cfg.family}/{role}.params.bin"
+    with open(os.path.join(out_dir, hlo_rel), "w") as f:
+        f.write(hlo)
+
+    args, offset = [], 0
+    with open(os.path.join(out_dir, bin_rel), "wb") as f:
+        for name, a in named:
+            raw = np.ascontiguousarray(a).tobytes()
+            args.append({
+                "name": name,
+                "dtype": _DTYPES[a.dtype],
+                "shape": list(a.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            })
+            f.write(raw)
+            offset += len(raw)
+
+    flops = 2 * cfg.param_count() * cfg.seq_len
+    return {
+        "hlo": hlo_rel,
+        "params_bin": bin_rel,
+        "args": args,
+        "config": {
+            "name": cfg.name, "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len, "seed": cfg.seed,
+            "residual_gain": cfg.residual_gain,
+        },
+        "param_count": cfg.param_count(),
+        "flops_per_forward": flops,
+    }
+
+
+def _rebuild(template, leaves):
+    """Rebuild the params pytree from ``leaves`` in flatten order, keeping
+    static entries (ints such as quant group sizes) from the template."""
+    if isinstance(template, dict):
+        # jax flattens dicts in sorted-key order; pops must match that order.
+        return {k: _rebuild(template[k], leaves) for k in sorted(template)}
+    if isinstance(template, list):
+        return [_rebuild(t, leaves) for t in template]
+    if isinstance(template, (int, float)) and not hasattr(template, "shape"):
+        return template
+    return leaves.pop(0)
+
+
+def export_family(family, out_dir, roles=None):
+    fam = configs.FAMILIES[family]
+    entry = {"roles": {}}
+    for role in (roles or fam.roles().keys()):
+        print(f"[aot] lowering {family}/{role} ...", flush=True)
+        entry["roles"][role] = export_role(fam, role, out_dir)
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--families", default=",".join(configs.DEFAULT_SET),
+                    help="comma list, or 'bench' / 'scale' / 'all'")
+    args = ap.parse_args()
+
+    sets = {"bench": configs.BENCH_SET, "scale": configs.SCALE_SET,
+            "all": configs.ALL_SET}
+    fams = sets.get(args.families, None) or args.families.split(",")
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "families": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    for fam in fams:
+        manifest["families"][fam] = export_family(fam, out_dir)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {manifest_path} ({len(manifest['families'])} families)")
+
+
+if __name__ == "__main__":
+    main()

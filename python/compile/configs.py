@@ -1,0 +1,153 @@
+"""Model-family configurations for the polybasic speculative decoding stack.
+
+The paper evaluates Vicuna-7B / LLaMA2-Chat-7B / LLaMA3-8B / Qwen2-7B (plus
+13B/70B scaling tiers) on A800 GPUs.  We cannot host 7B-parameter models in
+this environment, so each family is a *seeded synthetic* GPT config at laptop
+scale (see DESIGN.md §3).  The quantities the paper's theory consumes — the
+per-forward costs T_i and the pairwise acceptance lengths L_i — remain fully
+real, measured quantities on these configs.
+
+Chain derivation (per family):
+  * target        — the full model (paper's M1).
+  * intermediate  — the first ``intermediate_layers`` blocks with all
+                    projection weights group-wise int4-quantized, run through
+                    the Pallas dequant-matmul kernel (paper's M2, a W4A16
+                    quantization of the target; layer truncation supplies the
+                    real FLOP reduction that quantized CUDA kernels supply on
+                    GPU).
+  * draft         — a 1-block early-exit head (paper's M3; §3.4 of the paper
+                    explicitly casts early-exit heads as polybasic drafters).
+  * decoy         — an *uncorrelated* model (independent seed) used for the
+                    Table-1 "non-compliant insertion" case.
+"""
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one transformer in a chain."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    seed: int
+    # Residual-branch gain schedule: branch l is scaled by
+    # ``residual_gain ** l`` (layer 0 gain 1.0).  Later blocks refine rather
+    # than rewrite the stream — the property that makes early-exit drafting
+    # (and hence layer-truncated chain members) work on real LLMs.
+    residual_gain: float = 0.55
+    # Group size for int4 weight quantization (only used by quantized roles).
+    quant_group: int = 32
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        return self.vocab * self.d_model + self.seq_len * self.d_model + self.n_layers * per_layer
+
+
+@dataclass(frozen=True)
+class FamilyConfig:
+    """A model family = target config + how its chain members are derived."""
+
+    family: str
+    target: ModelConfig
+    intermediate_layers: int
+    draft_layers: int = 1
+    # Decoy (non-compliant insertion experiment): an uncorrelated model.
+    decoy_layers: Optional[int] = None
+    decoy_seed: Optional[int] = None
+
+    def roles(self) -> dict:
+        """Role name -> (config, derivation) descriptors consumed by aot.py."""
+        t = self.target
+        out = {
+            "target": {"cfg": t, "derive": "full"},
+            "intermediate": {
+                "cfg": replace(t, name=f"{t.name}-int", n_layers=self.intermediate_layers),
+                "derive": "truncate_quantize",
+            },
+            "draft": {
+                "cfg": replace(t, name=f"{t.name}-draft", n_layers=self.draft_layers),
+                "derive": "truncate",
+            },
+        }
+        if self.decoy_layers is not None:
+            out["decoy"] = {
+                "cfg": replace(
+                    t,
+                    name=f"{t.name}-decoy",
+                    n_layers=self.decoy_layers,
+                    seed=self.decoy_seed if self.decoy_seed is not None else t.seed + 9001,
+                ),
+                "derive": "independent",
+            }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The family zoo.  Sequence length / vocab are deliberately small so a full
+# SpecBench sweep runs on CPU in minutes; relative T_i and all L_i are real.
+# ---------------------------------------------------------------------------
+
+S = 160  # max context (prompt + generation + pipeline headroom)
+V = 256  # synthetic vocabulary
+
+
+def _mk(name, n_layers, d_model, n_heads, d_ff, vocab, seq_len, seed, gain=0.55):
+    return ModelConfig(
+        name=name, n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+        d_ff=d_ff, vocab=vocab, seq_len=seq_len, seed=seed, residual_gain=gain,
+    )
+
+
+FAMILIES = {
+    # 7B-class sims (Table 2 / Figures 2-3)
+    "v7b": FamilyConfig(
+        family="v7b",
+        target=_mk("v7b", 10, 128, 4, 512, V, S, seed=17),
+        intermediate_layers=3,
+        decoy_layers=8,
+    ),
+    "l2-7b": FamilyConfig(
+        family="l2-7b",
+        target=_mk("l2-7b", 10, 128, 4, 512, V, S, seed=23, gain=0.53),
+        intermediate_layers=3,
+    ),
+    "l3-8b": FamilyConfig(
+        family="l3-8b",
+        target=_mk("l3-8b", 11, 128, 4, 512, V, S, seed=31, gain=0.54),
+        intermediate_layers=3,
+    ),
+    "q2-7b": FamilyConfig(
+        family="q2-7b",
+        target=_mk("q2-7b", 10, 96, 4, 384, V, S, seed=41, gain=0.54),
+        intermediate_layers=3,
+    ),
+    # Scaling tier (Table 3)
+    "v13b": FamilyConfig(
+        family="v13b",
+        target=_mk("v13b", 12, 144, 4, 576, V, S, seed=53, gain=0.58),
+        intermediate_layers=4,
+    ),
+    "l2-70b": FamilyConfig(
+        family="l2-70b",
+        target=_mk("l2-70b", 16, 160, 4, 640, V, S, seed=61, gain=0.60),
+        intermediate_layers=5,
+    ),
+}
+
+# Families built by the default `make artifacts` (the rest via ARTIFACT_SET=full)
+DEFAULT_SET = ["v7b"]
+BENCH_SET = ["v7b", "l2-7b", "l3-8b", "q2-7b"]
+SCALE_SET = ["v13b", "l2-70b"]
+ALL_SET = BENCH_SET + SCALE_SET

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: tiled causal flash-attention.
+
+Hardware adaptation (DESIGN.md §6): the paper's serving stack spends its GPU
+time in fused attention + GEMM CUDA kernels.  The TPU-shaped analogue tiles
+the (q, k) iteration space for VMEM with ``BlockSpec`` and keeps the running
+max / normalizer in registers/VMEM scratch, feeding the MXU with one
+``[block_q, d_head] x [d_head, block_k]`` contraction per step — the flash
+pattern expressed as an HBM->VMEM schedule instead of a threadblock schedule.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowers the kernel to plain HLO so the same
+artifact executes under the rust runtime (see /opt/xla-example/README.md).
+
+Layout: inputs are ``[BH, S, dh]`` (batch*heads flattened into the leading
+grid axis).  Grid is ``(BH, S // block_q)``; each program owns one q-block
+and loops over its causal prefix of k-blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Set considerably below S so the kernel is genuinely multi-block at our
+# sequence lengths; 32x32 f32 tiles also divide the 128x128 MXU cleanly when
+# re-targeted to real TPU (4 tiles / MXU pass).
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, scale):
+    """One (bh, q-block) program of causal flash attention."""
+    qi = pl.program_id(1)
+    q = q_ref[0]  # [block_q, dh]
+
+    acc0 = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    m0 = jnp.full((block_q, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+
+    row_ids = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.ds(kb * block_k, block_k), slice(None)))  # [bk, dh]
+        v = pl.load(v_ref, (0, pl.ds(kb * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        col_ids = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(row_ids >= col_ids, s, _NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    # Causal: q-block qi only attends to k-blocks 0..qi (block_q == block_k).
+    acc, _, l = jax.lax.fori_loop(0, qi + 1, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                    interpret=True):
+    """Causal multi-head attention over ``[BH, S, dh]`` tensors.
+
+    Returns ``softmax(q k^T / sqrt(dh), causal) v`` with the same shape/dtype
+    as ``q``.  ``block_q`` must equal ``block_k`` (causal block alignment) and
+    divide S.
+    """
+    bh, s, dh = q.shape
+    assert k.shape == (bh, s, dh) and v.shape == (bh, s, dh)
+    assert block_q == block_k, "causal masking assumes aligned q/k blocks"
+    if s % block_q != 0:
+        # Fall back to the largest divisor of S <= the requested block, so
+        # arbitrary context lengths tile cleanly.
+        block_q = block_k = next(b for b in range(min(block_q, s), 0, -1) if s % b == 0)
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_attn_kernel, block_q=block_q, block_k=block_k,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(s, dh, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Analytic VMEM footprint of one program (for DESIGN/EXPERIMENTS §Perf).
+
+    q-block + full k/v rows (this kernel streams k/v from the row block) +
+    accumulators; f32 everywhere.
+    """
+    f = 4
+    return f * (block_q * dh          # q block
+                + 2 * s * dh          # k, v rows resident for the program
+                + block_q * dh        # acc
+                + 2 * block_q         # m, l
+                + block_q * block_k)  # score tile

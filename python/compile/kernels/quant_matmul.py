@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: group-wise int4 dequant-matmul (W4A16-style).
+
+The paper's intermediate model M2 is a 4-bit (group-size 128, AffineQuant)
+quantization of the target; its GPU implementation fuses dequantization into
+the GEMM.  TPU-shaped version (DESIGN.md §6): tile the output columns with
+``BlockSpec`` so each program holds one ``[K, block_n]`` int4 (stored int8)
+weight panel plus its per-group scale vector in VMEM, dequantize group-by-
+group, and feed the MXU with ``[M, G] x [G, block_n]`` contractions — the
+quant-group axis doubles as the K-tiling axis so exactly one scale row is
+live per step.
+
+Weights are *symmetric* 4-bit: values in [-8, 7] stored as int8, one f32
+scale per (group, column).  ``interpret=True`` as for all kernels here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 64
+
+
+def _qmm_kernel(x_ref, q_ref, s_ref, o_ref, *, group, n_groups):
+    """One output-column panel: out[:, nb] = x @ dequant(q[:, nb])."""
+    x = x_ref[...]  # [M, K]
+    m = x.shape[0]
+    bn = q_ref.shape[1]
+
+    def body(g, acc):
+        xg = pl.load(x_ref, (slice(None), pl.ds(g * group, group)))       # [M, G]
+        qg = pl.load(q_ref, (pl.ds(g * group, group), slice(None)))       # [G, bn]
+        sg = pl.load(s_ref, (pl.ds(g, 1), slice(None)))                   # [1, bn]
+        w = qg.astype(jnp.float32) * sg                                   # dequant
+        return acc + jnp.dot(xg, w, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, n_groups,
+                            body, jnp.zeros((m, bn), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def quant_matmul(x, q, scales, *, group, block_n=DEFAULT_BLOCK_N, interpret=True):
+    """``x [M,K] @ dequant(q [K,N] int8, scales [K//group, N]) -> [M,N]``."""
+    m, k = x.shape
+    kq, n = q.shape
+    assert kq == k, f"inner dims {k} vs {kq}"
+    assert k % group == 0, f"K={k} not a multiple of group={group}"
+    n_groups = k // group
+    assert scales.shape == (n_groups, n), scales.shape
+    # Largest divisor of N that fits the requested panel width, so arbitrary
+    # head/FFN widths tile cleanly.
+    bn = next(b for b in range(min(block_n, n), 0, -1) if n % b == 0)
+
+    kernel = functools.partial(_qmm_kernel, group=group, n_groups=n_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, bn), lambda j: (0, j)),
+            pl.BlockSpec((n_groups, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, q, scales)
+
+
+def quantize_weight(w, *, group):
+    """Symmetric group-wise int4 quantization of ``w [K, N]``.
+
+    Returns ``(q int8 in [-8,7], scales f32 [K//group, N])`` such that
+    ``dequant = q * scales[group_of_row]`` approximates ``w``.
+    """
+    k, n = w.shape
+    if k % group != 0:
+        # Adapt to the largest divisor of K <= the requested group so any
+        # projection width quantizes cleanly.
+        group = next(g for g in range(min(group, k), 0, -1) if k % g == 0)
+    wg = w.reshape(k // group, group, n)
+    absmax = jnp.max(jnp.abs(wg), axis=1, keepdims=True)  # [K/G, 1, N]
+    scales = (absmax / 7.0 + 1e-12)[:, 0, :]              # [K/G, N]
+    q = jnp.clip(jnp.round(wg / scales[:, None, :]), -8, 7).astype(jnp.int8)
+    return q.reshape(k, n), scales.astype(jnp.float32), group
+
+
+def vmem_bytes(m, k, n_groups, group, block_n=DEFAULT_BLOCK_N):
+    """Analytic VMEM per program for §Perf: x panel + weight panel + scales."""
+    return (4 * m * k                 # x (f32)
+            + 1 * k * block_n         # q panel (int8)
+            + 4 * n_groups * block_n  # scales
+            + 4 * m * block_n)        # acc

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its oracle to float tolerance under
+pytest/hypothesis sweeps (python/tests/test_kernels_*.py).
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Causal softmax attention over ``[BH, S, dh]`` (numerically naive)."""
+    bh, s, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v).astype(q.dtype)
+
+
+def dequant_ref(q, scales, *, group):
+    """Expand group-wise int4 weights back to f32: ``[K,N]``."""
+    k, n = q.shape
+    s_full = jnp.repeat(scales, group, axis=0)  # [K, N]
+    return q.astype(jnp.float32) * s_full
+
+
+def quant_matmul_ref(x, q, scales, *, group):
+    """Oracle for quant_matmul: dense matmul against dequantized weights."""
+    return (x @ dequant_ref(q, scales, group=group)).astype(x.dtype)

@@ -1,0 +1,84 @@
+"""L2: GPT-style decoder-only transformer forward pass (JAX, functional).
+
+One forward = a *full-context scorer*: ``tokens [S] int32 -> logits [S, V]
+f32`` under causal masking.  Because attention is causal, ``logits[t]``
+depends only on ``tokens[0..t]`` — the rust coordinator pads the suffix with
+arbitrary ids and reads logits at whatever positions it needs (drafting reads
+one row, verification reads a K-row window).  This keeps every AOT artifact a
+single fixed-shape executable (see DESIGN.md §7 for the KV-cache discussion).
+
+The hot spots route through the L1 Pallas kernels:
+  * attention      -> kernels.attention.flash_attention
+  * quantized GEMM -> kernels.quant_matmul.quant_matmul   (intermediate role)
+Dense GEMMs stay as jnp.dot (XLA fuses them fine on every backend).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.quant_matmul import quant_matmul
+from .kernels import ref as kref
+
+
+def layer_norm(x, p, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def matmul(x, w, *, use_pallas=True):
+    """Dense or quantized projection, dispatching on the weight's type."""
+    if isinstance(w, dict):  # int4 group-quantized: {"q", "s", "group"}
+        if use_pallas:
+            return quant_matmul(x, w["q"], w["s"], group=w["group"])
+        return kref.quant_matmul_ref(x, w["q"], w["s"], group=w["group"])
+    return jnp.dot(x, w)
+
+
+def attention_block(x, layer, cfg, *, use_pallas=True):
+    s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = matmul(x, layer["wq"], use_pallas=use_pallas)
+    k = matmul(x, layer["wk"], use_pallas=use_pallas)
+    v = matmul(x, layer["wv"], use_pallas=use_pallas)
+    # [S, D] -> [H, S, dh]
+    q = q.reshape(s, h, dh).transpose(1, 0, 2)
+    k = k.reshape(s, h, dh).transpose(1, 0, 2)
+    v = v.reshape(s, h, dh).transpose(1, 0, 2)
+    if use_pallas:
+        o = flash_attention(q, k, v)
+    else:
+        o = kref.attention_ref(q, k, v)
+    o = o.transpose(1, 0, 2).reshape(s, d)
+    return matmul(o, layer["wo"], use_pallas=use_pallas)
+
+
+def mlp_block(x, layer, *, use_pallas=True):
+    h = matmul(x, layer["w1"], use_pallas=use_pallas)
+    h = jax.nn.gelu(h)
+    return matmul(h, layer["w2"], use_pallas=use_pallas)
+
+
+def forward(params, tokens, cfg, *, use_pallas=True):
+    """``tokens [S] int32 -> logits [S, V] f32`` (causal)."""
+    s = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s]
+    # Residual-gain schedule: block l contributes gain**l — later blocks
+    # refine rather than rewrite the stream, which is what makes early-exit
+    # chain members (draft/intermediate) track the target (DESIGN.md §3).
+    gain = 1.0
+    for layer in params["layers"]:
+        x = x + gain * attention_block(layer_norm(x, layer["ln1"]), layer, cfg,
+                                       use_pallas=use_pallas)
+        x = x + gain * mlp_block(layer_norm(x, layer["ln2"]), layer,
+                                 use_pallas=use_pallas)
+        gain *= cfg.residual_gain
+    x = layer_norm(x, params["lnf"])
+    return jnp.dot(x, params["tok_emb"].T)  # tied head: [S, V]
+
+
+def forward_prob(params, tokens, cfg, *, temperature=1.0, use_pallas=True):
+    """Softmax distribution per position (used by python-side diagnostics)."""
+    logits = forward(params, tokens, cfg, use_pallas=use_pallas)
+    return jax.nn.softmax(logits / temperature, axis=-1)

@@ -1,0 +1,101 @@
+"""Parameter construction + chain-member derivation (truncate / quantize).
+
+The chain members are *derived from the target's weights* so that their
+output distributions are genuinely correlated with the target's — the
+property that makes speculative acceptance lengths non-degenerate (see
+DESIGN.md §3):
+
+  * ``derive_draft``        — early-exit: first k blocks + shared final
+                              norm/head (paper §3.4).
+  * ``derive_intermediate`` — early-exit + group-wise int4 quantization of
+                              every projection (paper's W4A16 M2).
+  * ``init_params``         — fresh model (targets, and the Table-1 decoy).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.quant_matmul import quantize_weight
+
+
+def init_params(cfg, dtype=jnp.float32):
+    """Initialize a full model for ``cfg`` (deterministic in cfg.seed)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    k_emb, k_pos, key = jax.random.split(key, 3)
+    params = {
+        "tok_emb": 0.3 * jax.random.normal(k_emb, (v, d), dtype),
+        "pos_emb": 0.08 * jax.random.normal(k_pos, (s, d), dtype),
+        "lnf": _ln_params(d, dtype),
+        "layers": [],
+    }
+    proj = 1.0 / (d ** 0.5)
+    for _ in range(cfg.n_layers):
+        ks = jax.random.split(key, 7)
+        key = ks[0]
+        layer = {
+            "ln1": _ln_params(d, dtype),
+            "wq": proj * jax.random.normal(ks[1], (d, d), dtype),
+            "wk": proj * jax.random.normal(ks[2], (d, d), dtype),
+            "wv": proj * jax.random.normal(ks[3], (d, d), dtype),
+            "wo": proj * jax.random.normal(ks[4], (d, d), dtype),
+            "ln2": _ln_params(d, dtype),
+            "w1": (1.0 / (d ** 0.5)) * jax.random.normal(ks[5], (d, f), dtype),
+            "w2": (1.0 / (f ** 0.5)) * jax.random.normal(ks[6], (f, d), dtype),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def _ln_params(d, dtype):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+QUANTIZABLE = ("wq", "wk", "wv", "wo", "w1", "w2")
+
+
+def derive_draft(target_params, n_layers):
+    """Early-exit draft: first ``n_layers`` blocks, shared embeddings/head."""
+    assert n_layers <= len(target_params["layers"])
+    return {
+        "tok_emb": target_params["tok_emb"],
+        "pos_emb": target_params["pos_emb"],
+        "lnf": target_params["lnf"],
+        "layers": list(target_params["layers"][:n_layers]),
+    }
+
+
+def derive_intermediate(target_params, n_layers, group):
+    """Early-exit + int4 group-quantized projections (the paper's M2)."""
+    p = derive_draft(target_params, n_layers)
+    qlayers = []
+    for layer in p["layers"]:
+        ql = dict(layer)
+        for name in QUANTIZABLE:
+            q, s, g = quantize_weight(layer[name], group=group)
+            ql[name] = {"q": q, "s": s, "group": g}
+        qlayers.append(ql)
+    return {**p, "layers": qlayers}
+
+
+def build_role_params(family_cfg, role):
+    """Materialize parameters for one chain member of a family."""
+    spec = family_cfg.roles()[role]
+    cfg = spec["cfg"]
+    derive = spec["derive"]
+    if derive in ("full", "independent"):
+        return cfg, init_params(cfg)
+    target = init_params(family_cfg.target)
+    if derive == "truncate":
+        return cfg, derive_draft(target, cfg.n_layers)
+    if derive == "truncate_quantize":
+        return cfg, derive_intermediate(target, cfg.n_layers, cfg.quant_group)
+    raise ValueError(f"unknown derivation {derive!r}")
+
+
+def quant_rel_error(w, group):
+    """Relative Frobenius error of int4 round-trip (used by tests)."""
+    from .kernels.ref import dequant_ref
+    q, s, g = quantize_weight(w, group=group)
+    wd = dequant_ref(q, s, group=g)
+    return float(jnp.linalg.norm(wd - w) / (jnp.linalg.norm(w) + 1e-12))

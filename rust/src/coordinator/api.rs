@@ -1,0 +1,83 @@
+//! Public request/response types of the serving coordinator.
+
+use std::time::Duration;
+
+use crate::spec::types::{SamplingParams, Token, VerifyRule};
+use crate::workload::tasks::TaskKind;
+
+/// Which decoding engine serves the request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// Vanilla autoregressive decoding with the target model.
+    Autoregressive,
+    /// Two-model draft/verify (Leviathan-style; the EAGLE2-like baseline).
+    Dualistic { draft_k: usize },
+    /// The paper's polybasic chain (target / intermediate / draft).
+    Polybasic { draft_k: usize, mu: usize },
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Autoregressive => "vanilla",
+            Method::Dualistic { .. } => "dualistic",
+            Method::Polybasic { .. } => "polybasic",
+        }
+    }
+}
+
+impl Default for Method {
+    fn default() -> Self {
+        Method::Polybasic { draft_k: 6, mu: 8 }
+    }
+}
+
+/// A generation request as accepted by the server.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<Token>,
+    pub max_new: usize,
+    pub sampling: SamplingParams,
+    pub rule: VerifyRule,
+    pub method: Method,
+    /// Task tag (metrics aggregation + scheduling class).
+    pub task: Option<TaskKind>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<Token>, max_new: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new,
+            sampling: SamplingParams::default(),
+            rule: VerifyRule::Speculative,
+            method: Method::default(),
+            task: None,
+        }
+    }
+}
+
+/// Completed generation with serving measurements.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<Token>,
+    /// Time spent queued before a worker picked the request up.
+    pub queue_time: Duration,
+    /// Decode wall time.
+    pub service_time: Duration,
+    /// Mean acceptance length at the target (μ) for speculative methods.
+    pub mean_accept: f64,
+    /// Per-model forward passes, chain order.
+    pub forward_passes: Vec<u64>,
+    pub task: Option<TaskKind>,
+    pub method: Method,
+}
+
+impl Response {
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens.len() as f64 / self.service_time.as_secs_f64().max(1e-9)
+    }
+}

@@ -1,0 +1,221 @@
+//! Dynamic batcher: groups queued requests into dispatch batches under a
+//! size-or-deadline policy (vLLM-style), with priority classes.
+//!
+//! The paper's SpecBench protocol is batch-1 *decoding*; batching here
+//! operates at the request-dispatch level — workers pull batches and decode
+//! their members, so a multi-worker server drains bursts in parallel while
+//! a single worker degrades gracefully to FCFS.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::api::Request;
+
+/// Scheduling class, derived from the task tag: interactive tasks preempt
+/// long-form batch tasks in the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    Interactive,
+    Batch,
+}
+
+pub fn classify(req: &Request) -> Priority {
+    use crate::workload::tasks::TaskKind::*;
+    match req.task {
+        Some(MultiTurn) | Some(Qa) | Some(Math) => Priority::Interactive,
+        Some(Summarization) | Some(Rag) | Some(Translation) => Priority::Batch,
+        None => Priority::Interactive,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    /// Dispatch a partial batch once its oldest member waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(5) }
+    }
+}
+
+#[derive(Debug)]
+struct Queued {
+    req: Request,
+    enqueued: Instant,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    interactive: VecDeque<Queued>,
+    batch: VecDeque<Queued>,
+    closed: bool,
+}
+
+/// Thread-safe request queue with batching semantics.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// A dispatched batch: requests plus their queue-entry timestamps.
+pub type Batch = Vec<(Request, Instant)>;
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, state: Mutex::new(State::default()), cv: Condvar::new() }
+    }
+
+    pub fn push(&self, req: Request) {
+        let mut st = self.state.lock().unwrap();
+        let q = Queued { req, enqueued: Instant::now() };
+        match classify(&q.req) {
+            Priority::Interactive => st.interactive.push_back(q),
+            Priority::Batch => st.batch.push_back(q),
+        }
+        self.cv.notify_one();
+    }
+
+    pub fn len(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.interactive.len() + st.batch.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stop accepting work and wake all waiting workers.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking pull: returns `None` only when the queue is closed AND
+    /// drained. Interactive requests are always drained first.
+    pub fn pop_batch(&self) -> Option<Batch> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let total = st.interactive.len() + st.batch.len();
+            if total > 0 {
+                // Dispatch immediately when full, otherwise wait out the
+                // batching window for stragglers.
+                if total < self.policy.max_batch && !st.closed {
+                    let oldest = st
+                        .interactive
+                        .front()
+                        .iter()
+                        .chain(st.batch.front().iter())
+                        .map(|q| q.enqueued)
+                        .min()
+                        .unwrap();
+                    let waited = oldest.elapsed();
+                    if waited < self.policy.max_wait {
+                        let (next, _timeout) =
+                            self.cv.wait_timeout(st, self.policy.max_wait - waited).unwrap();
+                        st = next;
+                        continue;
+                    }
+                }
+                let mut out: Batch = Vec::with_capacity(self.policy.max_batch);
+                while out.len() < self.policy.max_batch {
+                    let q = if let Some(q) = st.interactive.pop_front() {
+                        q
+                    } else if let Some(q) = st.batch.pop_front() {
+                        q
+                    } else {
+                        break;
+                    };
+                    out.push((q.req, q.enqueued));
+                }
+                return Some(out);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::tasks::TaskKind;
+
+    fn req(id: u64, task: Option<TaskKind>) -> Request {
+        let mut r = Request::new(id, vec![1, 2], 4);
+        r.task = task;
+        r
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let b = DynamicBatcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
+        for i in 0..3 {
+            b.push(req(i, None));
+        }
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn interactive_preempts_batch() {
+        let b = DynamicBatcher::new(BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
+        b.push(req(1, Some(TaskKind::Summarization)));
+        b.push(req(2, Some(TaskKind::Math)));
+        let first = b.pop_batch().unwrap();
+        assert_eq!(first[0].0.id, 2, "interactive request should dispatch first");
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = DynamicBatcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::ZERO });
+        b.push(req(1, None));
+        b.close();
+        assert!(b.pop_batch().is_some());
+        assert!(b.pop_batch().is_none());
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        use std::sync::Arc;
+        let b = Arc::new(DynamicBatcher::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        }));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.pop_batch().map(|v| v[0].0.id));
+        std::thread::sleep(Duration::from_millis(20));
+        b.push(req(7, None));
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn waits_for_stragglers_within_window() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(30),
+        });
+        b.push(req(1, None));
+        let t0 = Instant::now();
+        let handle = {
+            use std::sync::Arc;
+            let b = Arc::new(b);
+            let b2 = b.clone();
+            let h = std::thread::spawn(move || b2.pop_batch().map(|v| v.len()));
+            std::thread::sleep(Duration::from_millis(5));
+            b.push(req(2, None));
+            h
+        };
+        assert_eq!(handle.join().unwrap(), Some(2), "straggler should join the batch");
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+}

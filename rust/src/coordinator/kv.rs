@@ -1,0 +1,201 @@
+//! Paged KV-cache manager.
+//!
+//! The paper (§4.6) identifies multi-model KV footprint as the binding
+//! resource of polybasic serving: every chain member keeps its own cache,
+//! so capacity scales with the chain.  Our AOT substrate recomputes
+//! attention per forward (DESIGN.md §7), so the *bytes* here are an
+//! accounting model rather than live buffers — but the allocator, admission
+//! control and utilization accounting are the real thing and gate the
+//! router exactly as a vLLM-style block manager would.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Block-granular allocator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct KvConfig {
+    /// Tokens per block (vLLM-style paging granularity).
+    pub block_size: usize,
+    /// Total number of blocks in the (simulated) KV pool.
+    pub total_blocks: usize,
+    /// Bytes of KV per token *per chain member* (2 x layers x d_model x 4,
+    /// summed over the chain), used for byte-level reporting.
+    pub bytes_per_token: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        Self { block_size: 16, total_blocks: 256, bytes_per_token: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SeqAlloc {
+    blocks: usize,
+    tokens: usize,
+}
+
+/// Tracks block allocation per active sequence.
+#[derive(Debug)]
+pub struct KvManager {
+    cfg: KvConfig,
+    free_blocks: usize,
+    seqs: BTreeMap<u64, SeqAlloc>,
+    /// High-water mark of allocated blocks (reporting).
+    peak_blocks: usize,
+}
+
+impl KvManager {
+    pub fn new(cfg: KvConfig) -> Self {
+        Self { free_blocks: cfg.total_blocks, cfg, seqs: BTreeMap::new(), peak_blocks: 0 }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.block_size)
+    }
+
+    /// Can a sequence of `tokens` total length be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free_blocks
+    }
+
+    /// Reserve blocks for a new sequence (prompt + planned generation).
+    pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<()> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already admitted");
+        }
+        let need = self.blocks_for(tokens);
+        if need > self.free_blocks {
+            bail!(
+                "KV pool exhausted: need {need} blocks, {} free of {}",
+                self.free_blocks,
+                self.cfg.total_blocks
+            );
+        }
+        self.free_blocks -= need;
+        self.seqs.insert(seq, SeqAlloc { blocks: need, tokens });
+        self.peak_blocks = self.peak_blocks.max(self.allocated_blocks());
+        Ok(())
+    }
+
+    /// Grow an existing sequence to `tokens` total length.
+    pub fn grow(&mut self, seq: u64, tokens: usize) -> Result<()> {
+        let need = self.blocks_for(tokens);
+        let alloc = match self.seqs.get_mut(&seq) {
+            Some(a) => a,
+            None => bail!("sequence {seq} not admitted"),
+        };
+        if tokens < alloc.tokens {
+            bail!("sequence {seq} cannot shrink via grow()");
+        }
+        let extra = need.saturating_sub(alloc.blocks);
+        if extra > self.free_blocks {
+            bail!("KV pool exhausted growing seq {seq}");
+        }
+        self.free_blocks -= extra;
+        alloc.blocks += extra;
+        alloc.tokens = tokens;
+        self.peak_blocks = self.peak_blocks.max(self.allocated_blocks());
+        Ok(())
+    }
+
+    /// Release a finished sequence.
+    pub fn release(&mut self, seq: u64) -> Result<()> {
+        match self.seqs.remove(&seq) {
+            Some(a) => {
+                self.free_blocks += a.blocks;
+                Ok(())
+            }
+            None => bail!("sequence {seq} not admitted"),
+        }
+    }
+
+    pub fn allocated_blocks(&self) -> usize {
+        self.cfg.total_blocks - self.free_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn peak_blocks(&self) -> usize {
+        self.peak_blocks
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.allocated_blocks() as f64 / self.cfg.total_blocks as f64
+    }
+
+    /// Allocated KV bytes under the configured per-token cost.
+    pub fn allocated_bytes(&self) -> usize {
+        self.seqs.values().map(|a| a.tokens * self.cfg.bytes_per_token).sum()
+    }
+}
+
+/// Bytes of KV per token for one chain: `sum_i 2 * layers_i * d_model_i * 4`.
+pub fn chain_bytes_per_token(metas: &[crate::runtime::manifest::ModelMeta]) -> usize {
+    metas.iter().map(|m| 2 * m.n_layers * m.d_model * 4).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(blocks: usize) -> KvManager {
+        KvManager::new(KvConfig { block_size: 4, total_blocks: blocks, bytes_per_token: 8 })
+    }
+
+    #[test]
+    fn admit_grow_release_cycle() {
+        let mut m = mgr(10);
+        m.admit(1, 7).unwrap(); // 2 blocks
+        assert_eq!(m.allocated_blocks(), 2);
+        m.grow(1, 13).unwrap(); // 4 blocks total
+        assert_eq!(m.allocated_blocks(), 4);
+        assert_eq!(m.allocated_bytes(), 13 * 8);
+        m.release(1).unwrap();
+        assert_eq!(m.allocated_blocks(), 0);
+        assert_eq!(m.peak_blocks(), 4);
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let mut m = mgr(3);
+        m.admit(1, 12).unwrap(); // all 3 blocks
+        assert!(!m.can_admit(1));
+        assert!(m.admit(2, 1).is_err());
+        m.release(1).unwrap();
+        assert!(m.can_admit(12));
+    }
+
+    #[test]
+    fn grow_rejects_beyond_capacity() {
+        let mut m = mgr(3);
+        m.admit(1, 8).unwrap(); // 2 blocks
+        assert!(m.grow(1, 17).is_err()); // needs 5
+        // Unchanged after failed grow.
+        assert_eq!(m.allocated_blocks(), 2);
+        m.grow(1, 12).unwrap();
+    }
+
+    #[test]
+    fn double_admit_and_unknown_release_fail() {
+        let mut m = mgr(4);
+        m.admit(1, 4).unwrap();
+        assert!(m.admit(1, 4).is_err());
+        assert!(m.release(9).is_err());
+        assert!(m.grow(9, 4).is_err());
+    }
+
+    #[test]
+    fn shrinking_grow_fails() {
+        let mut m = mgr(4);
+        m.admit(1, 8).unwrap();
+        assert!(m.grow(1, 4).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Serving metrics: log-bucketed latency histograms, throughput counters,
+//! JSON snapshots (via the in-tree JSON writer).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::runtime::json::Json;
+
+/// Log2-bucketed duration histogram from 1us to ~1hour.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i, 2^{i+1}) microseconds.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const NBUCKETS: usize = 32;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = (d.as_micros() as u64).max(1);
+        let bucket = (63 - us.leading_zeros() as usize).min(NBUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0..1).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Whole-server metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub queue_latency: LatencyHistogram,
+    pub service_latency: LatencyHistogram,
+    pub e2e_latency: LatencyHistogram,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub target_forwards: AtomicU64,
+    /// Mean-acceptance accumulator (sum of per-request μ x 1000, fixed point).
+    accept_milli_sum: AtomicU64,
+    accept_count: AtomicU64,
+    /// Per-task completion counters.
+    per_task: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Metrics {
+    pub fn record_completion(
+        &self,
+        queue: Duration,
+        service: Duration,
+        tokens: usize,
+        target_forwards: u64,
+        mean_accept: f64,
+        task: Option<&str>,
+    ) {
+        self.queue_latency.record(queue);
+        self.service_latency.record(service);
+        self.e2e_latency.record(queue + service);
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.target_forwards.fetch_add(target_forwards, Ordering::Relaxed);
+        self.accept_milli_sum
+            .fetch_add((mean_accept * 1000.0) as u64, Ordering::Relaxed);
+        self.accept_count.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = task {
+            *self.per_task.lock().unwrap().entry(t.to_string()).or_insert(0) += 1;
+        }
+    }
+
+    pub fn mean_accept(&self) -> f64 {
+        let n = self.accept_count.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.accept_milli_sum.load(Ordering::Relaxed) as f64 / 1000.0 / n as f64
+        }
+    }
+
+    /// JSON snapshot for dumps / the `serve` example's final report.
+    pub fn snapshot(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            obj.insert(k.to_string(), v);
+        };
+        put("requests_completed",
+            Json::Num(self.requests_completed.load(Ordering::Relaxed) as f64));
+        put("requests_rejected",
+            Json::Num(self.requests_rejected.load(Ordering::Relaxed) as f64));
+        put("tokens_generated",
+            Json::Num(self.tokens_generated.load(Ordering::Relaxed) as f64));
+        put("target_forwards",
+            Json::Num(self.target_forwards.load(Ordering::Relaxed) as f64));
+        put("mean_accept", Json::Num(self.mean_accept()));
+        for (name, h) in [
+            ("queue", &self.queue_latency),
+            ("service", &self.service_latency),
+            ("e2e", &self.e2e_latency),
+        ] {
+            let mut lat = BTreeMap::new();
+            lat.insert("mean_ms".into(), Json::Num(h.mean().as_secs_f64() * 1e3));
+            lat.insert("p50_ms".into(), Json::Num(h.quantile(0.5).as_secs_f64() * 1e3));
+            lat.insert("p95_ms".into(), Json::Num(h.quantile(0.95).as_secs_f64() * 1e3));
+            lat.insert("p99_ms".into(), Json::Num(h.quantile(0.99).as_secs_f64() * 1e3));
+            lat.insert("max_ms".into(), Json::Num(h.max().as_secs_f64() * 1e3));
+            obj.insert(format!("{name}_latency"), Json::Obj(lat));
+        }
+        let per_task = self.per_task.lock().unwrap();
+        obj.insert(
+            "per_task".into(),
+            Json::Obj(per_task.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::default();
+        for ms in [1u64, 2, 4, 8, 16, 32, 64, 128] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(1.0).max(h.max()));
+        assert!(h.mean() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn metrics_snapshot_is_valid_json() {
+        let m = Metrics::default();
+        m.record_completion(
+            Duration::from_millis(2),
+            Duration::from_millis(40),
+            32,
+            5,
+            6.4,
+            Some("Math"),
+        );
+        let snap = m.snapshot().to_string();
+        let parsed = Json::parse(&snap).unwrap();
+        assert_eq!(parsed.req("requests_completed").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.req("tokens_generated").unwrap().as_usize(), Some(32));
+        assert!(parsed.req("per_task").unwrap().get("Math").is_some());
+        assert!((parsed.req("mean_accept").unwrap().as_f64().unwrap() - 6.4).abs() < 1e-9);
+    }
+}

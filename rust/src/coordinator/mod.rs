@@ -1,0 +1,14 @@
+//! L3 serving coordinator: router -> dynamic batcher -> worker scheduler,
+//! with paged KV accounting and serving metrics. The decode algorithms live
+//! in [`crate::spec`]; this layer turns them into a server.
+
+pub mod api;
+pub mod batcher;
+pub mod kv;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use api::{Method, Request, Response};
+pub use server::{Server, ServerConfig};

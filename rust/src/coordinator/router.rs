@@ -1,0 +1,181 @@
+//! Request router: validation + admission control in front of the queue.
+//!
+//! Checks that a request fits the chain's context budget (prompt + output +
+//! speculative pipeline headroom) and that the KV pool can host it, then
+//! routes it to the family's queue. Multi-family deployments route by the
+//! request's family tag.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::api::{Method, Request};
+use super::batcher::DynamicBatcher;
+use super::kv::KvManager;
+use crate::spec::polybasic::PolyConfig;
+
+/// Why a request was refused at the door.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    ContextOverflow { need: usize, cap: usize },
+    KvExhausted,
+    UnknownFamily(String),
+    EmptyPrompt,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::ContextOverflow { need, cap } => {
+                write!(f, "context overflow: need {need} tokens, window {cap}")
+            }
+            RejectReason::KvExhausted => write!(f, "KV pool exhausted"),
+            RejectReason::UnknownFamily(s) => write!(f, "unknown family {s:?}"),
+            RejectReason::EmptyPrompt => write!(f, "empty prompt"),
+        }
+    }
+}
+
+/// Pipeline headroom a request needs beyond prompt + output.
+pub fn pipeline_headroom(method: &Method, n_models: usize) -> usize {
+    match method {
+        Method::Autoregressive => 0,
+        Method::Dualistic { draft_k } => draft_k + 1,
+        Method::Polybasic { draft_k, mu } => {
+            let mut cfg = PolyConfig::for_chain(n_models.max(2), *draft_k, *mu, 1);
+            cfg.draft_k = *draft_k;
+            cfg.headroom()
+        }
+    }
+}
+
+/// One routed destination: a family's queue + its capacity limits.
+pub struct FamilyLane {
+    pub batcher: Arc<DynamicBatcher>,
+    pub kv: Arc<Mutex<KvManager>>,
+    pub seq_len: usize,
+    pub n_models: usize,
+}
+
+/// Routes requests to family lanes with validation + admission.
+pub struct Router {
+    lanes: BTreeMap<String, FamilyLane>,
+    default_family: String,
+}
+
+impl Router {
+    pub fn new(default_family: impl Into<String>) -> Self {
+        Self { lanes: BTreeMap::new(), default_family: default_family.into() }
+    }
+
+    pub fn add_lane(&mut self, family: impl Into<String>, lane: FamilyLane) {
+        self.lanes.insert(family.into(), lane);
+    }
+
+    pub fn lane(&self, family: &str) -> Option<&FamilyLane> {
+        self.lanes.get(family)
+    }
+
+    /// Validate + admit + enqueue. On success the sequence is registered
+    /// with the lane's KV manager under `req.id`.
+    pub fn route(&self, family: Option<&str>, req: Request) -> Result<(), RejectReason> {
+        let fam = family.unwrap_or(&self.default_family);
+        let lane = self
+            .lanes
+            .get(fam)
+            .ok_or_else(|| RejectReason::UnknownFamily(fam.to_string()))?;
+        if req.prompt.is_empty() {
+            return Err(RejectReason::EmptyPrompt);
+        }
+        let need =
+            req.prompt.len() + req.max_new + pipeline_headroom(&req.method, lane.n_models);
+        if need > lane.seq_len {
+            return Err(RejectReason::ContextOverflow { need, cap: lane.seq_len });
+        }
+        {
+            let mut kv = lane.kv.lock().unwrap();
+            kv.admit(req.id, need).map_err(|_| RejectReason::KvExhausted)?;
+        }
+        lane.batcher.push(req);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::kv::KvConfig;
+
+    fn lane(seq_len: usize, blocks: usize) -> FamilyLane {
+        FamilyLane {
+            batcher: Arc::new(DynamicBatcher::new(BatchPolicy {
+                max_batch: 4,
+                max_wait: std::time::Duration::ZERO,
+            })),
+            kv: Arc::new(Mutex::new(KvManager::new(KvConfig {
+                block_size: 16,
+                total_blocks: blocks,
+                bytes_per_token: 4,
+            }))),
+            seq_len,
+            n_models: 3,
+        }
+    }
+
+    fn router(seq_len: usize, blocks: usize) -> Router {
+        let mut r = Router::new("fam");
+        r.add_lane("fam", lane(seq_len, blocks));
+        r
+    }
+
+    #[test]
+    fn routes_valid_request() {
+        let r = router(144, 64);
+        let req = Request::new(1, vec![1; 30], 40);
+        r.route(None, req).unwrap();
+        assert_eq!(r.lane("fam").unwrap().batcher.len(), 1);
+        assert_eq!(r.lane("fam").unwrap().kv.lock().unwrap().active_seqs(), 1);
+    }
+
+    #[test]
+    fn rejects_context_overflow() {
+        let r = router(64, 64);
+        let req = Request::new(1, vec![1; 40], 40);
+        match r.route(None, req) {
+            Err(RejectReason::ContextOverflow { need, cap }) => {
+                assert!(need > cap);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Nothing admitted on rejection.
+        assert_eq!(r.lane("fam").unwrap().kv.lock().unwrap().active_seqs(), 0);
+    }
+
+    #[test]
+    fn rejects_when_kv_full() {
+        let r = router(144, 4); // 4 blocks x 16 = 64 tokens of KV
+        r.route(None, Request::new(1, vec![1; 20], 10)).unwrap();
+        let res = r.route(None, Request::new(2, vec![1; 20], 10));
+        assert_eq!(res, Err(RejectReason::KvExhausted));
+    }
+
+    #[test]
+    fn rejects_unknown_family_and_empty_prompt() {
+        let r = router(144, 64);
+        assert!(matches!(
+            r.route(Some("nope"), Request::new(1, vec![1], 4)),
+            Err(RejectReason::UnknownFamily(_))
+        ));
+        assert_eq!(r.route(None, Request::new(2, vec![], 4)), Err(RejectReason::EmptyPrompt));
+    }
+
+    #[test]
+    fn headroom_scales_with_method() {
+        let ar = pipeline_headroom(&Method::Autoregressive, 3);
+        let dual = pipeline_headroom(&Method::Dualistic { draft_k: 4 }, 3);
+        let poly = pipeline_headroom(&Method::Polybasic { draft_k: 6, mu: 8 }, 3);
+        assert_eq!(ar, 0);
+        assert!(dual > 0);
+        assert!(poly > dual);
+    }
+}

@@ -1,0 +1,229 @@
+//! The serving loop: router -> batcher -> worker threads -> responses.
+//!
+//! Each worker thread owns its own [`EngineHost`] (PJRT objects are
+//! thread-bound), pulls batches from the shared queue, decodes them with the
+//! configured chain, and delivers [`Response`]s through per-request
+//! channels. No Python anywhere near this path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::EngineHost;
+use crate::workload::tasks::TaskKind;
+
+use super::api::{Method, Request, Response};
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::kv::{chain_bytes_per_token, KvConfig, KvManager};
+use super::metrics::Metrics;
+use super::router::{FamilyLane, RejectReason, Router};
+use super::scheduler;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub family: String,
+    /// Chain roles, target first.
+    pub roles: Vec<String>,
+    pub workers: usize,
+    pub batch: BatchPolicy,
+    /// KV pool size in blocks of 16 tokens.
+    pub kv_blocks: usize,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>, family: &str) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            family: family.to_string(),
+            roles: vec!["target".into(), "intermediate".into(), "draft".into()],
+            workers: 1,
+            batch: BatchPolicy::default(),
+            kv_blocks: 512,
+        }
+    }
+}
+
+/// A running server instance.
+pub struct Server {
+    router: Router,
+    batcher: Arc<DynamicBatcher>,
+    metrics: Arc<Metrics>,
+    kv: Arc<Mutex<KvManager>>,
+    replies: Arc<Mutex<HashMap<u64, mpsc::Sender<Response>>>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    seq_len: usize,
+}
+
+impl Server {
+    /// Start the server: load engines on every worker and begin serving.
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        let batcher = Arc::new(DynamicBatcher::new(cfg.batch));
+        let metrics = Arc::new(Metrics::default());
+        let replies: Arc<Mutex<HashMap<u64, mpsc::Sender<Response>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+
+        // Probe the manifest once for chain geometry.
+        let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+        let fam = manifest.family(&cfg.family)?;
+        let metas: Vec<_> = cfg
+            .roles
+            .iter()
+            .map(|r| fam.role(r).map(|s| s.meta.clone()))
+            .collect::<Result<_>>()?;
+        let seq_len = metas.iter().map(|m| m.seq_len).min().context("empty chain")?;
+        let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
+            block_size: 16,
+            total_blocks: cfg.kv_blocks,
+            bytes_per_token: chain_bytes_per_token(&metas),
+        })));
+
+        let mut router = Router::new(cfg.family.clone());
+        router.add_lane(
+            cfg.family.clone(),
+            FamilyLane {
+                batcher: batcher.clone(),
+                kv: kv.clone(),
+                seq_len,
+                n_models: cfg.roles.len(),
+            },
+        );
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let roles: Vec<String> = cfg.roles.clone();
+        for w in 0..cfg.workers {
+            let batcher = batcher.clone();
+            let metrics = metrics.clone();
+            let kv = kv.clone();
+            let replies = replies.clone();
+            let artifacts = cfg.artifacts_dir.clone();
+            let family = cfg.family.clone();
+            let roles = roles.clone();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || {
+                    let role_refs: Vec<&str> = roles.iter().map(|s| s.as_str()).collect();
+                    let host = match EngineHost::load(artifacts, &family, &role_refs) {
+                        Ok(h) => {
+                            let _ = ready_tx.send(Ok(()));
+                            h
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    let chain = host.chain();
+                    while let Some(batch) = batcher.pop_batch() {
+                        let results = scheduler::run_batch(&chain, batch, &kv, &metrics);
+                        for result in results {
+                            if let Ok(resp) = result {
+                                let tx = replies.lock().unwrap().remove(&resp.id);
+                                if let Some(tx) = tx {
+                                    let _ = tx.send(resp);
+                                }
+                            }
+                        }
+                    }
+                })
+                .context("spawning worker")?;
+            ready_rx
+                .recv()
+                .context("worker died during startup")?
+                .with_context(|| format!("worker {w} failed to load engines"))?;
+            workers.push(handle);
+        }
+
+        Ok(Self {
+            router,
+            batcher,
+            metrics,
+            kv,
+            replies,
+            workers,
+            next_id: AtomicU64::new(1),
+            seq_len,
+        })
+    }
+
+    /// Submit a generation; returns a receiver that yields the response.
+    pub fn submit(
+        &self,
+        prompt: Vec<crate::spec::types::Token>,
+        max_new: usize,
+        method: Method,
+        task: Option<TaskKind>,
+    ) -> Result<mpsc::Receiver<Response>, RejectReason> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = Request::new(id, prompt, max_new);
+        req.method = method;
+        req.task = task;
+        if let Some(t) = task {
+            req.sampling.temperature = t.temperature();
+            req.sampling.seed = id;
+        }
+        let (tx, rx) = mpsc::channel();
+        self.replies.lock().unwrap().insert(id, tx);
+        match self.router.route(None, req) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                self.replies.lock().unwrap().remove(&id);
+                self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn kv_utilization(&self) -> f64 {
+        self.kv.lock().unwrap().utilization()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.len()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Drain the queue and stop all workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.clone()
+    }
+
+    /// Wait until the queue is empty and all in-flight work finished (poll).
+    pub fn quiesce(&self, timeout: Duration) -> bool {
+        let start = std::time::Instant::now();
+        while start.elapsed() < timeout {
+            if self.batcher.is_empty() && self.replies.lock().unwrap().is_empty() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Shared benchmark harness: runs (family x task x method) cells and prints
+//! paper-style tables. Used by `benches/*` (one per paper table/figure) and
+//! by the `polyspec bench` CLI subcommand.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::EngineHost;
+use crate::spec::stats::Welford;
+use crate::spec::types::{LanguageModel, SamplingParams, VerifyRule};
+use crate::spec::{autoregressive, dualistic, polybasic, PolyConfig};
+use crate::workload::tasks::Query;
+
+/// Decoding method under benchmark.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BenchMethod {
+    Vanilla,
+    /// Dualistic with the early-exit drafter (the EAGLE2-like baseline).
+    Eagle { draft_k: usize },
+    /// The paper's three-model system.
+    Polybasic { draft_k: usize, mu: usize },
+}
+
+impl BenchMethod {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BenchMethod::Vanilla => "vanilla",
+            BenchMethod::Eagle { .. } => "EAGLE2*",
+            BenchMethod::Polybasic { .. } => "Ours",
+        }
+    }
+}
+
+/// Defaults chosen by the perf pass (EXPERIMENTS.md §Perf).
+pub const DEFAULT_POLY: BenchMethod = BenchMethod::Polybasic { draft_k: 6, mu: 8 };
+pub const DEFAULT_EAGLE: BenchMethod = BenchMethod::Eagle { draft_k: 4 };
+
+/// One benchmark cell result.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    pub wall_s: f64,
+    pub tokens: u64,
+    pub target_forwards: u64,
+    pub accept: Welford,
+    /// Per-query acceptance-length samples (fig4 needs the raw values).
+    pub accept_samples: Vec<u32>,
+}
+
+impl Cell {
+    pub fn mu(&self) -> f64 {
+        self.accept.mean()
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.wall_s.max(1e-12)
+    }
+}
+
+/// Run one suite of queries under a method against a chain (target first).
+pub fn run_cell(
+    chain: &[Arc<dyn LanguageModel>],
+    queries: &[Query],
+    method: BenchMethod,
+    rule: VerifyRule,
+) -> Result<Cell> {
+    let mut cell = Cell::default();
+    for (i, q) in queries.iter().enumerate() {
+        let sampling = SamplingParams {
+            temperature: if rule == VerifyRule::Greedy { 0.0 } else { q.temperature },
+            seed: 1000 + i as u64,
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let out = match method {
+            BenchMethod::Vanilla => {
+                autoregressive::generate(chain[0].as_ref(), &q.prompt, q.max_new, &sampling)?
+            }
+            BenchMethod::Eagle { draft_k } => {
+                let draft = chain.last().unwrap();
+                dualistic::generate(
+                    chain[0].as_ref(),
+                    draft.as_ref(),
+                    &q.prompt,
+                    &dualistic::DualisticConfig { draft_k, rule, sampling, max_new: q.max_new },
+                )?
+            }
+            BenchMethod::Polybasic { draft_k, mu } => {
+                let mut cfg = PolyConfig::for_chain(chain.len(), draft_k, mu, q.max_new);
+                cfg.rule = rule;
+                cfg.sampling = sampling;
+                polybasic::generate(chain, &q.prompt, &cfg)?
+            }
+        };
+        cell.wall_s += start.elapsed().as_secs_f64();
+        cell.tokens += out.tokens.len() as u64;
+        cell.target_forwards += out.forward_passes[0];
+        for &a in &out.accept_lengths {
+            cell.accept.push(a as f64);
+            cell.accept_samples.push(a);
+        }
+    }
+    Ok(cell)
+}
+
+/// Load the standard chain of a family (target / intermediate / draft).
+pub fn load_chain(artifacts: &str, family: &str) -> Result<EngineHost> {
+    EngineHost::load(artifacts, family, &["target", "intermediate", "draft"])
+}
+
+/// Environment-tunable suite sizing (POLYSPEC_QPT / POLYSPEC_QUICK).
+pub fn queries_per_task() -> usize {
+    if let Ok(v) = std::env::var("POLYSPEC_QPT") {
+        return v.parse().unwrap_or(2);
+    }
+    if std::env::var("POLYSPEC_QUICK").is_ok() {
+        1
+    } else {
+        2
+    }
+}
+
+pub fn artifacts_dir() -> String {
+    std::env::var("POLYSPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Families to bench (env POLYSPEC_FAMILIES=comma list), filtered to those
+/// present in the manifest.
+pub fn bench_families(default: &[&str]) -> Vec<String> {
+    let requested: Vec<String> = std::env::var("POLYSPEC_FAMILIES")
+        .map(|v| v.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|_| default.iter().map(|s| s.to_string()).collect());
+    match crate::runtime::Manifest::load(artifacts_dir()) {
+        Ok(m) => requested
+            .into_iter()
+            .filter(|f| {
+                let ok = m.families.contains_key(f);
+                if !ok {
+                    eprintln!("[bench] skipping {f}: not in manifest (make artifacts ARTIFACT_SET=all)");
+                }
+                ok
+            })
+            .collect(),
+        Err(e) => {
+            eprintln!("[bench] cannot load manifest: {e}");
+            vec![]
+        }
+    }
+}
+
+/// Pretty horizontal rule for table output.
+pub fn hr(width: usize) -> String {
+    "-".repeat(width)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::mock::mock_chain;
+    use crate::workload::tasks::{make_query, TaskKind};
+
+    #[test]
+    fn cells_run_all_methods_on_mocks() {
+        let chain = mock_chain(512, 32, 3);
+        let queries: Vec<Query> =
+            (0..2).map(|i| make_query(TaskKind::Qa, i, 32)).collect();
+        for m in [BenchMethod::Vanilla, DEFAULT_EAGLE, DEFAULT_POLY] {
+            let cell = run_cell(&chain, &queries, m, VerifyRule::Speculative).unwrap();
+            assert!(cell.tokens > 0, "{m:?}");
+            assert!(cell.wall_s > 0.0);
+            if m != BenchMethod::Vanilla {
+                assert!(cell.mu() >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_beats_vanilla_in_target_forwards() {
+        let chain = mock_chain(512, 32, 3);
+        let queries: Vec<Query> =
+            (0..2).map(|i| make_query(TaskKind::Math, i, 32)).collect();
+        let van = run_cell(&chain, &queries, BenchMethod::Vanilla, VerifyRule::Speculative)
+            .unwrap();
+        let poly = run_cell(&chain, &queries, DEFAULT_POLY, VerifyRule::Speculative).unwrap();
+        assert!(poly.target_forwards < van.target_forwards);
+    }
+}

@@ -1,0 +1,13 @@
+//! # polyspec — Polybasic Speculative Decoding
+//!
+//! A three-layer reproduction of *"Polybasic Speculative Decoding Through a
+//! Theoretical Perspective"* (ICML 2025): a rust serving coordinator
+//! ([`coordinator`]) driving AOT-compiled JAX/Pallas models ([`runtime`])
+//! with the paper's multi-model speculative decoding algorithms and theory
+//! ([`spec`]), evaluated on a SpecBench-style workload suite ([`workload`]).
+
+pub mod coordinator;
+pub mod harness;
+pub mod runtime;
+pub mod spec;
+pub mod workload;

@@ -1,0 +1,245 @@
+//! polyspec CLI — leader entrypoint for the polybasic serving stack.
+//!
+//!   polyspec generate --prompt "..." [--method poly|dual|vanilla]
+//!   polyspec serve    [--rate R --requests N --workers W]
+//!   polyspec plan     — theory-driven chain planning (Thm 3.2)
+//!   polyspec validate — Lemma 3.1 predicted-vs-measured check
+//!   polyspec info     — list artifact families/roles
+//!
+//! (Hand-rolled arg parsing: the offline crate set has no clap.)
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use polyspec::coordinator::{Method, Server, ServerConfig};
+use polyspec::runtime::{EngineHost, Manifest};
+use polyspec::spec::theory::lemma31_time;
+use polyspec::spec::types::{LanguageModel, SamplingParams, VerifyRule};
+use polyspec::spec::{autoregressive, dualistic, polybasic, PolyConfig};
+use polyspec::workload::tokenizer;
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            }
+            i += 1;
+        }
+        Self { flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_n<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s {
+        "poly" | "polybasic" => Method::Polybasic { draft_k: 6, mu: 8 },
+        "dual" | "dualistic" => Method::Dualistic { draft_k: 4 },
+        "vanilla" | "ar" => Method::Autoregressive,
+        other => bail!("unknown method {other:?} (poly|dual|vanilla)"),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let artifacts = args.get("artifacts", "artifacts");
+    let family = args.get("family", "v7b");
+
+    match cmd {
+        "generate" => cmd_generate(&args, &artifacts, &family),
+        "serve" => cmd_serve(&args, &artifacts, &family),
+        "plan" => cmd_plan(&artifacts, &family),
+        "validate" => cmd_validate(&args, &artifacts, &family),
+        "info" => cmd_info(&artifacts),
+        _ => {
+            println!(
+                "polyspec — polybasic speculative decoding (ICML 2025 reproduction)\n\n\
+                 usage: polyspec <generate|serve|plan|validate|info> [--flags]\n\
+                 common flags: --artifacts DIR --family v7b\n\
+                 generate: --prompt TEXT --max-new N --method poly|dual|vanilla --temp T\n\
+                 serve:    --rate R --requests N --workers W --method M\n\
+                 validate: --tokens N"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_generate(args: &Args, artifacts: &str, family: &str) -> Result<()> {
+    let host = EngineHost::load(artifacts, family, &["target", "intermediate", "draft"])?;
+    let chain = host.chain();
+    let vocab = chain[0].vocab();
+    let prompt_text = args.get("prompt", "Q: explain speculative decoding A:");
+    let prompt = tokenizer::encode(&prompt_text, vocab);
+    let max_new: usize = args.get_n("max-new", 48);
+    let method = parse_method(&args.get("method", "poly"))?;
+    let sampling = SamplingParams {
+        temperature: args.get_n("temp", 0.8f32),
+        seed: args.get_n("seed", 0u64),
+        ..Default::default()
+    };
+
+    let out = match method {
+        Method::Autoregressive => {
+            autoregressive::generate(chain[0].as_ref(), &prompt, max_new, &sampling)?
+        }
+        Method::Dualistic { draft_k } => dualistic::generate(
+            chain[0].as_ref(),
+            chain.last().unwrap().as_ref(),
+            &prompt,
+            &dualistic::DualisticConfig {
+                draft_k,
+                rule: VerifyRule::Speculative,
+                sampling,
+                max_new,
+            },
+        )?,
+        Method::Polybasic { draft_k, mu } => {
+            let mut cfg = PolyConfig::for_chain(chain.len(), draft_k, mu, max_new);
+            cfg.sampling = sampling;
+            polybasic::generate(&chain, &prompt, &cfg)?
+        }
+    };
+    println!("method={} family={family}", method.label());
+    println!(
+        "generated {} tokens in {:.1} ms ({:.1} tok/s), mu={:.2}, forwards={:?}",
+        out.tokens.len(),
+        out.wall.as_secs_f64() * 1e3,
+        out.tokens.len() as f64 / out.wall.as_secs_f64(),
+        out.mean_accept(),
+        out.forward_passes
+    );
+    println!("text: {:?}", tokenizer::decode(&out.tokens));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &str, family: &str) -> Result<()> {
+    let mut cfg = ServerConfig::new(artifacts, family);
+    cfg.workers = args.get_n("workers", 1usize);
+    let method = parse_method(&args.get("method", "poly"))?;
+    let rate: f64 = args.get_n("rate", 2.0);
+    let n: usize = args.get_n("requests", 24);
+    let server = Server::start(cfg)?;
+    println!("serving {n} requests at {rate}/s with {}", method.label());
+    let arrivals: Vec<_> =
+        polyspec::workload::ArrivalStream::new(rate, 256, 7).take(n).collect();
+    let start = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for a in arrivals {
+        if let Some(wait) = a.at.checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        match server.submit(a.query.prompt, a.query.max_new, method, Some(a.query.task)) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => eprintln!("rejected: {e}"),
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let metrics = server.shutdown();
+    println!("{}", metrics.snapshot());
+    Ok(())
+}
+
+fn cmd_plan(artifacts: &str, family: &str) -> Result<()> {
+    let roles = ["target", "intermediate", "decoy", "draft"];
+    let host = EngineHost::load(artifacts, family, &roles)
+        .or_else(|_| EngineHost::load(artifacts, family, &["target", "intermediate", "draft"]))?;
+    let n = host.metas().len();
+    let models: Vec<Arc<dyn LanguageModel>> =
+        (0..n).map(|i| host.model(i) as Arc<dyn LanguageModel>).collect();
+    let profiles: Vec<polyspec::spec::planner::ModelProfile> = (0..n)
+        .map(|i| polyspec::spec::planner::ModelProfile {
+            name: host.roles()[i].clone(),
+            t_ms: host.measure_cost_ms(i, 100, 5).unwrap(),
+        })
+        .collect();
+    for p in &profiles {
+        println!("{:<13} T = {:.2} ms", p.name, p.t_ms);
+    }
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|i| {
+            polyspec::workload::tasks::make_query(
+                polyspec::workload::TaskKind::MultiTurn,
+                i,
+                models[0].vocab(),
+            )
+            .prompt
+        })
+        .collect();
+    let plan = polyspec::spec::planner::plan_chain(
+        &models, &profiles, &prompts, 10, 40, SamplingParams::default(), 1.0,
+    )?;
+    println!("planned chain: {:?}", plan.names);
+    Ok(())
+}
+
+fn cmd_validate(args: &Args, artifacts: &str, family: &str) -> Result<()> {
+    // Lemma 3.1: compare the predicted total time against measurement.
+    let host = EngineHost::load(artifacts, family, &["target", "intermediate", "draft"])?;
+    let chain = host.chain();
+    let t: Vec<f64> =
+        (0..3).map(|i| host.measure_cost_ms(i, 100, 5).unwrap()).collect();
+    let n_tokens: usize = args.get_n("tokens", 96);
+    let prompt = tokenizer::encode("validate lemma 3.1 on this prompt", chain[0].vocab());
+
+    let mut cfg = PolyConfig::for_chain(3, 6, 8, n_tokens.min(96));
+    cfg.sampling.seed = 11;
+    let out = polybasic::generate(&chain, &prompt, &cfg)?;
+
+    // Measured acceptance lengths per verifier: L_1 from the target stage,
+    // L_2 from the intermediate stage (tokens emitted per its forward).
+    let n = out.tokens.len() as f64;
+    let l1 = n / out.forward_passes[0] as f64;
+    let l2 = n / out.forward_passes[1] as f64;
+    let beta = out.forward_passes[2] as f64 / (n / l2);
+    let predicted = lemma31_time(n, &[l1, l2], &t, beta);
+    let measured = out.wall.as_secs_f64() * 1e3;
+    println!("measured  T_i (ms): {t:?}");
+    println!("measured  L_1 = {l1:.2}  L_2 = {l2:.2}  beta = {beta:.2}");
+    println!("Lemma 3.1 predicted: {predicted:.1} ms");
+    println!("measured wall:       {measured:.1} ms");
+    let err = (predicted - measured).abs() / measured;
+    println!("relative error:      {:.1}%  ({})", err * 100.0,
+             if err < 0.25 { "OK — within coordination overhead" } else { "LARGE" });
+    Ok(())
+}
+
+fn cmd_info(artifacts: &str) -> Result<()> {
+    let manifest = Manifest::load(artifacts).context("loading manifest")?;
+    for (fam, spec) in &manifest.families {
+        println!("{fam}:");
+        for (role, r) in &spec.roles {
+            println!(
+                "  {:<13} layers={:<2} d_model={:<4} vocab={:<4} seq={:<4} params={}",
+                role, r.meta.n_layers, r.meta.d_model, r.meta.vocab, r.meta.seq_len,
+                r.meta.param_count
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! EngineHost: a dedicated thread owning the PJRT client + every engine,
+//! with `Send + Sync` proxy handles for the coordinator's worker threads.
+//!
+//! The `xla` crate's client is `Rc`-based, so all PJRT objects are pinned to
+//! one thread. Each [`RemoteModel`] forwards `forward()` calls over an mpsc
+//! channel and blocks on the reply; at our per-forward costs (hundreds of
+//! microseconds to milliseconds of XLA compute) the channel round-trip is
+//! noise (measured in benches/micro_hotpath.rs).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::spec::types::{LanguageModel, Logits, ModelCounters, Token};
+
+use super::engine::{Client, ModelEngine};
+use super::manifest::{Manifest, ModelMeta};
+
+enum Req {
+    Forward { model: usize, tokens: Vec<Token>, reply: mpsc::Sender<Result<Logits>> },
+    CostProbe { model: usize, ctx_len: usize, iters: usize, reply: mpsc::Sender<Result<f64>> },
+    Shutdown,
+}
+
+/// Owns the engine thread; dropping it shuts the thread down.
+pub struct EngineHost {
+    tx: mpsc::Sender<Req>,
+    join: Option<std::thread::JoinHandle<()>>,
+    metas: Vec<ModelMeta>,
+    roles: Vec<String>,
+}
+
+impl EngineHost {
+    /// Load `roles` of `family` from the artifacts at `root` on a fresh
+    /// engine thread. Role order defines model indices (target first).
+    pub fn load(root: impl Into<std::path::PathBuf>, family: &str, roles: &[&str]) -> Result<Self> {
+        let root = root.into();
+        let manifest = Manifest::load(&root)?;
+        let fam = manifest.family(family)?;
+        let specs: Vec<_> = roles
+            .iter()
+            .map(|r| fam.role(r).cloned())
+            .collect::<Result<Vec<_>>>()?;
+        let metas: Vec<ModelMeta> = specs.iter().map(|s| s.meta.clone()).collect();
+        let role_names: Vec<String> = specs.iter().map(|s| s.role.clone()).collect();
+
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name(format!("engine-{family}"))
+            .spawn(move || engine_thread(specs, rx, ready_tx))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during startup")?
+            .context("engine startup failed")?;
+        Ok(Self { tx, join: Some(join), metas, roles: role_names })
+    }
+
+    /// A `Send + Sync` handle to model `idx` (index into the role order).
+    pub fn model(&self, idx: usize) -> Arc<RemoteModel> {
+        assert!(idx < self.metas.len(), "model index {idx} out of range");
+        Arc::new(RemoteModel {
+            idx,
+            meta: self.metas[idx].clone(),
+            tx: Mutex::new(self.tx.clone()),
+            counters: ModelCounters::default(),
+        })
+    }
+
+    /// Handles for the whole chain, role order preserved.
+    pub fn chain(&self) -> Vec<Arc<dyn LanguageModel>> {
+        (0..self.metas.len()).map(|i| self.model(i) as Arc<dyn LanguageModel>).collect()
+    }
+
+    pub fn metas(&self) -> &[ModelMeta] {
+        &self.metas
+    }
+
+    pub fn roles(&self) -> &[String] {
+        &self.roles
+    }
+
+    /// Measure per-forward cost (ms) of model `idx` on the engine thread
+    /// itself — no channel overhead in the measurement.
+    pub fn measure_cost_ms(&self, idx: usize, ctx_len: usize, iters: usize) -> Result<f64> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::CostProbe { model: idx, ctx_len, iters, reply })
+            .ok()
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread gone")?
+    }
+}
+
+impl Drop for EngineHost {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_thread(
+    specs: Vec<super::manifest::RoleSpec>,
+    rx: mpsc::Receiver<Req>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<Vec<ModelEngine>> {
+        let client = Client::cpu()?;
+        specs.iter().map(|s| ModelEngine::load(&client, s)).collect()
+    })();
+    let engines = match setup {
+        Ok(engines) => {
+            let _ = ready.send(Ok(()));
+            engines
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Forward { model, tokens, reply } => {
+                let _ = reply.send(engines[model].forward(&tokens));
+            }
+            Req::CostProbe { model, ctx_len, iters, reply } => {
+                let engine = &engines[model];
+                let ctx: Vec<Token> = (0..ctx_len.min(engine.seq_len()))
+                    .map(|i| (i % engine.vocab()) as Token)
+                    .collect();
+                let r = (|| -> Result<f64> {
+                    let _ = engine.forward(&ctx)?; // warmup
+                    let start = Instant::now();
+                    for _ in 0..iters.max(1) {
+                        let _ = engine.forward(&ctx)?;
+                    }
+                    Ok(start.elapsed().as_secs_f64() * 1e3 / iters.max(1) as f64)
+                })();
+                let _ = reply.send(r);
+            }
+            Req::Shutdown => break,
+        }
+    }
+}
+
+/// `Send + Sync` proxy to one engine on the host thread.
+pub struct RemoteModel {
+    idx: usize,
+    meta: ModelMeta,
+    tx: Mutex<mpsc::Sender<Req>>,
+    counters: ModelCounters,
+}
+
+impl LanguageModel for RemoteModel {
+    fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn seq_len(&self) -> usize {
+        self.meta.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.meta.vocab
+    }
+
+    fn forward(&self, tokens: &[Token]) -> Result<Logits> {
+        let start = Instant::now();
+        let (reply, rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().expect("engine tx poisoned");
+            tx.send(Req::Forward { model: self.idx, tokens: tokens.to_vec(), reply })
+                .ok()
+                .context("engine thread gone")?;
+        }
+        let out = rx.recv().context("engine thread gone")??;
+        self.counters.record(start.elapsed());
+        Ok(out)
+    }
+
+    fn calls(&self) -> u64 {
+        self.counters.calls()
+    }
+
+    fn total_time(&self) -> Duration {
+        self.counters.total_time()
+    }
+
+    fn reset_counters(&self) {
+        self.counters.reset();
+    }
+}

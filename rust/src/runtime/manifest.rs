@@ -1,0 +1,218 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+/// Element type of one weight argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArgDtype {
+    F32,
+    S8,
+    S32,
+}
+
+impl ArgDtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => ArgDtype::F32,
+            "s8" => ArgDtype::S8,
+            "s32" => ArgDtype::S32,
+            other => bail!("unknown dtype {other:?} in manifest"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            ArgDtype::F32 | ArgDtype::S32 => 4,
+            ArgDtype::S8 => 1,
+        }
+    }
+}
+
+/// One weight argument of a lowered executable: a slice of the params blob.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: ArgDtype,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Architecture metadata of one chain member.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub param_count: usize,
+    pub flops_per_forward: u64,
+}
+
+/// One chain member: where its HLO + weights live and what it looks like.
+#[derive(Debug, Clone)]
+pub struct RoleSpec {
+    pub role: String,
+    pub hlo_path: PathBuf,
+    pub params_path: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub meta: ModelMeta,
+}
+
+/// One model family (target + derived drafters).
+#[derive(Debug, Clone)]
+pub struct FamilySpec {
+    pub family: String,
+    pub roles: BTreeMap<String, RoleSpec>,
+}
+
+/// The whole artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub families: BTreeMap<String, FamilySpec>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, root)
+    }
+
+    pub fn parse(text: &str, root: PathBuf) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let mut families = BTreeMap::new();
+        let fams = v.req("families")?.as_obj().context("families not an object")?;
+        for (fam_name, fam) in fams {
+            let mut roles = BTreeMap::new();
+            let robj = fam.req("roles")?.as_obj().context("roles not an object")?;
+            for (role_name, r) in robj {
+                roles.insert(role_name.clone(), parse_role(role_name, r, &root)?);
+            }
+            families.insert(
+                fam_name.clone(),
+                FamilySpec { family: fam_name.clone(), roles },
+            );
+        }
+        Ok(Manifest { root, families })
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilySpec> {
+        self.families.get(name).with_context(|| {
+            format!(
+                "family {name:?} not in manifest (have: {:?}); run `make artifacts ARTIFACT_SET=all`",
+                self.families.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl FamilySpec {
+    pub fn role(&self, name: &str) -> Result<&RoleSpec> {
+        self.roles.get(name).with_context(|| {
+            format!("role {name:?} not in family {} (have: {:?})", self.family,
+                    self.roles.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+fn parse_role(role_name: &str, r: &Json, root: &Path) -> Result<RoleSpec> {
+    let cfg = r.req("config")?;
+    let meta = ModelMeta {
+        name: cfg.req("name")?.as_str().context("name")?.to_string(),
+        n_layers: cfg.req("n_layers")?.as_usize().context("n_layers")?,
+        d_model: cfg.req("d_model")?.as_usize().context("d_model")?,
+        n_heads: cfg.req("n_heads")?.as_usize().context("n_heads")?,
+        d_ff: cfg.req("d_ff")?.as_usize().context("d_ff")?,
+        vocab: cfg.req("vocab")?.as_usize().context("vocab")?,
+        seq_len: cfg.req("seq_len")?.as_usize().context("seq_len")?,
+        param_count: r.req("param_count")?.as_usize().context("param_count")?,
+        flops_per_forward: r.req("flops_per_forward")?.as_f64().context("flops")? as u64,
+    };
+    let mut args = Vec::new();
+    for a in r.req("args")?.as_arr().context("args not an array")? {
+        args.push(ArgSpec {
+            name: a.req("name")?.as_str().context("arg name")?.to_string(),
+            dtype: ArgDtype::parse(a.req("dtype")?.as_str().context("arg dtype")?)?,
+            shape: a
+                .req("shape")?
+                .as_arr()
+                .context("arg shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+            offset: a.req("offset")?.as_usize().context("offset")?,
+            nbytes: a.req("nbytes")?.as_usize().context("nbytes")?,
+        });
+    }
+    Ok(RoleSpec {
+        role: role_name.to_string(),
+        hlo_path: root.join(r.req("hlo")?.as_str().context("hlo")?),
+        params_path: root.join(r.req("params_bin")?.as_str().context("params_bin")?),
+        args,
+        meta,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "families": {
+        "fam": {
+          "roles": {
+            "target": {
+              "hlo": "fam/target.hlo.txt",
+              "params_bin": "fam/target.params.bin",
+              "args": [
+                {"name": "tok_emb", "dtype": "f32", "shape": [4, 2], "offset": 0, "nbytes": 32}
+              ],
+              "config": {"name": "t", "n_layers": 1, "d_model": 2, "n_heads": 1,
+                         "d_ff": 4, "vocab": 4, "seq_len": 8, "seed": 0,
+                         "residual_gain": 0.4},
+              "param_count": 8,
+              "flops_per_forward": 128
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let fam = m.family("fam").unwrap();
+        let role = fam.role("target").unwrap();
+        assert_eq!(role.meta.vocab, 4);
+        assert_eq!(role.args[0].dtype, ArgDtype::F32);
+        assert_eq!(role.args[0].shape, vec![4, 2]);
+        assert!(role.hlo_path.ends_with("fam/target.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_family_is_helpful() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let err = m.family("nope").unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("fam"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f16\"");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

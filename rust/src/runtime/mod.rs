@@ -1,0 +1,11 @@
+//! Runtime: load AOT artifacts (HLO text + weights) and execute them on the
+//! PJRT CPU client. See `python/compile/aot.py` for the interchange format.
+
+pub mod engine;
+pub mod host;
+pub mod json;
+pub mod manifest;
+
+pub use engine::{Client, ModelEngine};
+pub use host::{EngineHost, RemoteModel};
+pub use manifest::Manifest;

@@ -1,0 +1,204 @@
+//! Dualistic (two-model) speculative decoding — the Leviathan et al. 2023
+//! baseline the paper compares against (its "EAGLE2" baseline is this loop
+//! with an early-exit drafter; see DESIGN.md §3).
+//!
+//! Kept as an independent implementation (rather than `polybasic` with n=2)
+//! so the general algorithm can be cross-checked against it in tests.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::rng::Pcg32;
+use super::sampler::{self, filter_top_kp};
+use super::types::{GenerationOutput, LanguageModel, SamplingParams, Token, VerifyRule};
+use super::verify::{verify_block, BlockVerdict};
+
+#[derive(Debug, Clone, Copy)]
+pub struct DualisticConfig {
+    pub draft_k: usize,
+    pub rule: VerifyRule,
+    pub sampling: SamplingParams,
+    pub max_new: usize,
+}
+
+impl Default for DualisticConfig {
+    fn default() -> Self {
+        Self {
+            draft_k: 4,
+            rule: VerifyRule::Speculative,
+            sampling: SamplingParams::default(),
+            max_new: 64,
+        }
+    }
+}
+
+/// Temperature-softmaxed, top-k/p-filtered distribution at `pos`.
+pub(crate) fn dist_row(
+    logits: &super::types::Logits,
+    pos: usize,
+    sampling: &SamplingParams,
+) -> Vec<f32> {
+    let mut p = logits.probs(pos, sampling.temperature.max(1e-3));
+    filter_top_kp(&mut p, sampling.top_k, sampling.top_p);
+    p
+}
+
+pub(crate) fn pick(probs: &mut [f32], sampling: &SamplingParams, rule: VerifyRule,
+                   rng: &mut Pcg32) -> Token {
+    match rule {
+        VerifyRule::Greedy => sampler::argmax(probs),
+        _ => {
+            if sampling.temperature <= 1e-3 {
+                sampler::argmax(probs)
+            } else {
+                sampler::sample_categorical(probs, rng)
+            }
+        }
+    }
+}
+
+/// Standard draft-then-verify speculative decoding.
+pub fn generate(
+    target: &dyn LanguageModel,
+    draft: &dyn LanguageModel,
+    prompt: &[Token],
+    cfg: &DualisticConfig,
+) -> Result<GenerationOutput> {
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    anyhow::ensure!(cfg.draft_k >= 1, "draft_k must be >= 1");
+    let seq_cap = target.seq_len().min(draft.seq_len());
+    anyhow::ensure!(
+        prompt.len() + cfg.max_new + cfg.draft_k + 1 <= seq_cap,
+        "request does not fit the context window"
+    );
+    target.reset_counters();
+    draft.reset_counters();
+    let start = Instant::now();
+    let mut rng = Pcg32::seeded(cfg.sampling.seed);
+    let mut ctx = prompt.to_vec();
+    let mut accept_lengths = Vec::new();
+
+    while ctx.len() - prompt.len() < cfg.max_new {
+        let remaining = cfg.max_new - (ctx.len() - prompt.len());
+        let k = cfg.draft_k.min(remaining);
+
+        // Draft k tokens autoregressively with the small model.
+        let mut block: Vec<Token> = Vec::with_capacity(k);
+        let mut q_rows: Vec<Vec<f32>> = Vec::with_capacity(k);
+        let mut frontier = ctx.clone();
+        for _ in 0..k {
+            let logits = draft.forward(&frontier)?;
+            let mut q = dist_row(&logits, frontier.len() - 1, &cfg.sampling);
+            let tok = pick(&mut q, &cfg.sampling, cfg.rule, &mut rng);
+            q_rows.push(q);
+            block.push(tok);
+            frontier.push(tok);
+        }
+
+        // One target forward scores the whole block (+ the bonus position).
+        let logits = target.forward(&frontier)?;
+        let base = ctx.len();
+        let p_rows: Vec<Vec<f32>> =
+            (0..k).map(|i| dist_row(&logits, base - 1 + i, &cfg.sampling)).collect();
+
+        let BlockVerdict { accepted, replacement } =
+            verify_block(&block, &p_rows, &q_rows, cfg.rule, &mut rng);
+
+        let mut committed = 0usize;
+        for &tok in &block[..accepted] {
+            ctx.push(tok);
+            committed += 1;
+        }
+        if let Some(r) = replacement {
+            ctx.push(r);
+            committed += 1;
+        } else {
+            // Full acceptance: the target's row after the last drafted token
+            // yields a free bonus token.
+            let mut p = dist_row(&logits, base + k - 1, &cfg.sampling);
+            let bonus = pick(&mut p, &cfg.sampling, cfg.rule, &mut rng);
+            ctx.push(bonus);
+            committed += 1;
+        }
+        accept_lengths.push(committed as u32);
+    }
+
+    ctx.truncate(prompt.len() + cfg.max_new);
+    Ok(GenerationOutput {
+        tokens: ctx[prompt.len()..].to_vec(),
+        wall: start.elapsed(),
+        forward_passes: vec![target.calls(), draft.calls()],
+        forward_time: vec![target.total_time(), draft.total_time()],
+        accept_lengths,
+        stage_accept_lengths: vec![],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::autoregressive;
+    use crate::spec::mock::MockModel;
+
+    fn models() -> (MockModel, MockModel) {
+        (
+            MockModel::new("t", 256, 24, 5, 0.0),
+            MockModel::new("d", 256, 24, 5, 0.5),
+        )
+    }
+
+    #[test]
+    fn greedy_matches_target_greedy_decode() {
+        // The defining correctness property of greedy verification.
+        let (t, d) = models();
+        let cfg = DualisticConfig {
+            rule: VerifyRule::Greedy,
+            sampling: SamplingParams { temperature: 0.0, ..Default::default() },
+            max_new: 40,
+            ..Default::default()
+        };
+        let spec = generate(&t, &d, &[3, 1, 4], &cfg).unwrap();
+        let ar = autoregressive::generate(
+            &t,
+            &[3, 1, 4],
+            40,
+            &SamplingParams { temperature: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(spec.tokens, ar.tokens);
+    }
+
+    #[test]
+    fn uses_fewer_target_forwards_than_ar() {
+        let (t, d) = models();
+        let cfg = DualisticConfig { max_new: 48, ..Default::default() };
+        let out = generate(&t, &d, &[2, 7], &cfg).unwrap();
+        assert_eq!(out.tokens.len(), 48);
+        assert!(
+            out.forward_passes[0] < 48,
+            "target forwards {} not reduced",
+            out.forward_passes[0]
+        );
+        let mu = out.mean_accept();
+        assert!(mu > 1.0, "mean accept {mu}");
+    }
+
+    #[test]
+    fn acceptance_bounded_by_k_plus_one() {
+        let (t, d) = models();
+        let cfg = DualisticConfig { draft_k: 4, max_new: 60, ..Default::default() };
+        let out = generate(&t, &d, &[2], &cfg).unwrap();
+        assert!(out.accept_lengths.iter().all(|&a| a >= 1 && a <= 5));
+    }
+
+    #[test]
+    fn identical_draft_accepts_everything() {
+        let t = MockModel::new("t", 256, 24, 5, 0.0);
+        let d = MockModel::new("t", 256, 24, 5, 0.0); // same name -> same noise stream
+        let cfg = DualisticConfig { draft_k: 4, max_new: 40, ..Default::default() };
+        let out = generate(&t, &d, &[1], &cfg).unwrap();
+        // Perfect drafter: every block fully accepted (k + bonus).
+        assert!(out.mean_accept() > 4.9, "mu = {}", out.mean_accept());
+    }
+}

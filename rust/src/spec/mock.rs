@@ -1,0 +1,211 @@
+//! Deterministic mock language models for fast, artifact-free testing.
+//!
+//! A [`MockModel`] derives each next-token distribution from a hash of the
+//! context prefix, blended between a shared "oracle" distribution and
+//! model-private noise.  Two mocks with the same `base_seed` and different
+//! `noise` levels behave like a target and its drafters: lower noise =>
+//! closer to the oracle => higher mutual acceptance.  This lets every
+//! algorithm in `spec::` be exercised (and its losslessness proven
+//! statistically) without PJRT artifacts.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::rng::Pcg32;
+use super::types::{LanguageModel, Logits, ModelCounters, Token};
+
+#[derive(Debug)]
+pub struct MockModel {
+    name: String,
+    seq_len: usize,
+    vocab: usize,
+    base_seed: u64,
+    model_seed: u64,
+    /// 0.0 = identical to the oracle; larger = less faithful.
+    noise: f32,
+    /// Busy-wait per forward, to emulate a per-forward cost `T_i` in timing
+    /// tests and theory validation.
+    cost: Duration,
+    counters: ModelCounters,
+}
+
+impl MockModel {
+    pub fn new(name: &str, seq_len: usize, vocab: usize, base_seed: u64, noise: f32) -> Self {
+        Self {
+            name: name.to_string(),
+            seq_len,
+            vocab,
+            base_seed,
+            model_seed: fnv(name.as_bytes(), 0x9e3779b97f4a7c15),
+            noise,
+            cost: Duration::ZERO,
+            counters: ModelCounters::default(),
+        }
+    }
+
+    /// Emulate a per-forward cost (busy-wait, so wall-clock is realistic).
+    pub fn with_cost(mut self, cost: Duration) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    fn row_for_prefix(&self, prefix: &[Token]) -> Vec<f32> {
+        let h = hash_tokens(prefix, self.base_seed);
+        // Oracle logits: deterministic in (base_seed, prefix).
+        let mut rng = Pcg32::new(h, 0x5851f42d4c957f2d);
+        let mut logits: Vec<f32> = (0..self.vocab)
+            .map(|_| 3.0 * (rng.next_f32() - 0.5))
+            .collect();
+        // A few "peaky" tokens so distributions are LLM-like (low entropy).
+        let peak = (h % self.vocab as u64) as usize;
+        logits[peak] += 4.0;
+        let peak2 = ((h >> 17) % self.vocab as u64) as usize;
+        logits[peak2] += 2.0;
+        // Model-private perturbation.
+        if self.noise > 0.0 {
+            let mut nrng = Pcg32::new(h ^ self.model_seed, 0x14057b7ef767814f);
+            for l in logits.iter_mut() {
+                *l += self.noise * 3.0 * (nrng.next_f32() - 0.5);
+            }
+        }
+        logits
+    }
+}
+
+impl LanguageModel for MockModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn forward(&self, tokens: &[Token]) -> Result<Logits> {
+        anyhow::ensure!(tokens.len() <= self.seq_len, "context too long");
+        let start = Instant::now();
+        let mut data = Vec::with_capacity(tokens.len() * self.vocab);
+        for t in 0..tokens.len() {
+            data.extend_from_slice(&self.row_for_prefix(&tokens[..=t]));
+        }
+        if !self.cost.is_zero() {
+            while start.elapsed() < self.cost {
+                std::hint::spin_loop();
+            }
+        }
+        self.counters.record(start.elapsed());
+        Ok(Logits::new(data, tokens.len(), self.vocab))
+    }
+
+    fn calls(&self) -> u64 {
+        self.counters.calls()
+    }
+
+    fn total_time(&self) -> Duration {
+        self.counters.total_time()
+    }
+
+    fn reset_counters(&self) {
+        self.counters.reset();
+    }
+}
+
+fn hash_tokens(tokens: &[Token], seed: u64) -> u64 {
+    let mut h = seed ^ 0xcbf29ce484222325;
+    for &t in tokens {
+        h = fnv(&t.to_le_bytes(), h);
+    }
+    h
+}
+
+fn fnv(bytes: &[u8], mut h: u64) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A standard mock chain for tests: target (noise 0), intermediate, draft.
+pub fn mock_chain(seq_len: usize, vocab: usize, seed: u64) -> Vec<std::sync::Arc<dyn LanguageModel>> {
+    vec![
+        std::sync::Arc::new(MockModel::new("mock-target", seq_len, vocab, seed, 0.0)),
+        std::sync::Arc::new(MockModel::new("mock-mid", seq_len, vocab, seed, 0.35)),
+        std::sync::Arc::new(MockModel::new("mock-draft", seq_len, vocab, seed, 0.8)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::types::softmax;
+
+    #[test]
+    fn deterministic_per_prefix() {
+        let m = MockModel::new("m", 32, 16, 7, 0.5);
+        let a = m.forward(&[1, 2, 3]).unwrap();
+        let b = m.forward(&[1, 2, 3]).unwrap();
+        assert_eq!(a.row(2), b.row(2));
+    }
+
+    #[test]
+    fn rows_depend_only_on_prefix() {
+        // KV-consistency: row t must not change when later tokens change.
+        let m = MockModel::new("m", 32, 16, 7, 0.5);
+        let a = m.forward(&[1, 2, 3, 4]).unwrap();
+        let b = m.forward(&[1, 2, 3, 9]).unwrap();
+        assert_eq!(a.row(1), b.row(1));
+        assert_eq!(a.row(2), b.row(2));
+        assert_ne!(a.row(3), b.row(3));
+    }
+
+    #[test]
+    fn noise_orders_similarity() {
+        // Acceptance proxy sum(min(p, q)) must decrease with noise.
+        let target = MockModel::new("t", 64, 32, 3, 0.0);
+        let close = MockModel::new("c", 64, 32, 3, 0.3);
+        let far = MockModel::new("f", 64, 32, 3, 1.5);
+        let ctx: Vec<Token> = (0..40).map(|i| (i * 7 % 32) as Token).collect();
+        let lt = target.forward(&ctx).unwrap();
+        let lc = close.forward(&ctx).unwrap();
+        let lf = far.forward(&ctx).unwrap();
+        let overlap = |a: &Logits, b: &Logits| -> f64 {
+            (0..ctx.len())
+                .map(|t| {
+                    let p = softmax(a.row(t), 1.0);
+                    let q = softmax(b.row(t), 1.0);
+                    p.iter().zip(&q).map(|(&x, &y)| x.min(y) as f64).sum::<f64>()
+                })
+                .sum::<f64>()
+                / ctx.len() as f64
+        };
+        let oc = overlap(&lt, &lc);
+        let of = overlap(&lt, &lf);
+        assert!(oc > of + 0.05, "close {oc} vs far {of}");
+        assert!(oc > 0.6, "close overlap too low: {oc}");
+    }
+
+    #[test]
+    fn counters_track_calls() {
+        let m = MockModel::new("m", 8, 4, 0, 0.0);
+        m.forward(&[1]).unwrap();
+        m.forward(&[1, 2]).unwrap();
+        assert_eq!(m.calls(), 2);
+        m.reset_counters();
+        assert_eq!(m.calls(), 0);
+    }
+
+    #[test]
+    fn cost_is_respected() {
+        let m = MockModel::new("m", 8, 4, 0, 0.0).with_cost(Duration::from_millis(2));
+        let t0 = Instant::now();
+        m.forward(&[1, 2]).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+        assert!(m.cost_ms() >= 2.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The paper's contribution: polybasic speculative decoding.
+//!
+//! * [`types`]   — `LanguageModel` trait, logits, sampling/verify configs.
+//! * [`rng`], [`sampler`], [`verify`] — sampling + verification primitives.
+//! * [`autoregressive`], [`dualistic`], [`polybasic`], [`csdraft`] — the
+//!   decoding algorithms (vanilla baseline, Leviathan baseline, the paper's
+//!   Algorithm 1 generalized to n models, and the CS-Drafting baseline).
+//! * [`theory`]  — Lemma 3.1 / Theorem 3.2 / Theorem 3.3 as code.
+//! * [`planner`] — theory-driven chain construction from measurements.
+//! * [`stats`]   — acceptance/latency aggregation.
+//! * [`mock`], [`ngram`] — PJRT-free models for tests and the CS cascade.
+
+pub mod autoregressive;
+pub mod csdraft;
+pub mod dualistic;
+pub mod mock;
+pub mod ngram;
+pub mod planner;
+pub mod polybasic;
+pub mod rng;
+pub mod sampler;
+pub mod stats;
+pub mod theory;
+pub mod types;
+pub mod verify;
+
+pub use polybasic::{generate as polybasic_generate, PolyConfig};
+pub use types::{GenerationOutput, LanguageModel, SamplingParams, Token, VerifyRule};

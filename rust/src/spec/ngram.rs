@@ -1,0 +1,131 @@
+//! Statistical (non-neural) drafter: an in-context bigram model.
+//!
+//! CS Drafting (Chen et al. 2023) terminates its vertical cascade with a
+//! "statistical language model" so the lowest drafting tier costs ~nothing.
+//! This is our equivalent: next-token distribution = smoothed counts of the
+//! bigram transitions observed *within the given context*.  It implements
+//! [`LanguageModel`] so it can sit at the bottom of any chain.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::types::{LanguageModel, Logits, ModelCounters, Token};
+
+#[derive(Debug)]
+pub struct BigramModel {
+    name: String,
+    seq_len: usize,
+    vocab: usize,
+    /// Add-k smoothing mass.
+    smoothing: f32,
+    counters: ModelCounters,
+}
+
+impl BigramModel {
+    pub fn new(seq_len: usize, vocab: usize) -> Self {
+        Self {
+            name: "bigram".to_string(),
+            seq_len,
+            vocab,
+            smoothing: 0.05,
+            counters: ModelCounters::default(),
+        }
+    }
+}
+
+impl LanguageModel for BigramModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn forward(&self, tokens: &[Token]) -> Result<Logits> {
+        anyhow::ensure!(tokens.len() <= self.seq_len, "context too long");
+        let start = Instant::now();
+        let v = self.vocab;
+        // Rolling bigram counts: row t uses transitions seen in tokens[0..=t]
+        // (prefix-causal, like every other scorer here).
+        let mut counts = vec![0f32; v * v];
+        let mut data = Vec::with_capacity(tokens.len() * v);
+        for t in 0..tokens.len() {
+            if t > 0 {
+                let prev = tokens[t - 1] as usize;
+                let cur = tokens[t] as usize;
+                if prev < v && cur < v {
+                    counts[prev * v + cur] += 1.0;
+                }
+            }
+            let cur = tokens[t] as usize;
+            let row = &counts[cur * v..(cur + 1) * v];
+            let total: f32 = row.iter().sum::<f32>() + self.smoothing * v as f32;
+            // Emit log-probabilities (consumers softmax, which is a no-op
+            // transform up to temperature on logits = ln p).
+            for j in 0..v {
+                let p = (row[j] + self.smoothing) / total;
+                data.push(p.ln());
+            }
+        }
+        self.counters.record(start.elapsed());
+        Ok(Logits::new(data, tokens.len(), v))
+    }
+
+    fn calls(&self) -> u64 {
+        self.counters.calls()
+    }
+
+    fn total_time(&self) -> Duration {
+        self.counters.total_time()
+    }
+
+    fn reset_counters(&self) {
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::types::softmax;
+
+    #[test]
+    fn favors_observed_transitions() {
+        let m = BigramModel::new(64, 8);
+        // Context where 3 is always followed by 5.
+        let ctx = [3, 5, 1, 3, 5, 2, 3, 5, 3];
+        let logits = m.forward(&ctx).unwrap();
+        let p = softmax(logits.row(ctx.len() - 1), 1.0);
+        let best = p
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 5, "dist {p:?}");
+    }
+
+    #[test]
+    fn rows_are_distributions() {
+        let m = BigramModel::new(64, 8);
+        let logits = m.forward(&[1, 2, 3]).unwrap();
+        for t in 0..3 {
+            let p = softmax(logits.row(t), 1.0);
+            assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn prefix_causal() {
+        let m = BigramModel::new(64, 8);
+        let a = m.forward(&[1, 2, 3, 4]).unwrap();
+        let b = m.forward(&[1, 2, 3, 7]).unwrap();
+        assert_eq!(a.row(2), b.row(2));
+    }
+}

@@ -1,0 +1,250 @@
+//! Theory-driven chain planner: turn measured `(T_i, L_ij)` into a chain
+//! layout using Theorem 3.2, exactly the workflow §3.2 prescribes
+//! ("given model inference times and acceptance probabilities, one can
+//! estimate the optimal system layout via Equation (3) and gauge whether a
+//! new model confers net benefit").
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::dualistic::{self, DualisticConfig};
+use super::theory::{lemma31_time, InsertionCheck, InsertionVerdict};
+use super::types::{LanguageModel, SamplingParams, Token, VerifyRule};
+
+/// Measured profile of one candidate model.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// Per-forward cost in ms, measured on representative contexts.
+    pub t_ms: f64,
+}
+
+/// Measure per-forward cost with warmup on a representative context length.
+pub fn measure_cost_ms(model: &dyn LanguageModel, ctx_len: usize, iters: usize) -> f64 {
+    let ctx: Vec<Token> = (0..ctx_len.min(model.seq_len()))
+        .map(|i| (i % model.vocab()) as Token)
+        .collect();
+    // Warmup (PJRT first-call overhead, caches).
+    let _ = model.forward(&ctx);
+    let start = Instant::now();
+    for _ in 0..iters.max(1) {
+        let _ = model.forward(&ctx);
+    }
+    start.elapsed().as_secs_f64() * 1e3 / iters.max(1) as f64
+}
+
+/// Measure the pairwise acceptance length `L` of `verifier` checking
+/// `proposer`'s drafts (speculative rule), averaged over prompts.
+pub fn measure_pair_acceptance(
+    verifier: Arc<dyn LanguageModel>,
+    proposer: Arc<dyn LanguageModel>,
+    prompts: &[Vec<Token>],
+    draft_k: usize,
+    max_new: usize,
+    sampling: SamplingParams,
+) -> Result<f64> {
+    let mut total = 0.0;
+    let mut count = 0.0;
+    for (i, prompt) in prompts.iter().enumerate() {
+        let cfg = DualisticConfig {
+            draft_k,
+            rule: VerifyRule::Speculative,
+            sampling: SamplingParams { seed: sampling.seed + i as u64, ..sampling },
+            max_new,
+        };
+        let out = dualistic::generate(verifier.as_ref(), proposer.as_ref(), prompt, &cfg)?;
+        total += out.mean_accept() * out.accept_lengths.len() as f64;
+        count += out.accept_lengths.len() as f64;
+    }
+    Ok(if count > 0.0 { total / count } else { 0.0 })
+}
+
+/// One candidate insertion evaluated by Theorem 3.2.
+#[derive(Debug, Clone)]
+pub struct InsertionReport {
+    pub candidate: String,
+    pub check: InsertionCheck,
+    pub verdict: InsertionVerdict,
+    /// Lemma 3.1 predicted ms for a reference generation with/without.
+    pub predicted_ms_without: f64,
+    pub predicted_ms_with: f64,
+}
+
+/// The planner's output: the chosen chain plus the full audit trail.
+#[derive(Debug, Clone)]
+pub struct ChainPlan {
+    /// Indices into the candidate list, target first, drafter last.
+    pub order: Vec<usize>,
+    pub names: Vec<String>,
+    pub reports: Vec<InsertionReport>,
+}
+
+/// Decide whether to insert `candidate` between `upper` (index i) and
+/// `lower` (index i+1) of an existing chain, from measurements.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_insertion(
+    upper: Arc<dyn LanguageModel>,
+    candidate: Arc<dyn LanguageModel>,
+    lower: Arc<dyn LanguageModel>,
+    t_upper_ms: f64,
+    t_cand_ms: f64,
+    t_lower_ms: f64,
+    prompts: &[Vec<Token>],
+    draft_k: usize,
+    max_new: usize,
+    sampling: SamplingParams,
+    beta: f64,
+) -> Result<InsertionReport> {
+    // L_i: current pair (upper verifying lower).
+    let l_i = measure_pair_acceptance(
+        upper.clone(), lower.clone(), prompts, draft_k, max_new, sampling)?;
+    // L_{i-new}: upper verifying the candidate.
+    let l_i_new = measure_pair_acceptance(
+        upper.clone(), candidate.clone(), prompts, draft_k, max_new, sampling)?;
+    // L_new (a.k.a. L_{new-(i+1)}): candidate verifying lower.
+    let l_new = measure_pair_acceptance(
+        candidate.clone(), lower.clone(), prompts, draft_k, max_new, sampling)?;
+
+    let check = InsertionCheck {
+        t_i: t_upper_ms,
+        t_new: t_cand_ms,
+        t_next: t_lower_ms,
+        l_i,
+        l_i_new,
+        l_new,
+        beta,
+    };
+    let verdict = check.evaluate();
+
+    let n = 100.0;
+    let predicted_ms_without =
+        lemma31_time(n, &[l_i], &[t_upper_ms, t_lower_ms], beta);
+    let predicted_ms_with = lemma31_time(
+        n,
+        &[l_i_new, l_new],
+        &[t_upper_ms, t_cand_ms, t_lower_ms],
+        beta,
+    );
+
+    Ok(InsertionReport {
+        candidate: candidate.name().to_string(),
+        check,
+        verdict,
+        predicted_ms_without,
+        predicted_ms_with,
+    })
+}
+
+/// Greedy chain construction: start from (target, drafter), then try to
+/// insert every remaining candidate between target and the top of the draft
+/// stack, keeping insertions Theorem 3.2 endorses.
+pub fn plan_chain(
+    models: &[Arc<dyn LanguageModel>],
+    profiles: &[ModelProfile],
+    prompts: &[Vec<Token>],
+    draft_k: usize,
+    max_new: usize,
+    sampling: SamplingParams,
+    beta: f64,
+) -> Result<ChainPlan> {
+    anyhow::ensure!(models.len() >= 2, "need target + at least one drafter");
+    anyhow::ensure!(models.len() == profiles.len());
+    // Convention: models[0] = target, models[last] = cheapest drafter,
+    // middle entries are insertion candidates.
+    let target = 0usize;
+    let drafter = models.len() - 1;
+    let mut order = vec![target, drafter];
+    let mut reports = Vec::new();
+
+    for cand in 1..drafter {
+        // Try inserting directly below the target (the paper's three-model
+        // reference design: M1 / M_new / current draft stack top).
+        let upper = order[0];
+        let lower = order[1];
+        let report = evaluate_insertion(
+            models[upper].clone(),
+            models[cand].clone(),
+            models[lower].clone(),
+            profiles[upper].t_ms,
+            profiles[cand].t_ms,
+            profiles[lower].t_ms,
+            prompts,
+            draft_k,
+            max_new,
+            sampling,
+            beta,
+        )?;
+        if report.verdict.predicts_improvement() {
+            order.insert(1, cand);
+        }
+        reports.push(report);
+    }
+
+    Ok(ChainPlan {
+        names: order.iter().map(|&i| profiles[i].name.clone()).collect(),
+        order,
+        reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::mock::MockModel;
+    use std::time::Duration;
+
+    fn prompts() -> Vec<Vec<Token>> {
+        vec![vec![1, 2, 3], vec![9, 8, 7, 6]]
+    }
+
+    #[test]
+    fn measures_cost() {
+        let m = MockModel::new("m", 64, 16, 1, 0.0).with_cost(Duration::from_millis(1));
+        let t = measure_cost_ms(&m, 32, 3);
+        assert!(t >= 1.0, "{t}");
+    }
+
+    #[test]
+    fn pair_acceptance_orders_by_similarity() {
+        let t: Arc<dyn LanguageModel> = Arc::new(MockModel::new("t", 512, 24, 3, 0.0));
+        let close: Arc<dyn LanguageModel> = Arc::new(MockModel::new("c", 512, 24, 3, 0.3));
+        let far: Arc<dyn LanguageModel> = Arc::new(MockModel::new("f", 512, 24, 3, 1.6));
+        let sampling = SamplingParams::default();
+        let lc = measure_pair_acceptance(t.clone(), close, &prompts(), 4, 24, sampling).unwrap();
+        let lf = measure_pair_acceptance(t, far, &prompts(), 4, 24, sampling).unwrap();
+        assert!(lc > lf, "close {lc} <= far {lf}");
+    }
+
+    #[test]
+    fn planner_inserts_good_mid_rejects_decoy() {
+        // good mid: cheap and close to target. decoy: expensive and far.
+        let target: Arc<dyn LanguageModel> =
+            Arc::new(MockModel::new("t", 512, 24, 3, 0.0).with_cost(Duration::from_micros(800)));
+        let mid: Arc<dyn LanguageModel> =
+            Arc::new(MockModel::new("mid", 512, 24, 3, 0.25).with_cost(Duration::from_micros(150)));
+        let decoy: Arc<dyn LanguageModel> =
+            Arc::new(MockModel::new("decoy", 512, 24, 991, 1.8).with_cost(Duration::from_micros(700)));
+        let draft: Arc<dyn LanguageModel> =
+            Arc::new(MockModel::new("d", 512, 24, 3, 0.8).with_cost(Duration::from_micros(40)));
+        let models = vec![target, mid, decoy, draft];
+        let profiles: Vec<ModelProfile> = [("t", 0.8), ("mid", 0.15), ("decoy", 0.7), ("d", 0.04)]
+            .iter()
+            .map(|(n, t)| ModelProfile { name: n.to_string(), t_ms: *t })
+            .collect();
+        let plan = plan_chain(
+            &models,
+            &profiles,
+            &prompts(),
+            4,
+            24,
+            SamplingParams::default(),
+            1.0,
+        )
+        .unwrap();
+        assert!(plan.names.contains(&"mid".to_string()), "plan {:?}", plan.names);
+        assert!(!plan.names.contains(&"decoy".to_string()), "plan {:?}", plan.names);
+        assert_eq!(plan.reports.len(), 2);
+    }
+}

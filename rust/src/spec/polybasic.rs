@@ -1,0 +1,411 @@
+//! Polybasic speculative decoding — the paper's Algorithm 1, generalized
+//! from three models to an arbitrary chain `M_1 (target) … M_n (drafter)`.
+//!
+//! Pipeline model: tokens are drafted by `M_n` and flow *up* the chain.
+//! `pending[j]` holds tokens awaiting verification by `models[j]`, each
+//! carrying the distribution it was proposed from.  Position order in the
+//! logical sequence is
+//!
+//! ```text
+//! committed ctx | pending[0] | pending[1] | … | pending[n-2] | (new drafts)
+//! ```
+//!
+//! Stage `j` fires once `pending[j]` reaches its threshold `μ_j` (Algorithm
+//! 1's `cnt >= μ` check): one forward of `models[j]` scores the whole prefix
+//! and verifies its queue sequentially.  Accepted tokens (plus the
+//! replacement emitted on a rejection, whose marginal is exactly `p_j` by
+//! the speculative-sampling theorem) move to `pending[j-1]` with proposal
+//! distribution `p_j`; a full acceptance yields a bonus token.  A rejection
+//! at stage `j` invalidates everything at later positions (the rest of
+//! `pending[j]` and all `pending[k]`, `k > j`).
+//!
+//! Stage 0 commits to the output.  With `VerifyRule::Speculative` at every
+//! stage the committed stream is distributed *exactly* as the target's
+//! sampling distribution (chained losslessness, see `verify.rs`); with
+//! `VerifyRule::Greedy` it equals the target's greedy decode token-for-token
+//! — both properties are asserted in tests.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::dualistic::{dist_row, pick};
+use super::rng::Pcg32;
+use super::types::{GenerationOutput, LanguageModel, SamplingParams, Token, VerifyRule};
+use super::verify::{verify_block, BlockVerdict};
+
+/// Configuration of a polybasic decode.
+#[derive(Debug, Clone)]
+pub struct PolyConfig {
+    /// Tokens drafted by `M_n` per drafting burst (Algorithm 1's `K`).
+    pub draft_k: usize,
+    /// Verification thresholds `μ_j` per verifier stage, target first
+    /// (`thresholds[0]` is Algorithm 1's `μ`). Length must be `n - 1`.
+    pub thresholds: Vec<usize>,
+    pub rule: VerifyRule,
+    pub sampling: SamplingParams,
+    pub max_new: usize,
+}
+
+impl PolyConfig {
+    /// Sensible defaults for an `n`-model chain: target threshold `mu`,
+    /// everything deeper verifies every `draft_k` tokens.
+    pub fn for_chain(n_models: usize, draft_k: usize, mu: usize, max_new: usize) -> Self {
+        assert!(n_models >= 2);
+        let mut thresholds = vec![draft_k.max(1); n_models - 1];
+        thresholds[0] = mu.max(1);
+        Self {
+            draft_k,
+            thresholds,
+            rule: VerifyRule::Speculative,
+            sampling: SamplingParams::default(),
+            max_new,
+        }
+    }
+
+    /// Context headroom the pipeline may occupy beyond committed tokens
+    /// (used for admission control).
+    pub fn headroom(&self) -> usize {
+        self.thresholds.iter().sum::<usize>() + self.draft_k + self.thresholds.len() + 2
+    }
+}
+
+/// A token in flight, with the distribution it was proposed from.
+#[derive(Debug, Clone)]
+struct Pending {
+    tok: Token,
+    q: Vec<f32>,
+}
+
+/// Generate with a polybasic chain. `models[0]` is the target `M_1`,
+/// `models[n-1]` the drafter `M_n`.
+pub fn generate(
+    models: &[Arc<dyn LanguageModel>],
+    prompt: &[Token],
+    cfg: &PolyConfig,
+) -> Result<GenerationOutput> {
+    let n = models.len();
+    anyhow::ensure!(n >= 2, "polybasic needs at least two models");
+    anyhow::ensure!(cfg.thresholds.len() == n - 1, "need one threshold per verifier");
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    anyhow::ensure!(cfg.draft_k >= 1, "draft_k must be >= 1");
+    let seq_cap = models.iter().map(|m| m.seq_len()).min().unwrap();
+    anyhow::ensure!(
+        prompt.len() + cfg.max_new + cfg.headroom() <= seq_cap,
+        "prompt {} + max_new {} + pipeline headroom {} exceeds context {}",
+        prompt.len(),
+        cfg.max_new,
+        cfg.headroom(),
+        seq_cap
+    );
+
+    for m in models {
+        m.reset_counters();
+    }
+    let start = Instant::now();
+    let mut rng = Pcg32::seeded(cfg.sampling.seed);
+
+    let mut ctx = prompt.to_vec();
+    let mut pending: Vec<VecDeque<Pending>> = (0..n - 1).map(|_| VecDeque::new()).collect();
+    let mut accept_lengths: Vec<u32> = Vec::new();
+    let mut stage_accepts: Vec<Vec<u32>> = vec![Vec::new(); n - 1];
+
+    'outer: while ctx.len() - prompt.len() < cfg.max_new {
+        let committed = ctx.len() - prompt.len();
+        let remaining = cfg.max_new - committed;
+        let in_flight: usize = pending.iter().map(|p| p.len()).sum();
+        // Flush mode: the pipeline already holds enough tokens to finish the
+        // request (or drafting would overflow the context) — stop drafting
+        // and fire every non-empty stage regardless of thresholds.
+        let draft_room = seq_cap.saturating_sub(ctx.len() + in_flight);
+        let flush = in_flight >= remaining || draft_room == 0;
+
+        let mut fired = false;
+
+        // ---- 1. draft with M_n into the deepest queue --------------------
+        let deepest = n - 2;
+        if !flush && pending[deepest].len() < cfg.thresholds[deepest].max(1) {
+            let want = cfg.draft_k.min(remaining.saturating_sub(in_flight)).min(draft_room);
+            if want > 0 {
+                let mut frontier = flat_sequence(&ctx, &pending);
+                for _ in 0..want {
+                    let logits = models[n - 1].forward(&frontier)?;
+                    let mut q = dist_row(&logits, frontier.len() - 1, &cfg.sampling);
+                    let tok = pick(&mut q, &cfg.sampling, cfg.rule, &mut rng);
+                    pending[deepest].push_back(Pending { tok, q });
+                    frontier.push(tok);
+                }
+                fired = true;
+            }
+        }
+
+        // ---- 2. verification sweep, deepest stage first ------------------
+        for j in (0..n - 1).rev() {
+            if pending[j].is_empty() {
+                continue;
+            }
+            let ready = pending[j].len() >= cfg.thresholds[j];
+            if !(ready || flush) {
+                continue;
+            }
+            let committed_now = verify_stage(
+                models, j, &mut ctx, &mut pending, cfg, &mut rng, &mut stage_accepts,
+            )?;
+            fired = true;
+            if j == 0 {
+                accept_lengths.push(committed_now as u32);
+                if ctx.len() - prompt.len() >= cfg.max_new {
+                    break 'outer;
+                }
+            }
+        }
+
+        // ---- 3. deadlock backstop ----------------------------------------
+        if !fired {
+            // Nothing met its threshold and drafting was blocked: force the
+            // deepest non-empty stage (guaranteed progress).
+            if let Some(j) = (0..n - 1).rev().find(|&j| !pending[j].is_empty()) {
+                let committed_now = verify_stage(
+                    models, j, &mut ctx, &mut pending, cfg, &mut rng, &mut stage_accepts,
+                )?;
+                if j == 0 {
+                    accept_lengths.push(committed_now as u32);
+                }
+            } else {
+                anyhow::bail!("decode stalled: empty pipeline but no draft room");
+            }
+        }
+    }
+
+    ctx.truncate(prompt.len() + cfg.max_new);
+    Ok(GenerationOutput {
+        tokens: ctx[prompt.len()..].to_vec(),
+        wall: start.elapsed(),
+        forward_passes: models.iter().map(|m| m.calls()).collect(),
+        forward_time: models.iter().map(|m| m.total_time()).collect(),
+        accept_lengths,
+        stage_accept_lengths: stage_accepts,
+    })
+}
+
+/// The logical token sequence: ctx followed by every pending queue in
+/// position order.
+fn flat_sequence(ctx: &[Token], pending: &[VecDeque<Pending>]) -> Vec<Token> {
+    let mut seq = ctx.to_vec();
+    for queue in pending {
+        seq.extend(queue.iter().map(|p| p.tok));
+    }
+    seq
+}
+
+/// Run verifier `j` over its queue. Returns the number of tokens committed
+/// (only non-zero for `j == 0`).
+#[allow(clippy::too_many_arguments)]
+fn verify_stage(
+    models: &[Arc<dyn LanguageModel>],
+    j: usize,
+    ctx: &mut Vec<Token>,
+    pending: &mut [VecDeque<Pending>],
+    cfg: &PolyConfig,
+    rng: &mut Pcg32,
+    stage_accepts: &mut [Vec<u32>],
+) -> Result<usize> {
+    // Input: everything up to and including pending[j].
+    let mut input = ctx.clone();
+    for queue in pending[..j].iter() {
+        input.extend(queue.iter().map(|p| p.tok));
+    }
+    let base = input.len(); // position of pending[j][0]
+    let block: Vec<Token> = pending[j].iter().map(|p| p.tok).collect();
+    let q_rows: Vec<Vec<f32>> = pending[j].iter().map(|p| p.q.clone()).collect();
+    input.extend(&block);
+
+    let logits = models[j].forward(&input)?;
+    let p_rows: Vec<Vec<f32>> = (0..block.len())
+        .map(|i| dist_row(&logits, base - 1 + i, &cfg.sampling))
+        .collect();
+
+    let BlockVerdict { accepted, replacement } =
+        verify_block(&block, &p_rows, &q_rows, cfg.rule, rng);
+    stage_accepts[j].push(accepted as u32);
+
+    // Emitted stream = accepted prefix (+ replacement | bonus), each with
+    // proposal distribution p_j (the verifier's own rows).
+    let mut emitted: Vec<Pending> = Vec::with_capacity(accepted + 1);
+    for i in 0..accepted {
+        emitted.push(Pending { tok: block[i], q: p_rows[i].clone() });
+    }
+    let rejected = replacement.is_some();
+    if let Some(r) = replacement {
+        emitted.push(Pending { tok: r, q: p_rows[accepted].clone() });
+    } else {
+        // Full acceptance: free bonus token from the row after the block.
+        let mut p = dist_row(&logits, base + block.len() - 1, &cfg.sampling);
+        let bonus = pick(&mut p, &cfg.sampling, cfg.rule, rng);
+        emitted.push(Pending { tok: bonus, q: p });
+    }
+
+    // A rejection invalidates every later position in the pipeline.
+    if rejected {
+        for queue in pending[j..].iter_mut() {
+            queue.clear();
+        }
+    } else {
+        pending[j].clear();
+    }
+
+    if j == 0 {
+        let committed = emitted.len();
+        ctx.extend(emitted.into_iter().map(|p| p.tok));
+        Ok(committed)
+    } else {
+        for p in emitted {
+            pending[j - 1].push_back(p);
+        }
+        Ok(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::autoregressive;
+    use crate::spec::mock::{mock_chain, MockModel};
+
+    fn greedy_cfg(n: usize, max_new: usize) -> PolyConfig {
+        let mut cfg = PolyConfig::for_chain(n, 4, 4, max_new);
+        cfg.rule = VerifyRule::Greedy;
+        cfg.sampling = SamplingParams { temperature: 0.0, ..Default::default() };
+        cfg
+    }
+
+    #[test]
+    fn greedy_three_model_matches_target_greedy() {
+        // THE lossless-cascade correctness check: committed output must be
+        // token-for-token the target's own greedy decode.
+        let chain = mock_chain(512, 24, 11);
+        let cfg = greedy_cfg(3, 48);
+        let out = generate(&chain, &[3, 1, 4], &cfg).unwrap();
+        let ar = autoregressive::generate(
+            chain[0].as_ref(),
+            &[3, 1, 4],
+            48,
+            &cfg.sampling,
+        )
+        .unwrap();
+        assert_eq!(out.tokens, ar.tokens);
+    }
+
+    #[test]
+    fn greedy_four_model_matches_target_greedy() {
+        let mut chain = mock_chain(512, 24, 13);
+        chain.push(Arc::new(MockModel::new("mock-tiny", 512, 24, 13, 1.4)));
+        let cfg = greedy_cfg(4, 40);
+        let out = generate(&chain, &[9, 2], &cfg).unwrap();
+        let ar = autoregressive::generate(chain[0].as_ref(), &[9, 2], 40, &cfg.sampling)
+            .unwrap();
+        assert_eq!(out.tokens, ar.tokens);
+    }
+
+    #[test]
+    fn produces_exact_length() {
+        let chain = mock_chain(512, 24, 7);
+        let cfg = PolyConfig::for_chain(3, 5, 6, 33);
+        let out = generate(&chain, &[1, 2], &cfg).unwrap();
+        assert_eq!(out.tokens.len(), 33);
+    }
+
+    #[test]
+    fn target_forwards_fewer_than_tokens() {
+        let chain = mock_chain(512, 24, 7);
+        let cfg = PolyConfig::for_chain(3, 4, 6, 64);
+        let out = generate(&chain, &[1, 2], &cfg).unwrap();
+        assert!(
+            out.forward_passes[0] < 64 / 2,
+            "target forwards {:?}",
+            out.forward_passes
+        );
+        assert!(out.mean_accept() > 2.0, "mu {}", out.mean_accept());
+    }
+
+    #[test]
+    fn n2_matches_dualistic_statistics() {
+        // polybasic with n=2 should behave like the dedicated dualistic
+        // implementation (same acceptance behaviour, exact greedy equality).
+        let chain = mock_chain(512, 24, 19);
+        let two: Vec<Arc<dyn LanguageModel>> = vec![chain[0].clone(), chain[2].clone()];
+        let mut cfg = PolyConfig::for_chain(2, 4, 4, 40);
+        cfg.rule = VerifyRule::Greedy;
+        cfg.sampling = SamplingParams { temperature: 0.0, ..Default::default() };
+        let poly = generate(&two, &[8, 8], &cfg).unwrap();
+        let dual = crate::spec::dualistic::generate(
+            chain[0].as_ref(),
+            chain[2].as_ref(),
+            &[8, 8],
+            &crate::spec::dualistic::DualisticConfig {
+                draft_k: 4,
+                rule: VerifyRule::Greedy,
+                sampling: cfg.sampling,
+                max_new: 40,
+            },
+        )
+        .unwrap();
+        assert_eq!(poly.tokens, dual.tokens);
+    }
+
+    #[test]
+    fn speculative_sampling_reproducible() {
+        let chain = mock_chain(512, 24, 23);
+        let mut cfg = PolyConfig::for_chain(3, 4, 6, 32);
+        cfg.sampling.seed = 77;
+        let a = generate(&chain, &[5], &cfg).unwrap();
+        let b = generate(&chain, &[5], &cfg).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    /// Statistical losslessness: the marginal distribution of the first
+    /// generated token under polybasic speculative sampling must match
+    /// direct target sampling.
+    #[test]
+    fn speculative_first_token_distribution_matches_target() {
+        let chain = mock_chain(512, 12, 31);
+        let prompt = [4, 2, 4];
+        let trials = 4000;
+        let mut poly_counts = vec![0f64; 12];
+        let mut ar_counts = vec![0f64; 12];
+        for s in 0..trials {
+            let mut cfg = PolyConfig::for_chain(3, 3, 2, 1);
+            cfg.sampling.seed = s;
+            let out = generate(&chain, &prompt, &cfg).unwrap();
+            poly_counts[out.tokens[0] as usize] += 1.0;
+            let ar = autoregressive::generate(
+                chain[0].as_ref(),
+                &prompt,
+                1,
+                &SamplingParams { seed: s + 500_000, ..Default::default() },
+            )
+            .unwrap();
+            ar_counts[ar.tokens[0] as usize] += 1.0;
+        }
+        // Total-variation distance between the two empirical distributions.
+        let tv: f64 = poly_counts
+            .iter()
+            .zip(&ar_counts)
+            .map(|(&a, &b)| (a - b).abs())
+            .sum::<f64>()
+            / (2.0 * trials as f64);
+        assert!(tv < 0.05, "total variation {tv} too large — lossless property violated?");
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let chain = mock_chain(64, 24, 7);
+        let cfg = PolyConfig::for_chain(3, 4, 4, 64); // doesn't fit in 64 ctx
+        assert!(generate(&chain, &[1], &cfg).is_err());
+        let mut cfg2 = PolyConfig::for_chain(3, 4, 4, 8);
+        cfg2.thresholds.pop();
+        assert!(generate(&chain, &[1], &cfg2).is_err());
+    }
+}

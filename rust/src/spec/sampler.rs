@@ -1,0 +1,163 @@
+//! Token sampling: temperature / top-k / top-p categorical sampling and the
+//! residual-distribution resampling used on speculative rejection.
+
+use super::rng::Pcg32;
+use super::types::{SamplingParams, Token};
+
+/// Sample from a normalized probability vector.
+pub fn sample_categorical(probs: &[f32], rng: &mut Pcg32) -> Token {
+    let u = rng.next_f32();
+    let mut acc = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i as Token;
+        }
+    }
+    // Float round-off: fall back to the last token with mass.
+    probs
+        .iter()
+        .rposition(|&p| p > 0.0)
+        .unwrap_or(probs.len() - 1) as Token
+}
+
+/// Argmax with deterministic (lowest-index) tie-breaking.
+pub fn argmax(xs: &[f32]) -> Token {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as Token
+}
+
+/// Apply top-k / top-p filtering to a normalized distribution in place,
+/// renormalizing afterwards. `top_k == 0` and `top_p >= 1.0` disable the
+/// respective filter.
+pub fn filter_top_kp(probs: &mut [f32], top_k: usize, top_p: f32) {
+    let n = probs.len();
+    if (top_k == 0 || top_k >= n) && top_p >= 1.0 {
+        return;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+
+    let mut keep = vec![false; n];
+    let mut cum = 0.0f32;
+    for (rank, &i) in idx.iter().enumerate() {
+        if top_k > 0 && rank >= top_k {
+            break;
+        }
+        keep[i] = true;
+        cum += probs[i];
+        if top_p < 1.0 && cum >= top_p {
+            break;
+        }
+    }
+    let mut sum = 0.0f32;
+    for i in 0..n {
+        if !keep[i] {
+            probs[i] = 0.0;
+        }
+        sum += probs[i];
+    }
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for p in probs.iter_mut() {
+            *p *= inv;
+        }
+    }
+}
+
+/// Sample a token from `logits`-derived `probs` under `params`.
+/// `probs` must already be softmaxed at `params.temperature`.
+pub fn sample(probs: &mut [f32], params: &SamplingParams, rng: &mut Pcg32) -> Token {
+    if params.temperature <= 1e-3 {
+        return argmax(probs);
+    }
+    filter_top_kp(probs, params.top_k, params.top_p);
+    sample_categorical(probs, rng)
+}
+
+/// Residual distribution `norm(max(p - q, 0))` used when a speculative
+/// verifier rejects a proposal. Returns None if `p <= q` pointwise (then the
+/// caller samples from `p` directly — happens only with degenerate floats).
+pub fn residual(p: &[f32], q: &[f32]) -> Option<Vec<f32>> {
+    debug_assert_eq!(p.len(), q.len());
+    let mut r: Vec<f32> = p.iter().zip(q).map(|(&a, &b)| (a - b).max(0.0)).collect();
+    let sum: f32 = r.iter().sum();
+    if sum <= 0.0 {
+        return None;
+    }
+    let inv = 1.0 / sum;
+    for x in &mut r {
+        *x *= inv;
+    }
+    Some(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categorical_respects_mass() {
+        let mut rng = Pcg32::seeded(5);
+        let probs = [0.0f32, 0.7, 0.3, 0.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..20_000 {
+            counts[sample_categorical(&probs, &mut rng) as usize] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[3], 0);
+        let f1 = counts[1] as f64 / 20_000.0;
+        assert!((f1 - 0.7).abs() < 0.02, "{f1}");
+    }
+
+    #[test]
+    fn argmax_ties_to_lowest() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn top_k_keeps_k() {
+        let mut p = vec![0.1, 0.4, 0.3, 0.2];
+        filter_top_kp(&mut p, 2, 1.0);
+        assert_eq!(p.iter().filter(|&&x| x > 0.0).count(), 2);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[1] > p[2] && p[2] == 0.0 || p[2] > 0.0);
+    }
+
+    #[test]
+    fn top_p_cuts_tail() {
+        let mut p = vec![0.5, 0.3, 0.1, 0.1];
+        filter_top_kp(&mut p, 0, 0.75);
+        // 0.5 + 0.3 = 0.8 >= 0.75 -> keep two.
+        assert_eq!(p.iter().filter(|&&x| x > 0.0).count(), 2);
+    }
+
+    #[test]
+    fn residual_is_normalized() {
+        let p = [0.5f32, 0.4, 0.1];
+        let q = [0.6f32, 0.2, 0.2];
+        let r = residual(&p, &q).unwrap();
+        assert!((r.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(r[0], 0.0);
+        assert!(r[1] > 0.0 && r[2] == 0.0);
+    }
+
+    #[test]
+    fn residual_none_when_equal() {
+        let p = [0.5f32, 0.5];
+        assert!(residual(&p, &p).is_none());
+    }
+
+    #[test]
+    fn greedy_temperature_uses_argmax() {
+        let mut rng = Pcg32::seeded(1);
+        let params = SamplingParams { temperature: 0.0, ..Default::default() };
+        let mut p = vec![0.2, 0.5, 0.3];
+        assert_eq!(sample(&mut p, &params, &mut rng), 1);
+    }
+}

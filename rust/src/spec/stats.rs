@@ -1,0 +1,191 @@
+//! Acceptance / latency statistics: streaming moments, histograms,
+//! per-task aggregation. Feeds both the theory layer (L_i, sigma^2
+//! estimates) and the benchmark tables.
+
+/// Streaming mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (n-1).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n;
+        self.mean += d * other.n as f64 / n;
+        self.n += other.n;
+    }
+}
+
+/// Fixed-bucket histogram for small non-negative integers (accept lengths).
+#[derive(Debug, Clone)]
+pub struct IntHistogram {
+    buckets: Vec<u64>,
+    overflow: u64,
+}
+
+impl IntHistogram {
+    pub fn new(max: usize) -> Self {
+        Self { buckets: vec![0; max + 1], overflow: 0 }
+    }
+
+    pub fn push(&mut self, v: usize) {
+        match self.buckets.get_mut(v) {
+            Some(b) => *b += 1,
+            None => self.overflow += 1,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.overflow
+    }
+
+    pub fn bucket(&self, v: usize) -> u64 {
+        self.buckets.get(v).copied().unwrap_or(0)
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Normalized frequencies (including overflow in the divisor).
+    pub fn pmf(&self) -> Vec<f64> {
+        let n = self.count().max(1) as f64;
+        self.buckets.iter().map(|&b| b as f64 / n).collect()
+    }
+
+    /// Render a terminal bar chart (used by the fig4 bench).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.buckets.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &b) in self.buckets.iter().enumerate() {
+            let bar = "#".repeat((b as usize * width).div_ceil(max as usize).min(width));
+            out.push_str(&format!("{i:>3} | {bar} {b}\n"));
+        }
+        if self.overflow > 0 {
+            out.push_str(&format!(" >{} | {}\n", self.buckets.len() - 1, self.overflow));
+        }
+        out
+    }
+}
+
+/// Aggregate over one (method, family, task) benchmark cell.
+#[derive(Debug, Clone, Default)]
+pub struct CellStats {
+    pub accept: Welford,
+    pub wall_s: f64,
+    pub tokens: u64,
+    pub target_forwards: u64,
+}
+
+impl CellStats {
+    /// Paper's mean acceptance length μ (tokens per target forward).
+    pub fn mu(&self) -> f64 {
+        self.accept.mean()
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.wall_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 4.0, 2.0, 8.0, 5.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_combined() {
+        let xs: Vec<f64> = (0..50).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut a = Welford::default();
+        let mut b = Welford::default();
+        let mut all = Welford::default();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.variance() - all.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn histogram_counts_and_overflow() {
+        let mut h = IntHistogram::new(4);
+        for v in [0, 1, 1, 4, 9] {
+            h.push(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.bucket(1), 2);
+        assert_eq!(h.pmf()[1], 0.4);
+        assert!(h.ascii(20).contains('#'));
+    }
+}

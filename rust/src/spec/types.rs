@@ -1,0 +1,231 @@
+//! Core types shared by the speculative-decoding algorithms.
+//!
+//! The algorithm layer (`spec::*`) depends only on the [`LanguageModel`]
+//! trait — never on PJRT — so every algorithm is unit-testable against
+//! [`crate::spec::mock::MockModel`] and runs unchanged against the real
+//! AOT-compiled engines in `runtime::`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+pub type Token = i32;
+
+/// Dense `[seq, vocab]` logits returned by one forward pass.
+#[derive(Debug, Clone)]
+pub struct Logits {
+    data: Vec<f32>,
+    seq: usize,
+    vocab: usize,
+}
+
+impl Logits {
+    pub fn new(data: Vec<f32>, seq: usize, vocab: usize) -> Self {
+        assert_eq!(data.len(), seq * vocab, "logits size mismatch");
+        Self { data, seq, vocab }
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Logits row for position `t` (the distribution over the *next* token
+    /// after consuming `tokens[0..=t]`).
+    pub fn row(&self, t: usize) -> &[f32] {
+        assert!(t < self.seq, "position {t} out of range {}", self.seq);
+        &self.data[t * self.vocab..(t + 1) * self.vocab]
+    }
+
+    /// Softmax of row `t` at the given temperature.
+    pub fn probs(&self, t: usize, temperature: f32) -> Vec<f32> {
+        softmax(self.row(t), temperature)
+    }
+}
+
+/// Numerically-stable softmax with temperature.
+pub fn softmax(logits: &[f32], temperature: f32) -> Vec<f32> {
+    let temp = temperature.max(1e-4);
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - m) / temp).exp()).collect();
+    let sum: f32 = out.iter().sum();
+    let inv = 1.0 / sum;
+    for p in &mut out {
+        *p *= inv;
+    }
+    out
+}
+
+/// A causal full-context scorer: `tokens[0..len] -> logits[len, vocab]`.
+///
+/// Deliberately NOT `Send + Sync`: the PJRT-backed engine is thread-bound
+/// (`Rc` internals). Cross-thread use goes through
+/// [`crate::runtime::host::RemoteModel`], which IS `Send + Sync` and proxies
+/// to the engine thread. Per-model call/time counters feed the theory layer
+/// (`F_i`, `T_i` in Lemma 3.1).
+pub trait LanguageModel {
+    fn name(&self) -> &str;
+
+    /// Maximum context length the scorer accepts.
+    fn seq_len(&self) -> usize;
+
+    fn vocab(&self) -> usize;
+
+    /// Score `tokens` (len <= seq_len). `logits.row(t)` is the next-token
+    /// distribution after `tokens[0..=t]`; rows at `t >= tokens.len()` are
+    /// unspecified.
+    fn forward(&self, tokens: &[Token]) -> anyhow::Result<Logits>;
+
+    /// Forward passes since the last [`reset_counters`](Self::reset_counters).
+    fn calls(&self) -> u64;
+
+    /// Wall time spent inside `forward` since the last reset.
+    fn total_time(&self) -> Duration;
+
+    fn reset_counters(&self);
+
+    /// Best-known per-forward cost in ms (measured if available). This is
+    /// `T_i` in the paper's cost model.
+    fn cost_ms(&self) -> f64 {
+        let calls = self.calls();
+        if calls == 0 {
+            0.0
+        } else {
+            self.total_time().as_secs_f64() * 1e3 / calls as f64
+        }
+    }
+}
+
+/// Shared instrumentation for `LanguageModel` implementations.
+#[derive(Debug, Default)]
+pub struct ModelCounters {
+    calls: AtomicU64,
+    nanos: AtomicU64,
+}
+
+impl ModelCounters {
+    pub fn record(&self, elapsed: Duration) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn total_time(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
+    }
+
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+        self.nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+/// How proposed tokens are checked against a verifier's distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VerifyRule {
+    /// Accept iff the token equals the verifier's argmax. Deterministic;
+    /// output equals the verifier's greedy decode.
+    Greedy,
+    /// Leviathan-style rejection sampling: accept with `min(1, p/q)`,
+    /// resample from `norm(max(p-q, 0))` on rejection. Lossless.
+    Speculative,
+    /// Typical acceptance (Medusa-style): accept if `p[x] >= eps * max(p)`.
+    /// NOT distribution-preserving; included as the paper discusses it.
+    Typical { eps: f32 },
+}
+
+/// Sampling configuration for a generation.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    pub top_k: usize, // 0 = disabled
+    pub top_p: f32,   // 1.0 = disabled
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+/// Outcome of one generation, with the measurements the paper reports.
+#[derive(Debug, Clone)]
+pub struct GenerationOutput {
+    pub tokens: Vec<Token>,
+    /// Wall-clock for the whole decode.
+    pub wall: Duration,
+    /// Per-model forward-pass counts, chain order (target first) — `F_i`.
+    pub forward_passes: Vec<u64>,
+    /// Per-model cumulative forward time, chain order.
+    pub forward_time: Vec<Duration>,
+    /// Acceptance lengths observed at the *target* per target forward — the
+    /// paper's `μ` is `accept_lengths.mean()`.
+    pub accept_lengths: Vec<u32>,
+    /// Acceptance lengths at each intermediate verifier (chain order,
+    /// excluding target), for the theory layer's `L_i` estimates.
+    pub stage_accept_lengths: Vec<Vec<u32>>,
+}
+
+impl GenerationOutput {
+    pub fn mean_accept(&self) -> f64 {
+        mean_u32(&self.accept_lengths)
+    }
+}
+
+pub(crate) fn mean_u32(xs: &[u32]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_rows() {
+        let l = Logits::new(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], 2, 3);
+        assert_eq!(l.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(l.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_temperature_sharpens() {
+        let hot = softmax(&[1.0, 2.0], 2.0);
+        let cold = softmax(&[1.0, 2.0], 0.5);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let p = softmax(&[-1e30, 0.0, 1e3], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[0] >= 0.0 && p[2] <= 1.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = ModelCounters::default();
+        c.record(Duration::from_millis(2));
+        c.record(Duration::from_millis(4));
+        assert_eq!(c.calls(), 2);
+        assert_eq!(c.total_time(), Duration::from_millis(6));
+        c.reset();
+        assert_eq!(c.calls(), 0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Verification rules: how a verifier model checks proposed tokens.
+//!
+//! The paper's three verification strategies (§2):
+//!   * greedy matching      — deterministic, output equals the verifier's
+//!                            greedy decode;
+//!   * speculative sampling — Leviathan et al. 2023 rejection rule, exactly
+//!                            preserves the verifier's distribution;
+//!   * typical acceptance   — Medusa-style threshold, lossy but fast.
+//!
+//! Chained losslessness (used by `polybasic.rs`): if a token stream entering
+//! stage `j` is distributed as `q` (the distribution of the stage below) and
+//! stage `j` applies the speculative rule against its own `p`, the output
+//! stream is distributed exactly as `p`.  Induction over stages gives
+//! target-exact sampling for the whole polybasic chain.
+
+use super::rng::Pcg32;
+use super::sampler::{argmax, residual, sample_categorical};
+use super::types::{Token, VerifyRule};
+
+/// Outcome of verifying a single proposed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenVerdict {
+    Accepted,
+    /// Rejected; the verifier emits `replacement` in its place (sampled from
+    /// the residual distribution under the speculative rule, or the argmax
+    /// under greedy).
+    Rejected { replacement: Token },
+}
+
+/// Verify one token `x` proposed from distribution `q` against the
+/// verifier's distribution `p` (both normalized, same length).
+pub fn verify_token(
+    x: Token,
+    p: &[f32],
+    q: &[f32],
+    rule: VerifyRule,
+    rng: &mut Pcg32,
+) -> TokenVerdict {
+    debug_assert_eq!(p.len(), q.len());
+    let xi = x as usize;
+    match rule {
+        VerifyRule::Greedy => {
+            let best = argmax(p);
+            if best == x {
+                TokenVerdict::Accepted
+            } else {
+                TokenVerdict::Rejected { replacement: best }
+            }
+        }
+        VerifyRule::Speculative => {
+            let px = p.get(xi).copied().unwrap_or(0.0);
+            let qx = q.get(xi).copied().unwrap_or(0.0).max(1e-20);
+            let accept = px >= qx || rng.next_f32() < px / qx;
+            if accept {
+                TokenVerdict::Accepted
+            } else {
+                let replacement = match residual(p, q) {
+                    Some(r) => sample_categorical(&r, rng),
+                    None => sample_categorical(p, rng),
+                };
+                TokenVerdict::Rejected { replacement }
+            }
+        }
+        VerifyRule::Typical { eps } => {
+            let px = p.get(xi).copied().unwrap_or(0.0);
+            let pmax = p.iter().copied().fold(0.0f32, f32::max);
+            if px >= eps * pmax {
+                TokenVerdict::Accepted
+            } else {
+                TokenVerdict::Rejected { replacement: sample_categorical(p, rng) }
+            }
+        }
+    }
+}
+
+/// Result of verifying a block of proposed tokens in order.
+#[derive(Debug, Clone)]
+pub struct BlockVerdict {
+    /// Number of proposals accepted (prefix length).
+    pub accepted: usize,
+    /// Replacement emitted at the first rejection, if any.
+    pub replacement: Option<Token>,
+}
+
+/// Verify `tokens[i]` (proposed from `q_rows[i]`) against `p_rows[i]`
+/// sequentially; stop at the first rejection.
+pub fn verify_block(
+    tokens: &[Token],
+    p_rows: &[Vec<f32>],
+    q_rows: &[Vec<f32>],
+    rule: VerifyRule,
+    rng: &mut Pcg32,
+) -> BlockVerdict {
+    assert_eq!(tokens.len(), p_rows.len());
+    assert_eq!(tokens.len(), q_rows.len());
+    for (i, &tok) in tokens.iter().enumerate() {
+        match verify_token(tok, &p_rows[i], &q_rows[i], rule, rng) {
+            TokenVerdict::Accepted => continue,
+            TokenVerdict::Rejected { replacement } => {
+                return BlockVerdict { accepted: i, replacement: Some(replacement) };
+            }
+        }
+    }
+    BlockVerdict { accepted: tokens.len(), replacement: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(n: usize) -> Vec<f32> {
+        vec![1.0 / n as f32; n]
+    }
+
+    #[test]
+    fn greedy_accepts_argmax_only() {
+        let mut rng = Pcg32::seeded(0);
+        let p = vec![0.1, 0.6, 0.3];
+        assert_eq!(
+            verify_token(1, &p, &uniform(3), VerifyRule::Greedy, &mut rng),
+            TokenVerdict::Accepted
+        );
+        assert_eq!(
+            verify_token(0, &p, &uniform(3), VerifyRule::Greedy, &mut rng),
+            TokenVerdict::Rejected { replacement: 1 }
+        );
+    }
+
+    #[test]
+    fn speculative_always_accepts_when_p_dominates() {
+        let mut rng = Pcg32::seeded(0);
+        let p = vec![0.9, 0.1];
+        let q = vec![0.5, 0.5];
+        for _ in 0..100 {
+            assert_eq!(
+                verify_token(0, &p, &q, VerifyRule::Speculative, &mut rng),
+                TokenVerdict::Accepted
+            );
+        }
+    }
+
+    /// The fundamental losslessness property: accept-or-resample output is
+    /// distributed exactly as p, for ANY proposal q. Chi-square-ish check.
+    #[test]
+    fn speculative_preserves_target_distribution() {
+        let mut rng = Pcg32::seeded(42);
+        let p = vec![0.5f32, 0.3, 0.15, 0.05];
+        let q = vec![0.1f32, 0.2, 0.3, 0.4]; // very different proposal
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            let x = sample_categorical(&q, &mut rng);
+            let out = match verify_token(x, &p, &q, VerifyRule::Speculative, &mut rng) {
+                TokenVerdict::Accepted => x,
+                TokenVerdict::Rejected { replacement } => replacement,
+            };
+            counts[out as usize] += 1;
+        }
+        for i in 0..4 {
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - p[i] as f64).abs() < 0.01, "token {i}: {f} vs {}", p[i]);
+        }
+    }
+
+    #[test]
+    fn typical_thresholds() {
+        let mut rng = Pcg32::seeded(0);
+        let p = vec![0.05, 0.65, 0.3];
+        // p[0]=0.05 < 0.5*0.65 -> rejected
+        let v = verify_token(0, &p, &uniform(3), VerifyRule::Typical { eps: 0.5 }, &mut rng);
+        assert!(matches!(v, TokenVerdict::Rejected { .. }));
+        // p[2]=0.3 < 0.5*0.65=0.325 -> rejected; p[1] accepted
+        let v = verify_token(1, &p, &uniform(3), VerifyRule::Typical { eps: 0.5 }, &mut rng);
+        assert_eq!(v, TokenVerdict::Accepted);
+    }
+
+    #[test]
+    fn block_stops_at_first_rejection() {
+        let mut rng = Pcg32::seeded(0);
+        let p = vec![vec![0.9f32, 0.1], vec![0.1, 0.9], vec![0.9, 0.1]];
+        let q = vec![uniform(2), uniform(2), uniform(2)];
+        // Greedy: token 0 matches argmax row0 (0), token 0 vs row1 argmax 1 -> reject
+        let v = verify_block(&[0, 0, 0], &p, &q, VerifyRule::Greedy, &mut rng);
+        assert_eq!(v.accepted, 1);
+        assert_eq!(v.replacement, Some(1));
+    }
+
+    #[test]
+    fn block_full_accept_has_no_replacement() {
+        let mut rng = Pcg32::seeded(0);
+        let p = vec![vec![0.9f32, 0.1]; 3];
+        let q = vec![uniform(2); 3];
+        let v = verify_block(&[0, 0, 0], &p, &q, VerifyRule::Greedy, &mut rng);
+        assert_eq!(v.accepted, 3);
+        assert!(v.replacement.is_none());
+    }
+}

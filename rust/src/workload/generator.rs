@@ -1,0 +1,85 @@
+//! Request-stream generation: SpecBench sweeps (batch-1 latency, the
+//! paper's protocol) and Poisson arrival streams for the serving example.
+
+use crate::spec::rng::Pcg32;
+
+use super::tasks::{make_query, Query, TaskKind, ALL_TASKS};
+
+/// A fixed benchmark suite: `queries_per_task` queries for each category,
+/// deterministic in (task, index).
+pub fn specbench_suite(queries_per_task: usize, vocab: usize) -> Vec<Query> {
+    let mut out = Vec::with_capacity(queries_per_task * ALL_TASKS.len());
+    for task in ALL_TASKS {
+        for i in 0..queries_per_task {
+            out.push(make_query(task, i as u64, vocab));
+        }
+    }
+    out
+}
+
+/// Queries for one task only.
+pub fn task_queries(task: TaskKind, n: usize, vocab: usize) -> Vec<Query> {
+    (0..n).map(|i| make_query(task, i as u64, vocab)).collect()
+}
+
+/// A timed arrival: offset from stream start plus the query.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub at: std::time::Duration,
+    pub query: Query,
+}
+
+/// Poisson arrival stream with task mix drawn uniformly from all six
+/// categories — drives the end-to-end serving example.
+pub struct ArrivalStream {
+    rng: Pcg32,
+    rate_per_s: f64,
+    vocab: usize,
+    t: f64,
+    idx: u64,
+}
+
+impl ArrivalStream {
+    pub fn new(rate_per_s: f64, vocab: usize, seed: u64) -> Self {
+        assert!(rate_per_s > 0.0);
+        Self { rng: Pcg32::seeded(seed), rate_per_s, vocab, t: 0.0, idx: 0 }
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = Arrival;
+
+    fn next(&mut self) -> Option<Arrival> {
+        self.t += self.rng.next_exp(self.rate_per_s);
+        let task = ALL_TASKS[self.rng.next_below(ALL_TASKS.len() as u32) as usize];
+        let q = make_query(task, self.idx, self.vocab);
+        self.idx += 1;
+        Some(Arrival { at: std::time::Duration::from_secs_f64(self.t), query: q })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_covers_all_tasks() {
+        let suite = specbench_suite(3, 256);
+        assert_eq!(suite.len(), 18);
+        for task in ALL_TASKS {
+            assert_eq!(suite.iter().filter(|q| q.task == task).count(), 3);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_plausible() {
+        let stream = ArrivalStream::new(10.0, 256, 1);
+        let arrivals: Vec<_> = stream.take(200).collect();
+        for w in arrivals.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        // 200 arrivals at 10/s should span roughly 20s.
+        let span = arrivals.last().unwrap().at.as_secs_f64();
+        assert!(span > 10.0 && span < 40.0, "{span}");
+    }
+}

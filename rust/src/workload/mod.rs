@@ -1,0 +1,10 @@
+//! SpecBench-style workload suite: task profiles matching the paper's six
+//! evaluation categories, a byte-level tokenizer, and request generators
+//! (fixed suites + Poisson arrival streams).
+
+pub mod generator;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use generator::{specbench_suite, task_queries, ArrivalStream};
+pub use tasks::{Query, TaskKind, ALL_TASKS};

@@ -1,0 +1,46 @@
+//! Byte-level tokenizer over the synthetic vocabulary.
+//!
+//! The model families use V = 256, so UTF-8 bytes map 1:1 onto token ids —
+//! prompts can be real text while staying entirely within the synthetic
+//! vocabulary.  (Token semantics are irrelevant to the system under test;
+//! every layer treats ids as opaque.  See DESIGN.md §3.)
+
+use crate::spec::types::Token;
+
+/// Encode text as byte tokens, clamped to the model vocabulary.
+pub fn encode(text: &str, vocab: usize) -> Vec<Token> {
+    text.bytes().map(|b| (b as usize % vocab) as Token).collect()
+}
+
+/// Decode byte tokens back to a lossy string (non-UTF8 bytes become '.').
+pub fn decode(tokens: &[Token]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            let b = t.clamp(0, 255) as u8;
+            if b.is_ascii_graphic() || b == b' ' {
+                b as char
+            } else {
+                '.'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let text = "Solve: 12 + 35 = ?";
+        let toks = encode(text, 256);
+        assert_eq!(decode(&toks), text);
+    }
+
+    #[test]
+    fn clamps_to_vocab() {
+        let toks = encode("é", 100); // multi-byte utf-8, bytes >= 100
+        assert!(toks.iter().all(|&t| (t as usize) < 100));
+    }
+}

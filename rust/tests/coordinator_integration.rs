@@ -1,0 +1,103 @@
+//! End-to-end coordinator tests over the real artifacts: the full
+//! router -> batcher -> worker -> engine path.
+
+use polyspec::coordinator::{Method, Server, ServerConfig};
+use polyspec::workload::tasks::{make_query, TaskKind};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn server() -> Server {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Server::start(ServerConfig::new(dir, "v7b")).expect("server start")
+}
+
+#[test]
+fn serves_all_methods_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = server();
+    let mut rxs = Vec::new();
+    for (i, method) in [
+        Method::Polybasic { draft_k: 6, mu: 8 },
+        Method::Dualistic { draft_k: 4 },
+        Method::Autoregressive,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let q = make_query(TaskKind::Qa, i as u64, 256);
+        let rx = server
+            .submit(q.prompt, 16, method, Some(TaskKind::Qa))
+            .expect("submit");
+        rxs.push((method, rx));
+    }
+    for (method, rx) in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(300)).expect("response");
+        assert_eq!(resp.tokens.len(), 16, "{method:?}");
+        assert!(resp.tokens.iter().all(|&t| (0..256).contains(&t)));
+        assert!(resp.service_time.as_millis() > 0);
+    }
+    assert!(server.quiesce(std::time::Duration::from_secs(10)));
+    // All KV released once the queue is drained.
+    assert_eq!(server.kv_utilization(), 0.0);
+    let metrics = server.shutdown();
+    assert_eq!(
+        metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+        3
+    );
+    let snap = metrics.snapshot().to_string();
+    assert!(snap.contains("tokens_generated"));
+}
+
+#[test]
+fn rejects_oversized_and_counts_it() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = server();
+    let err = server
+        .submit(vec![1; 150], 100, Method::Polybasic { draft_k: 6, mu: 8 }, None)
+        .expect_err("should reject");
+    let msg = format!("{err}");
+    assert!(msg.contains("context overflow"), "{msg}");
+    let metrics = server.shutdown();
+    assert_eq!(
+        metrics.requests_rejected.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+#[test]
+fn concurrent_submissions_all_complete() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = server();
+    let n = 6;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let task = polyspec::workload::ALL_TASKS[i % 6];
+            let q = make_query(task, i as u64, 256);
+            server
+                .submit(q.prompt, 12, Method::Polybasic { draft_k: 6, mu: 8 }, Some(task))
+                .expect("submit")
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(600)).expect("response");
+        assert_eq!(resp.tokens.len(), 12);
+    }
+    let metrics = server.shutdown();
+    assert_eq!(
+        metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+        n as u64
+    );
+}

@@ -1,0 +1,140 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These are the end-to-end correctness signal: HLO text produced by
+//! python/compile/aot.py is loaded, compiled and executed by the rust
+//! runtime, and the polybasic system decodes with the real chain.
+
+use std::sync::Arc;
+
+use polyspec::runtime::EngineHost;
+use polyspec::spec::types::{LanguageModel, SamplingParams, VerifyRule};
+use polyspec::spec::{autoregressive, polybasic, PolyConfig};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn loads_and_scores() {
+    let dir = require_artifacts!();
+    let host = EngineHost::load(dir, "v7b", &["target"]).unwrap();
+    let target = host.model(0);
+    let logits = target.forward(&[1, 2, 3, 4, 5]).unwrap();
+    assert_eq!(logits.seq(), 5);
+    assert_eq!(logits.vocab(), target.vocab());
+    // Logits must be finite and non-degenerate.
+    let row = logits.row(4);
+    assert!(row.iter().all(|x| x.is_finite()));
+    let spread = row.iter().cloned().fold(f32::MIN, f32::max)
+        - row.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(spread > 0.1, "degenerate logits, spread {spread}");
+}
+
+#[test]
+fn causal_rows_stable_under_suffix_changes() {
+    // The padding contract: row t depends only on tokens[0..=t].
+    let dir = require_artifacts!();
+    let host = EngineHost::load(dir, "v7b", &["draft"]).unwrap();
+    let m = host.model(0);
+    let a = m.forward(&[5, 6, 7, 8]).unwrap();
+    let b = m.forward(&[5, 6, 7, 200]).unwrap();
+    for t in 0..3 {
+        let (ra, rb) = (a.row(t), b.row(t));
+        for (x, y) in ra.iter().zip(rb) {
+            assert!((x - y).abs() < 1e-4, "row {t} changed: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_calls() {
+    let dir = require_artifacts!();
+    let host = EngineHost::load(dir, "v7b", &["intermediate"]).unwrap();
+    let m = host.model(0);
+    let a = m.forward(&[9, 1, 1, 3]).unwrap();
+    let b = m.forward(&[9, 1, 1, 3]).unwrap();
+    assert_eq!(a.row(3), b.row(3));
+}
+
+#[test]
+fn polybasic_greedy_equals_target_greedy_on_real_chain() {
+    // THE system-level lossless check on real artifacts.
+    let dir = require_artifacts!();
+    let host = EngineHost::load(dir, "v7b", &["target", "intermediate", "draft"]).unwrap();
+    let chain = host.chain();
+    let prompt: Vec<i32> = vec![10, 20, 30, 40];
+    let max_new = 24;
+    let mut cfg = PolyConfig::for_chain(3, 4, 4, max_new);
+    cfg.rule = VerifyRule::Greedy;
+    cfg.sampling = SamplingParams { temperature: 0.0, ..Default::default() };
+    let poly = polybasic::generate(&chain, &prompt, &cfg).unwrap();
+    let ar = autoregressive::generate(chain[0].as_ref(), &prompt, max_new, &cfg.sampling)
+        .unwrap();
+    assert_eq!(poly.tokens, ar.tokens, "polybasic greedy diverged from target greedy");
+    assert!(
+        poly.forward_passes[0] < ar.forward_passes[0],
+        "no target-forward savings: {:?} vs {:?}",
+        poly.forward_passes,
+        ar.forward_passes
+    );
+}
+
+#[test]
+fn chain_members_are_genuinely_cheaper() {
+    // T_draft < T_int < T_target — the premise of the whole system.
+    let dir = require_artifacts!();
+    let host = EngineHost::load(dir, "v7b", &["target", "intermediate", "draft"]).unwrap();
+    let t_target = host.measure_cost_ms(0, 96, 5).unwrap();
+    let t_int = host.measure_cost_ms(1, 96, 5).unwrap();
+    let t_draft = host.measure_cost_ms(2, 96, 5).unwrap();
+    assert!(t_draft < t_int, "draft {t_draft}ms !< int {t_int}ms");
+    assert!(t_int < t_target, "int {t_int}ms !< target {t_target}ms");
+}
+
+#[test]
+fn speculative_sampling_reproducible_on_real_chain() {
+    let dir = require_artifacts!();
+    let host = EngineHost::load(dir, "v7b", &["target", "intermediate", "draft"]).unwrap();
+    let chain = host.chain();
+    let mut cfg = PolyConfig::for_chain(3, 4, 4, 16);
+    cfg.sampling.seed = 1234;
+    let a = polybasic::generate(&chain, &[7, 7, 7], &cfg).unwrap();
+    let b = polybasic::generate(&chain, &[7, 7, 7], &cfg).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert!(a.mean_accept() >= 1.0);
+    let vocab = chain[0].vocab() as i32;
+    assert!(a.tokens.iter().all(|&t| t >= 0 && t < vocab));
+}
+
+#[test]
+fn remote_handles_work_from_other_threads() {
+    let dir = require_artifacts!();
+    let host = EngineHost::load(dir, "v7b", &["draft"]).unwrap();
+    let m: Arc<polyspec::runtime::RemoteModel> = host.model(0);
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let toks = vec![i as i32 + 1, 2, 3];
+                m.forward(&toks).unwrap().row(2).to_vec()
+            })
+        })
+        .collect();
+    for h in handles {
+        let row = h.join().unwrap();
+        assert!(row.iter().all(|x| x.is_finite()));
+    }
+}

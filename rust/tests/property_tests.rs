@@ -1,0 +1,234 @@
+//! Property-based tests over coordinator + algorithm invariants.
+//!
+//! The offline crate set has no proptest, so these are hand-rolled
+//! properties: seeded random input generation (PCG32) with many iterations
+//! per property and failure messages that include the seed for replay.
+
+use std::sync::Arc;
+
+use polyspec::coordinator::api::{Method, Request};
+use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use polyspec::coordinator::kv::{KvConfig, KvManager};
+use polyspec::runtime::json::Json;
+use polyspec::spec::mock::{mock_chain, MockModel};
+use polyspec::spec::rng::Pcg32;
+use polyspec::spec::types::{softmax, LanguageModel, SamplingParams, VerifyRule};
+use polyspec::spec::verify::verify_block;
+use polyspec::spec::{autoregressive, polybasic, PolyConfig};
+use polyspec::workload::tasks::{make_query, ALL_TASKS};
+
+/// KV manager: under arbitrary admit/grow/release sequences the allocator
+/// never oversubscribes, never loses blocks, and ends balanced.
+#[test]
+fn prop_kv_manager_conserves_blocks() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::seeded(seed);
+        let total = 8 + rng.next_below(64) as usize;
+        let block = 1 + rng.next_below(32) as usize;
+        let mut mgr =
+            KvManager::new(KvConfig { block_size: block, total_blocks: total, bytes_per_token: 4 });
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            assert!(mgr.allocated_blocks() + mgr.free_blocks() == total, "seed {seed}: leak");
+            match rng.next_below(3) {
+                0 => {
+                    let tokens = 1 + rng.next_below((block * 6) as u32) as usize;
+                    next_id += 1;
+                    if mgr.admit(next_id, tokens).is_ok() {
+                        live.push((next_id, tokens));
+                    } else {
+                        assert!(
+                            !mgr.can_admit(tokens),
+                            "seed {seed}: admit failed though can_admit true"
+                        );
+                    }
+                }
+                1 => {
+                    if let Some(i) = live.last().map(|_| live.len() - 1) {
+                        let (id, old) = live[i];
+                        let newlen = old + rng.next_below(block as u32 * 2) as usize;
+                        if mgr.grow(id, newlen).is_ok() {
+                            live[i] = (id, newlen);
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u32) as usize;
+                        let (id, _) = live.remove(i);
+                        mgr.release(id).unwrap();
+                    }
+                }
+            }
+        }
+        for (id, _) in live {
+            mgr.release(id).unwrap();
+        }
+        assert_eq!(mgr.allocated_blocks(), 0, "seed {seed}: blocks leaked at drain");
+        assert_eq!(mgr.active_seqs(), 0);
+    }
+}
+
+/// Batcher: every pushed request is popped exactly once, regardless of
+/// batch sizing, priorities, or close timing.
+#[test]
+fn prop_batcher_no_loss_no_dup() {
+    for seed in 0..25u64 {
+        let mut rng = Pcg32::seeded(seed);
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 1 + rng.next_below(5) as usize,
+            max_wait: std::time::Duration::ZERO,
+        });
+        let n = 1 + rng.next_below(40) as usize;
+        let mut pushed = std::collections::BTreeSet::new();
+        for id in 0..n as u64 {
+            let mut r = Request::new(id, vec![1, 2], 4);
+            r.task = Some(ALL_TASKS[rng.next_below(6) as usize]);
+            r.method = Method::Autoregressive;
+            b.push(r);
+            pushed.insert(id);
+        }
+        b.close();
+        let mut popped = std::collections::BTreeSet::new();
+        while let Some(batch) = b.pop_batch() {
+            for (req, _) in batch {
+                assert!(popped.insert(req.id), "seed {seed}: duplicate {}", req.id);
+            }
+        }
+        assert_eq!(pushed, popped, "seed {seed}: lost requests");
+    }
+}
+
+/// verify_block invariants for random distributions and rules.
+#[test]
+fn prop_verify_block_invariants() {
+    let mut rng = Pcg32::seeded(99);
+    for case in 0..300 {
+        let vocab = 2 + rng.next_below(30) as usize;
+        let len = 1 + rng.next_below(8) as usize;
+        let mk_dist = |rng: &mut Pcg32| {
+            let logits: Vec<f32> = (0..vocab).map(|_| rng.next_f32() * 6.0 - 3.0).collect();
+            softmax(&logits, 1.0)
+        };
+        let p: Vec<Vec<f32>> = (0..len).map(|_| mk_dist(&mut rng)).collect();
+        let q: Vec<Vec<f32>> = (0..len).map(|_| mk_dist(&mut rng)).collect();
+        let toks: Vec<i32> = (0..len).map(|_| rng.next_below(vocab as u32) as i32).collect();
+        for rule in
+            [VerifyRule::Greedy, VerifyRule::Speculative, VerifyRule::Typical { eps: 0.3 }]
+        {
+            let v = verify_block(&toks, &p, &q, rule, &mut rng);
+            assert!(v.accepted <= len, "case {case}");
+            assert_eq!(v.replacement.is_none(), v.accepted == len, "case {case}");
+            if let Some(r) = v.replacement {
+                assert!((r as usize) < vocab, "case {case}: replacement out of vocab");
+            }
+        }
+    }
+}
+
+/// Polybasic decode: for random chain configurations the output always has
+/// the exact requested length, stays in-vocab, and under greedy equals the
+/// target's greedy decode (lossless cascade).
+#[test]
+fn prop_polybasic_greedy_lossless_random_configs() {
+    for seed in 0..15u64 {
+        let mut rng = Pcg32::seeded(seed * 31 + 7);
+        let vocab = 8 + rng.next_below(24) as usize;
+        let n_models = 2 + rng.next_below(3) as usize; // 2..4
+        let mut chain: Vec<Arc<dyn LanguageModel>> = vec![Arc::new(MockModel::new(
+            "t", 512, vocab, seed, 0.0,
+        ))];
+        for j in 1..n_models {
+            chain.push(Arc::new(MockModel::new(
+                &format!("d{j}"),
+                512,
+                vocab,
+                seed,
+                0.2 + 0.4 * j as f32,
+            )));
+        }
+        let draft_k = 2 + rng.next_below(5) as usize;
+        let mu = 1 + rng.next_below(8) as usize;
+        let max_new = 8 + rng.next_below(32) as usize;
+        let mut cfg = PolyConfig::for_chain(n_models, draft_k, mu, max_new);
+        cfg.rule = VerifyRule::Greedy;
+        cfg.sampling = SamplingParams { temperature: 0.0, ..Default::default() };
+        let prompt: Vec<i32> =
+            (0..3 + rng.next_below(6) as usize).map(|_| rng.next_below(vocab as u32) as i32).collect();
+
+        let out = polybasic::generate(&chain, &prompt, &cfg)
+            .unwrap_or_else(|e| panic!("seed {seed} cfg {cfg:?}: {e}"));
+        assert_eq!(out.tokens.len(), max_new, "seed {seed}");
+        assert!(out.tokens.iter().all(|&t| (t as usize) < vocab), "seed {seed}");
+
+        let ar = autoregressive::generate(chain[0].as_ref(), &prompt, max_new, &cfg.sampling)
+            .unwrap();
+        assert_eq!(
+            out.tokens, ar.tokens,
+            "seed {seed} k={draft_k} mu={mu} n={n_models}: greedy output diverged"
+        );
+    }
+}
+
+/// Forward-pass accounting: target forwards + acceptance must be consistent
+/// (sum of per-forward committed tokens equals the output length).
+#[test]
+fn prop_accept_lengths_account_for_output() {
+    for seed in 0..10u64 {
+        let chain = mock_chain(512, 24, seed);
+        let mut cfg = PolyConfig::for_chain(3, 4, 5, 40);
+        cfg.sampling.seed = seed;
+        let out = polybasic::generate(&chain, &[1, 2, 3], &cfg).unwrap();
+        let committed: u32 = out.accept_lengths.iter().sum();
+        assert!(
+            committed as usize >= out.tokens.len(),
+            "seed {seed}: accepted {committed} < emitted {}",
+            out.tokens.len()
+        );
+        assert_eq!(out.accept_lengths.len() as u64, out.forward_passes[0], "seed {seed}");
+    }
+}
+
+/// JSON writer/parser round-trip over random JSON trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f32() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round()),
+            3 => Json::Str(format!("s{}-\"x\"\n", rng.next_u32())),
+            4 => Json::Arr((0..rng.next_below(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_below(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Pcg32::seeded(5);
+    for case in 0..200 {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+        assert_eq!(parsed, v, "case {case}");
+    }
+}
+
+/// Workload generator: queries always fit the v7b admission budget.
+#[test]
+fn prop_queries_fit_context_budget() {
+    let headroom = PolyConfig::for_chain(3, 6, 8, 1).headroom();
+    for task in ALL_TASKS {
+        for i in 0..50 {
+            let q = make_query(task, i, 256);
+            assert!(
+                q.prompt.len() + q.max_new + headroom <= 160,
+                "{task:?} query {i}: {} + {} + {headroom} > 160",
+                q.prompt.len(),
+                q.max_new
+            );
+        }
+    }
+}
