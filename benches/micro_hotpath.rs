@@ -1,18 +1,24 @@
 //! Hot-path micro-benchmarks (the §Perf profiling instrument):
+//!   * sampler / verifier / softmax costs per decode event
+//!   * incremental scoring sessions vs stateless full-context decode
 //!   * per-forward engine cost per chain member (T_i) + dispatch overhead
 //!   * RemoteModel channel round-trip tax
-//!   * sampler / verifier / softmax costs per decode event
 //!
 //!   cargo bench --bench micro_hotpath
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use polyspec::harness::artifacts_dir;
 use polyspec::runtime::EngineHost;
+use polyspec::spec::mock::MockModel;
 use polyspec::spec::rng::Pcg32;
 use polyspec::spec::sampler;
-use polyspec::spec::types::{softmax, LanguageModel, VerifyRule};
+use polyspec::spec::types::{
+    softmax, softmax_into, ForceStateless, LanguageModel, ScoringSession, VerifyRule,
+};
 use polyspec::spec::verify;
+use polyspec::spec::{polybasic, PolyConfig};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // Warmup.
@@ -41,13 +47,23 @@ fn main() {
         let p = softmax(&logits, 0.8);
         std::hint::black_box(p);
     });
+    let mut probs_buf: Vec<f32> = Vec::new();
+    bench("softmax_into(256) reused buffer", 20_000, || {
+        softmax_into(&logits, 0.8, &mut probs_buf);
+        std::hint::black_box(&probs_buf);
+    });
     let probs = softmax(&logits, 1.0);
     bench("categorical sample(256)", 20_000, || {
         std::hint::black_box(sampler::sample_categorical(&probs, &mut rng));
     });
+    // The proposal distribution is built OUTSIDE the timed closure: this
+    // bench measures the rejection path (residual + resample), and a
+    // per-iteration reversed-Vec allocation used to dominate the number.
+    let q_rev: Vec<f32> = probs.iter().rev().copied().collect();
     bench("residual + resample (rejection path)", 20_000, || {
-        let r = sampler::residual(&probs, &probs.iter().rev().copied().collect::<Vec<_>>());
-        std::hint::black_box(r);
+        if let Some(r) = sampler::residual(&probs, &q_rev) {
+            std::hint::black_box(sampler::sample_categorical(&r, &mut rng));
+        }
     });
     let p_rows: Vec<Vec<f32>> = (0..8).map(|_| probs.clone()).collect();
     let q_rows = p_rows.clone();
@@ -56,6 +72,54 @@ fn main() {
         let v = verify::verify_block(&toks, &p_rows, &q_rows, VerifyRule::Speculative, &mut rng);
         std::hint::black_box(v);
     });
+
+    // ---- incremental scoring sessions vs stateless decode -----------------
+    // The tentpole measurement: a polybasic decode on the mock chain at
+    // ctx 512, 64 new tokens. "stateless" forces the StatelessSession
+    // fallback (every append re-scores the whole prefix — the pre-session
+    // behaviour); "sessions" uses the mock's cached rolling-hash sessions.
+    println!("\n== micro: incremental scoring sessions (mock chain, ctx 512) ==");
+    let prompt: Vec<i32> = (0..512).map(|i| (i * 7 % 256) as i32).collect();
+    let max_new = 64;
+    let mk_chain = |stateless: bool| -> Vec<Arc<dyn LanguageModel>> {
+        [("mock-target", 0.0f32), ("mock-mid", 0.35), ("mock-draft", 0.8)]
+            .iter()
+            .map(|&(name, noise)| -> Arc<dyn LanguageModel> {
+                let m = MockModel::new(name, 1024, 256, 1, noise);
+                if stateless {
+                    Arc::new(ForceStateless(m))
+                } else {
+                    Arc::new(m)
+                }
+            })
+            .collect()
+    };
+    let mut cfg = PolyConfig::for_chain(3, 6, 8, max_new);
+    cfg.sampling.seed = 42;
+    let session_chain = mk_chain(false);
+    let stateless_chain = mk_chain(true);
+    // Warmup + identity check: sessions must not change the output.
+    let a = polybasic::generate(&session_chain, &prompt, &cfg).unwrap();
+    let b = polybasic::generate(&stateless_chain, &prompt, &cfg).unwrap();
+    assert_eq!(a.tokens, b.tokens, "session decode diverged from stateless");
+    let iters = 3;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(polybasic::generate(&session_chain, &prompt, &cfg).unwrap());
+    }
+    let session_s = t0.elapsed().as_secs_f64() / iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(polybasic::generate(&stateless_chain, &prompt, &cfg).unwrap());
+    }
+    let stateless_s = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("drafting loop, {max_new} new tokens @ ctx {} (outputs identical):", prompt.len());
+    println!("  stateless full-context: {:>10.1} tok/s", max_new as f64 / stateless_s);
+    println!("  incremental sessions:   {:>10.1} tok/s", max_new as f64 / session_s);
+    println!(
+        "  speedup:                {:>10.2}x  (acceptance target: >= 5x)",
+        stateless_s / session_s
+    );
 
     println!("\n== micro: engine forward costs (requires artifacts) ==");
     let artifacts = artifacts_dir();
@@ -86,5 +150,26 @@ fn main() {
     println!(
         "\nRemoteModel channel tax: {:.3} ms (proxy {via_proxy:.3} - direct {direct:.3})",
         via_proxy - direct
+    );
+    // Session protocol vs stateless proxy forwards: decode 16 tokens with
+    // the draft engine both ways (suffix-only payloads vs full-context).
+    let mut sess = m.open_session().unwrap();
+    sess.append(&ctx).unwrap();
+    let t0 = Instant::now();
+    for i in 0..16 {
+        sess.append(&[(i % 256) as i32]).unwrap();
+        std::hint::black_box(sess.row(sess.len() - 1));
+    }
+    let per_append = t0.elapsed().as_secs_f64() * 1e3 / 16.0;
+    let mut full = ctx.clone();
+    let t0 = Instant::now();
+    for i in 0..16 {
+        full.push((i % 256) as i32);
+        let logits = m.forward(&full).unwrap();
+        std::hint::black_box(logits.row(full.len() - 1));
+    }
+    let per_forward = t0.elapsed().as_secs_f64() * 1e3 / 16.0;
+    println!(
+        "session append vs stateless forward (draft, ctx 64+): {per_append:.3} ms vs {per_forward:.3} ms/token"
     );
 }

@@ -9,180 +9,273 @@
 //! NOTE: `xla::PjRtClient` is `Rc`-based (not `Send`); engines must stay on
 //! the thread that created them. [`super::host::EngineHost`] provides a
 //! `Send + Sync` proxy for the multi-threaded coordinator.
+//!
+//! The whole PJRT path is gated behind the `pjrt` cargo feature (the `xla`
+//! crate is not in the offline crate set — see Cargo.toml). Without it a
+//! stub with the same API is compiled whose loader returns a descriptive
+//! error, so `EngineHost::load` fails gracefully and every artifact-free
+//! code path (mocks, coordinator, theory) works identically.
 
-use std::time::{Duration, Instant};
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-use crate::spec::types::{LanguageModel, Logits, ModelCounters, Token};
+    use crate::runtime::manifest::{ArgDtype, ModelMeta, RoleSpec};
+    use crate::spec::types::{LanguageModel, Logits, ModelCounters, Token};
 
-use super::manifest::{ArgDtype, ModelMeta, RoleSpec};
-
-/// A PJRT client shared by every engine on this thread.
-pub struct Client {
-    inner: xla::PjRtClient,
-}
-
-impl Client {
-    pub fn cpu() -> Result<Self> {
-        Ok(Self { inner: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    /// A PJRT client shared by every engine on this thread.
+    pub struct Client {
+        inner: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.inner.platform_name()
-    }
-}
-
-/// One compiled chain member with device-resident weights.
-pub struct ModelEngine {
-    meta: ModelMeta,
-    role: String,
-    exe: xla::PjRtLoadedExecutable,
-    /// Weight buffers in executable-argument order (tokens arg excluded).
-    weights: Vec<xla::PjRtBuffer>,
-    client: xla::PjRtClient,
-    counters: ModelCounters,
-}
-
-impl ModelEngine {
-    /// Load + compile one role from the artifacts directory.
-    pub fn load(client: &Client, role: &RoleSpec) -> Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(
-            role.hlo_path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {:?}", role.hlo_path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .inner
-            .compile(&comp)
-            .with_context(|| format!("compiling {}/{}", role.hlo_path.display(), role.role))?;
-
-        let blob = std::fs::read(&role.params_path)
-            .with_context(|| format!("reading weights {:?}", role.params_path))?;
-        let mut weights = Vec::with_capacity(role.args.len());
-        for arg in &role.args {
-            let end = arg.offset + arg.nbytes;
-            anyhow::ensure!(end <= blob.len(), "weights blob truncated at {}", arg.name);
-            let bytes = &blob[arg.offset..end];
-            let expected: usize = arg.shape.iter().product::<usize>() * arg.dtype.size();
-            anyhow::ensure!(
-                expected == arg.nbytes,
-                "arg {}: shape {:?} x {} != {} bytes",
-                arg.name,
-                arg.shape,
-                arg.dtype.size(),
-                arg.nbytes
-            );
-            // NOTE: not `buffer_from_host_raw_bytes` — xla 0.1.6 passes the
-            // *ElementType* discriminant where the C API expects
-            // *PrimitiveType* (off by one for F32), silently mistyping the
-            // buffer. The typed `buffer_from_host_buffer` uses the correct
-            // mapping.
-            let buf = match arg.dtype {
-                ArgDtype::F32 => {
-                    let data: Vec<f32> = bytes
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect();
-                    client.inner.buffer_from_host_buffer::<f32>(&data, &arg.shape, None)
-                }
-                ArgDtype::S32 => {
-                    let data: Vec<i32> = bytes
-                        .chunks_exact(4)
-                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect();
-                    client.inner.buffer_from_host_buffer::<i32>(&data, &arg.shape, None)
-                }
-                ArgDtype::S8 => {
-                    let data: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
-                    client.inner.buffer_from_host_buffer::<i8>(&data, &arg.shape, None)
-                }
-            }
-            .with_context(|| format!("uploading {}", arg.name))?;
-            weights.push(buf);
+    impl Client {
+        pub fn cpu() -> Result<Self> {
+            Ok(Self { inner: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
         }
 
-        Ok(Self {
-            meta: role.meta.clone(),
-            role: role.role.clone(),
-            exe,
-            weights,
-            client: client.inner.clone(),
-            counters: ModelCounters::default(),
-        })
+        pub fn platform(&self) -> String {
+            self.inner.platform_name()
+        }
     }
 
-    pub fn meta(&self) -> &ModelMeta {
-        &self.meta
+    /// One compiled chain member with device-resident weights.
+    pub struct ModelEngine {
+        meta: ModelMeta,
+        role: String,
+        exe: xla::PjRtLoadedExecutable,
+        /// Weight buffers in executable-argument order (tokens arg excluded).
+        weights: Vec<xla::PjRtBuffer>,
+        client: xla::PjRtClient,
+        counters: ModelCounters,
     }
 
-    pub fn role(&self) -> &str {
-        &self.role
+    impl ModelEngine {
+        /// Load + compile one role from the artifacts directory.
+        pub fn load(client: &Client, role: &RoleSpec) -> Result<Self> {
+            let proto = xla::HloModuleProto::from_text_file(
+                role.hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", role.hlo_path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .inner
+                .compile(&comp)
+                .with_context(|| {
+                    format!("compiling {}/{}", role.hlo_path.display(), role.role)
+                })?;
+
+            let blob = std::fs::read(&role.params_path)
+                .with_context(|| format!("reading weights {:?}", role.params_path))?;
+            let mut weights = Vec::with_capacity(role.args.len());
+            for arg in &role.args {
+                let end = arg.offset + arg.nbytes;
+                anyhow::ensure!(end <= blob.len(), "weights blob truncated at {}", arg.name);
+                let bytes = &blob[arg.offset..end];
+                let expected: usize = arg.shape.iter().product::<usize>() * arg.dtype.size();
+                anyhow::ensure!(
+                    expected == arg.nbytes,
+                    "arg {}: shape {:?} x {} != {} bytes",
+                    arg.name,
+                    arg.shape,
+                    arg.dtype.size(),
+                    arg.nbytes
+                );
+                // NOTE: not `buffer_from_host_raw_bytes` — xla 0.1.6 passes the
+                // *ElementType* discriminant where the C API expects
+                // *PrimitiveType* (off by one for F32), silently mistyping the
+                // buffer. The typed `buffer_from_host_buffer` uses the correct
+                // mapping.
+                let buf = match arg.dtype {
+                    ArgDtype::F32 => {
+                        let data: Vec<f32> = bytes
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect();
+                        client.inner.buffer_from_host_buffer::<f32>(&data, &arg.shape, None)
+                    }
+                    ArgDtype::S32 => {
+                        let data: Vec<i32> = bytes
+                            .chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect();
+                        client.inner.buffer_from_host_buffer::<i32>(&data, &arg.shape, None)
+                    }
+                    ArgDtype::S8 => {
+                        let data: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+                        client.inner.buffer_from_host_buffer::<i8>(&data, &arg.shape, None)
+                    }
+                }
+                .with_context(|| format!("uploading {}", arg.name))?;
+                weights.push(buf);
+            }
+
+            Ok(Self {
+                meta: role.meta.clone(),
+                role: role.role.clone(),
+                exe,
+                weights,
+                client: client.inner.clone(),
+                counters: ModelCounters::default(),
+            })
+        }
+
+        pub fn meta(&self) -> &ModelMeta {
+            &self.meta
+        }
+
+        pub fn role(&self) -> &str {
+            &self.role
+        }
+
+        /// Execute one forward pass: tokens (padded to seq_len) -> [S, V] logits.
+        fn execute(&self, tokens: &[Token]) -> Result<Vec<f32>> {
+            let s = self.meta.seq_len;
+            anyhow::ensure!(tokens.len() <= s, "context {} exceeds seq_len {s}", tokens.len());
+            // Causal masking makes rows < tokens.len() independent of padding.
+            let mut padded = vec![0i32; s];
+            padded[..tokens.len()].copy_from_slice(tokens);
+            let tok_buf = self
+                .client
+                .buffer_from_host_buffer::<i32>(&padded, &[s], None)
+                .context("uploading tokens")?;
+
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+            args.push(&tok_buf);
+            args.extend(self.weights.iter());
+
+            let result = self.exe.execute_b(&args).context("execute")?;
+            let lit = result[0][0].to_literal_sync().context("fetching logits")?;
+            let out = lit.to_tuple1().context("unwrapping 1-tuple")?;
+            let data = out.to_vec::<f32>().context("logits to host")?;
+            anyhow::ensure!(
+                data.len() == s * self.meta.vocab,
+                "unexpected logits size {} != {}x{}",
+                data.len(),
+                s,
+                self.meta.vocab
+            );
+            Ok(data)
+        }
     }
 
-    /// Execute one forward pass: tokens (padded to seq_len) -> [S, V] logits.
-    fn execute(&self, tokens: &[Token]) -> Result<Vec<f32>> {
-        let s = self.meta.seq_len;
-        anyhow::ensure!(tokens.len() <= s, "context {} exceeds seq_len {s}", tokens.len());
-        // Causal masking makes rows < tokens.len() independent of padding.
-        let mut padded = vec![0i32; s];
-        padded[..tokens.len()].copy_from_slice(tokens);
-        let tok_buf = self
-            .client
-            .buffer_from_host_buffer::<i32>(&padded, &[s], None)
-            .context("uploading tokens")?;
+    impl LanguageModel for ModelEngine {
+        fn name(&self) -> &str {
+            &self.meta.name
+        }
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
-        args.push(&tok_buf);
-        args.extend(self.weights.iter());
+        fn seq_len(&self) -> usize {
+            self.meta.seq_len
+        }
 
-        let result = self.exe.execute_b(&args).context("execute")?;
-        let lit = result[0][0].to_literal_sync().context("fetching logits")?;
-        let out = lit.to_tuple1().context("unwrapping 1-tuple")?;
-        let data = out.to_vec::<f32>().context("logits to host")?;
-        anyhow::ensure!(
-            data.len() == s * self.meta.vocab,
-            "unexpected logits size {} != {}x{}",
-            data.len(),
-            s,
+        fn vocab(&self) -> usize {
             self.meta.vocab
-        );
-        Ok(data)
+        }
+
+        fn forward(&self, tokens: &[Token]) -> Result<Logits> {
+            let start = Instant::now();
+            let data = self.execute(tokens)?;
+            self.counters.record(start.elapsed());
+            // Only rows < tokens.len() are meaningful; expose exactly those.
+            let vocab = self.meta.vocab;
+            let rows = tokens.len();
+            Ok(Logits::new(data[..rows * vocab].to_vec(), rows, vocab))
+        }
+
+        fn calls(&self) -> u64 {
+            self.counters.calls()
+        }
+
+        fn total_time(&self) -> Duration {
+            self.counters.total_time()
+        }
+
+        fn reset_counters(&self) {
+            self.counters.reset();
+        }
     }
 }
 
-impl LanguageModel for ModelEngine {
-    fn name(&self) -> &str {
-        &self.meta.name
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::time::Duration;
+
+    use anyhow::Result;
+
+    use crate::runtime::manifest::{ModelMeta, RoleSpec};
+    use crate::spec::types::{LanguageModel, Logits, Token};
+
+    const DISABLED: &str = "polyspec was built without the `pjrt` feature; \
+        rebuild with `--features pjrt` (and the vendored `xla` crate, see \
+        Cargo.toml) to execute AOT artifacts";
+
+    /// Placeholder PJRT client; [`Client::cpu`] always fails, so
+    /// `EngineHost::load` reports a clear error instead of linking PJRT.
+    pub struct Client {
+        _priv: (),
     }
 
-    fn seq_len(&self) -> usize {
-        self.meta.seq_len
+    impl Client {
+        pub fn cpu() -> Result<Self> {
+            anyhow::bail!(DISABLED)
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
     }
 
-    fn vocab(&self) -> usize {
-        self.meta.vocab
+    /// API-compatible stand-in for the PJRT engine; never constructible.
+    pub struct ModelEngine {
+        meta: ModelMeta,
+        role: String,
     }
 
-    fn forward(&self, tokens: &[Token]) -> Result<Logits> {
-        let start = Instant::now();
-        let data = self.execute(tokens)?;
-        self.counters.record(start.elapsed());
-        // Only rows < tokens.len() are meaningful; expose exactly those.
-        let vocab = self.meta.vocab;
-        let rows = tokens.len();
-        Ok(Logits::new(data[..rows * vocab].to_vec(), rows, vocab))
+    impl ModelEngine {
+        pub fn load(_client: &Client, _role: &RoleSpec) -> Result<Self> {
+            anyhow::bail!(DISABLED)
+        }
+
+        pub fn meta(&self) -> &ModelMeta {
+            &self.meta
+        }
+
+        pub fn role(&self) -> &str {
+            &self.role
+        }
     }
 
-    fn calls(&self) -> u64 {
-        self.counters.calls()
-    }
+    impl LanguageModel for ModelEngine {
+        fn name(&self) -> &str {
+            &self.meta.name
+        }
 
-    fn total_time(&self) -> Duration {
-        self.counters.total_time()
-    }
+        fn seq_len(&self) -> usize {
+            self.meta.seq_len
+        }
 
-    fn reset_counters(&self) {
-        self.counters.reset();
+        fn vocab(&self) -> usize {
+            self.meta.vocab
+        }
+
+        fn forward(&self, _tokens: &[Token]) -> Result<Logits> {
+            anyhow::bail!(DISABLED)
+        }
+
+        fn calls(&self) -> u64 {
+            0
+        }
+
+        fn total_time(&self) -> Duration {
+            Duration::ZERO
+        }
+
+        fn reset_counters(&self) {}
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use real::{Client, ModelEngine};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Client, ModelEngine};

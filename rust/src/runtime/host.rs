@@ -6,14 +6,28 @@
 //! channel and blocks on the reply; at our per-forward costs (hundreds of
 //! microseconds to milliseconds of XLA compute) the channel round-trip is
 //! noise (measured in benches/micro_hotpath.rs).
+//!
+//! # Session protocol
+//!
+//! [`RemoteModel::open_session`] speaks an incremental-decode protocol with
+//! the engine thread (`SessionOpen` / `SessionAppend` / `SessionRollback` /
+//! `SessionClose`). The engine thread keeps the authoritative token prefix
+//! per session; an append ships only the *new* tokens over the channel and
+//! the reply carries only the *new* logits rows — O(suffix · vocab) on the
+//! wire instead of O(prefix · vocab) both ways. The host side
+//! ([`RemoteSession`]) caches every row it has received, so `rollback` and
+//! row re-reads never touch the channel. (The compiled HLO itself is
+//! stateless full-context; device-side KV caching is a separate artifact
+//! change tracked on the ROADMAP.)
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::spec::types::{LanguageModel, Logits, ModelCounters, Token};
+use crate::spec::types::{LanguageModel, Logits, ModelCounters, ScoringSession, Token};
 
 use super::engine::{Client, ModelEngine};
 use super::manifest::{Manifest, ModelMeta};
@@ -21,6 +35,12 @@ use super::manifest::{Manifest, ModelMeta};
 enum Req {
     Forward { model: usize, tokens: Vec<Token>, reply: mpsc::Sender<Result<Logits>> },
     CostProbe { model: usize, ctx_len: usize, iters: usize, reply: mpsc::Sender<Result<f64>> },
+    SessionOpen { model: usize, reply: mpsc::Sender<u64> },
+    /// Extend session `session` by `tokens`; the reply holds logits rows for
+    /// the appended suffix only.
+    SessionAppend { session: u64, tokens: Vec<Token>, reply: mpsc::Sender<Result<Logits>> },
+    SessionRollback { session: u64, to_len: usize, reply: mpsc::Sender<Result<()>> },
+    SessionClose { session: u64 },
     Shutdown,
 }
 
@@ -104,6 +124,12 @@ impl Drop for EngineHost {
     }
 }
 
+/// Engine-thread-side session state: the authoritative token prefix.
+struct SessionState {
+    model: usize,
+    tokens: Vec<Token>,
+}
+
 fn engine_thread(
     specs: Vec<super::manifest::RoleSpec>,
     rx: mpsc::Receiver<Req>,
@@ -123,6 +149,9 @@ fn engine_thread(
             return;
         }
     };
+
+    let mut sessions: HashMap<u64, SessionState> = HashMap::new();
+    let mut next_session: u64 = 1;
 
     while let Ok(req) = rx.recv() {
         match req {
@@ -144,6 +173,53 @@ fn engine_thread(
                 })();
                 let _ = reply.send(r);
             }
+            Req::SessionOpen { model, reply } => {
+                let id = next_session;
+                next_session += 1;
+                sessions.insert(id, SessionState { model, tokens: Vec::new() });
+                let _ = reply.send(id);
+            }
+            Req::SessionAppend { session, tokens, reply } => {
+                let r = (|| -> Result<Logits> {
+                    let st = sessions.get_mut(&session).context("unknown session")?;
+                    let from = st.tokens.len();
+                    st.tokens.extend_from_slice(&tokens);
+                    // The compiled HLO is stateless full-context: re-execute
+                    // the whole prefix, but ship only the new rows back.
+                    match engines[st.model].forward(&st.tokens) {
+                        Ok(logits) => {
+                            let vocab = logits.vocab();
+                            let rows = st.tokens.len() - from;
+                            let mut data = Vec::with_capacity(rows * vocab);
+                            for t in from..st.tokens.len() {
+                                data.extend_from_slice(logits.row(t));
+                            }
+                            Ok(Logits::new(data, rows, vocab))
+                        }
+                        Err(e) => {
+                            st.tokens.truncate(from);
+                            Err(e)
+                        }
+                    }
+                })();
+                let _ = reply.send(r);
+            }
+            Req::SessionRollback { session, to_len, reply } => {
+                let r = (|| -> Result<()> {
+                    let st = sessions.get_mut(&session).context("unknown session")?;
+                    anyhow::ensure!(
+                        to_len <= st.tokens.len(),
+                        "rollback to {to_len} past session length {}",
+                        st.tokens.len()
+                    );
+                    st.tokens.truncate(to_len);
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            Req::SessionClose { session } => {
+                sessions.remove(&session);
+            }
             Req::Shutdown => break,
         }
     }
@@ -155,6 +231,13 @@ pub struct RemoteModel {
     meta: ModelMeta,
     tx: Mutex<mpsc::Sender<Req>>,
     counters: ModelCounters,
+}
+
+impl RemoteModel {
+    fn send(&self, req: Req) -> Result<()> {
+        let tx = self.tx.lock().expect("engine tx poisoned");
+        tx.send(req).ok().context("engine thread gone")
+    }
 }
 
 impl LanguageModel for RemoteModel {
@@ -173,12 +256,7 @@ impl LanguageModel for RemoteModel {
     fn forward(&self, tokens: &[Token]) -> Result<Logits> {
         let start = Instant::now();
         let (reply, rx) = mpsc::channel();
-        {
-            let tx = self.tx.lock().expect("engine tx poisoned");
-            tx.send(Req::Forward { model: self.idx, tokens: tokens.to_vec(), reply })
-                .ok()
-                .context("engine thread gone")?;
-        }
+        self.send(Req::Forward { model: self.idx, tokens: tokens.to_vec(), reply })?;
         let out = rx.recv().context("engine thread gone")??;
         self.counters.record(start.elapsed());
         Ok(out)
@@ -194,5 +272,92 @@ impl LanguageModel for RemoteModel {
 
     fn reset_counters(&self) {
         self.counters.reset();
+    }
+
+    fn open_session(&self) -> Result<Box<dyn ScoringSession + '_>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Req::SessionOpen { model: self.idx, reply })?;
+        let id = rx.recv().context("engine thread gone")?;
+        Ok(Box::new(RemoteSession {
+            model: self,
+            id,
+            tokens: Vec::new(),
+            rows: Vec::new(),
+        }))
+    }
+}
+
+/// Host-side handle to an engine-thread scoring session. Tracks the prefix
+/// and caches every logits row received, so `rollback` and row re-reads are
+/// channel-free; appends ship only the token suffix and receive only the
+/// new rows.
+pub struct RemoteSession<'m> {
+    model: &'m RemoteModel,
+    id: u64,
+    tokens: Vec<Token>,
+    /// Host-side flat `[len, vocab]` logits cache.
+    rows: Vec<f32>,
+}
+
+impl ScoringSession for RemoteSession<'_> {
+    fn vocab(&self) -> usize {
+        self.model.meta.vocab
+    }
+
+    fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    fn tokens(&self) -> &[Token] {
+        &self.tokens
+    }
+
+    fn append(&mut self, suffix: &[Token]) -> Result<()> {
+        if suffix.is_empty() {
+            return Ok(());
+        }
+        let start = Instant::now();
+        let (reply, rx) = mpsc::channel();
+        self.model.send(Req::SessionAppend {
+            session: self.id,
+            tokens: suffix.to_vec(),
+            reply,
+        })?;
+        let logits = rx.recv().context("engine thread gone")??;
+        for t in 0..logits.seq() {
+            self.rows.extend_from_slice(logits.row(t));
+        }
+        self.tokens.extend_from_slice(suffix);
+        self.model.counters.record(start.elapsed());
+        Ok(())
+    }
+
+    fn rollback(&mut self, to_len: usize) -> Result<()> {
+        anyhow::ensure!(
+            to_len <= self.tokens.len(),
+            "rollback to {to_len} past session length {}",
+            self.tokens.len()
+        );
+        if to_len == self.tokens.len() {
+            return Ok(());
+        }
+        let (reply, rx) = mpsc::channel();
+        self.model.send(Req::SessionRollback { session: self.id, to_len, reply })?;
+        rx.recv().context("engine thread gone")??;
+        self.tokens.truncate(to_len);
+        self.rows.truncate(to_len * self.model.meta.vocab);
+        Ok(())
+    }
+
+    fn row(&self, pos: usize) -> &[f32] {
+        let vocab = self.model.meta.vocab;
+        assert!(pos < self.tokens.len(), "row {pos} out of range {}", self.tokens.len());
+        &self.rows[pos * vocab..(pos + 1) * vocab]
+    }
+}
+
+impl Drop for RemoteSession<'_> {
+    fn drop(&mut self) {
+        let _ = self.model.send(Req::SessionClose { session: self.id });
     }
 }

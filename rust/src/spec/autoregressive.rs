@@ -1,4 +1,9 @@
 //! Vanilla autoregressive decoding — the speedup-ratio denominator.
+//!
+//! Runs on a [`ScoringSession`](super::types::ScoringSession), so each step
+//! scores only the freshly sampled token on backends with prefix caching
+//! (falling back to full-context forwards through `StatelessSession`).
+//! Call accounting is unchanged: one scoring call per generated token.
 
 use std::time::Instant;
 
@@ -6,7 +11,7 @@ use anyhow::Result;
 
 use super::rng::Pcg32;
 use super::sampler::{self};
-use super::types::{GenerationOutput, LanguageModel, SamplingParams, Token};
+use super::types::{softmax_into, GenerationOutput, LanguageModel, SamplingParams, Token};
 
 /// Generate `max_new` tokens with plain next-token sampling.
 pub fn generate(
@@ -26,15 +31,24 @@ pub fn generate(
     model.reset_counters();
     let start = Instant::now();
     let mut rng = Pcg32::seeded(sampling.seed);
-    let mut ctx = prompt.to_vec();
-    for _ in 0..max_new {
-        let logits = model.forward(&ctx)?;
-        let mut probs = logits.probs(ctx.len() - 1, sampling.temperature);
-        let tok = sampler::sample(&mut probs, sampling, &mut rng);
-        ctx.push(tok);
+    let mut tokens: Vec<Token> = Vec::with_capacity(max_new);
+    if max_new > 0 {
+        let mut session = model.open_session()?;
+        session.append(prompt)?;
+        let mut probs: Vec<f32> = Vec::new();
+        let mut scratch = sampler::FilterScratch::default();
+        for i in 0..max_new {
+            softmax_into(session.row(session.len() - 1), sampling.temperature, &mut probs);
+            let tok = sampler::sample_scratch(&mut probs, sampling, &mut rng, &mut scratch);
+            tokens.push(tok);
+            // The final token's own row is never read — skip scoring it.
+            if i + 1 < max_new {
+                session.append(&[tok])?;
+            }
+        }
     }
     Ok(GenerationOutput {
-        tokens: ctx[prompt.len()..].to_vec(),
+        tokens,
         wall: start.elapsed(),
         forward_passes: vec![model.calls()],
         forward_time: vec![model.total_time()],
@@ -47,6 +61,7 @@ pub fn generate(
 mod tests {
     use super::*;
     use crate::spec::mock::MockModel;
+    use crate::spec::types::ForceStateless;
 
     #[test]
     fn generates_requested_length() {
@@ -72,6 +87,17 @@ mod tests {
         let a = generate(&m, &[5], 12, &params).unwrap();
         let b = generate(&m, &[5], 12, &params).unwrap();
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn cached_session_matches_stateless_decode() {
+        let cached = MockModel::new("m", 64, 16, 1, 0.3);
+        let stateless = ForceStateless(MockModel::new("m", 64, 16, 1, 0.3));
+        let params = SamplingParams { seed: 4, ..Default::default() };
+        let a = generate(&cached, &[5, 1], 20, &params).unwrap();
+        let b = generate(&stateless, &[5, 1], 20, &params).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.forward_passes, b.forward_passes);
     }
 
     #[test]

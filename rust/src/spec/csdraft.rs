@@ -12,19 +12,24 @@
 //!   accepted) get the *better* drafters and longer budgets; later positions
 //!   fall to cheaper drafters.
 //!
-//! Verification is one target forward over the assembled block, with each
+//! Verification is one target scoring of the assembled block, with each
 //! position verified against the distribution of whichever drafter proposed
-//! it.
+//! it.  Every cascade member holds a [`ScoringSession`], so drafters score
+//! only their own new tokens and a rejection rolls cached prefixes back
+//! instead of rescoring them.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::dualistic::{dist_row, pick};
+use super::dualistic::{dist_row_into, pick};
 use super::rng::Pcg32;
-use super::types::{GenerationOutput, LanguageModel, SamplingParams, Token, VerifyRule};
-use super::verify::{verify_block, BlockVerdict};
+use super::sampler::FilterScratch;
+use super::types::{
+    reconcile, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
+};
+use super::verify::{verify_token, TokenVerdict};
 
 #[derive(Debug, Clone)]
 pub struct CsDraftConfig {
@@ -73,36 +78,59 @@ pub fn generate(
     let mut accept_lengths = Vec::new();
     let mut stage_accepts: Vec<Vec<u32>> = vec![Vec::new(); models.len() - 1];
 
+    let mut sessions: Vec<Box<dyn ScoringSession + '_>> = Vec::with_capacity(models.len());
+    for m in models {
+        sessions.push(m.open_session()?);
+    }
+    let mut scratch = FilterScratch::default();
+    // Round-persistent buffers: the assembled block, per-position proposal
+    // distributions, the verifier row, and the frontier (ctx + block).
+    let mut block: Vec<Token> = Vec::new();
+    let mut q_rows: Vec<Vec<f32>> = Vec::new();
+    let mut p: Vec<f32> = Vec::new();
+    let mut frontier: Vec<Token> = Vec::new();
+
     while ctx.len() - prompt.len() < cfg.max_new {
         let remaining = cfg.max_new - (ctx.len() - prompt.len());
 
         // ---- horizontal cascade: assemble the block ----------------------
-        let mut block: Vec<Token> = Vec::new();
-        let mut q_rows: Vec<Vec<f32>> = Vec::new();
-        let mut frontier = ctx.clone();
+        block.clear();
+        frontier.clear();
+        frontier.extend_from_slice(&ctx);
         'assemble: for (d, &len) in cfg.lens.iter().enumerate() {
-            let drafter = &models[d + 1];
+            let dsess = &mut sessions[d + 1];
             for _ in 0..len {
                 if block.len() >= remaining + 1 {
                     break 'assemble;
                 }
-                let logits = drafter.forward(&frontier)?;
-                let mut q = dist_row(&logits, frontier.len() - 1, &cfg.sampling);
-                let tok = pick(&mut q, &cfg.sampling, cfg.rule, &mut rng);
-                q_rows.push(q);
+                reconcile(&mut **dsess, &frontier)?;
+                if q_rows.len() == block.len() {
+                    q_rows.push(Vec::new());
+                }
+                let q = &mut q_rows[block.len()];
+                dist_row_into(dsess.row(frontier.len() - 1), &cfg.sampling, &mut scratch, q);
+                let tok = pick(q, &cfg.sampling, cfg.rule, &mut rng);
                 block.push(tok);
                 frontier.push(tok);
             }
         }
 
-        // ---- one target forward verifies everything ----------------------
-        let logits = models[0].forward(&frontier)?;
+        // ---- one target scoring verifies everything ----------------------
+        let tsess = &mut sessions[0];
+        reconcile(&mut **tsess, &frontier)?;
         let base = ctx.len();
-        let p_rows: Vec<Vec<f32>> = (0..block.len())
-            .map(|i| dist_row(&logits, base - 1 + i, &cfg.sampling))
-            .collect();
-        let BlockVerdict { accepted, replacement } =
-            verify_block(&block, &p_rows, &q_rows, cfg.rule, &mut rng);
+        let mut accepted = 0usize;
+        let mut replacement: Option<Token> = None;
+        for i in 0..block.len() {
+            dist_row_into(tsess.row(base - 1 + i), &cfg.sampling, &mut scratch, &mut p);
+            match verify_token(block[i], &p, &q_rows[i], cfg.rule, &mut rng) {
+                TokenVerdict::Accepted => accepted += 1,
+                TokenVerdict::Rejected { replacement: r } => {
+                    replacement = Some(r);
+                    break;
+                }
+            }
+        }
 
         // Attribute the acceptance to the drafter tiers (for L measurements
         // in the Table-1 case-3 experiment).
@@ -113,16 +141,18 @@ pub fn generate(
             seen += len;
         }
 
-        let mut committed = 0usize;
-        for &tok in &block[..accepted] {
-            ctx.push(tok);
-            committed += 1;
-        }
+        ctx.extend_from_slice(&block[..accepted]);
+        let mut committed = accepted;
         if let Some(r) = replacement {
             ctx.push(r);
             committed += 1;
         } else {
-            let mut p = dist_row(&logits, base + block.len() - 1, &cfg.sampling);
+            dist_row_into(
+                tsess.row(base + block.len() - 1),
+                &cfg.sampling,
+                &mut scratch,
+                &mut p,
+            );
             let bonus = pick(&mut p, &cfg.sampling, cfg.rule, &mut rng);
             ctx.push(bonus);
             committed += 1;
@@ -198,6 +228,26 @@ mod tests {
             assert!(a <= 2);
         }
         assert_eq!(out.stage_accept_lengths[0].len(), out.accept_lengths.len());
+    }
+
+    #[test]
+    fn speculative_reproducible_across_session_backends() {
+        use crate::spec::types::ForceStateless;
+        let models = cascade();
+        let stateless: Vec<Arc<dyn LanguageModel>> = vec![
+            Arc::new(ForceStateless(MockModel::new("t", 512, 24, 5, 0.0))),
+            Arc::new(ForceStateless(MockModel::new("d1", 512, 24, 5, 0.4))),
+            Arc::new(BigramModel::new(512, 24)),
+        ];
+        let cfg = CsDraftConfig {
+            lens: vec![3, 2],
+            rule: VerifyRule::Speculative,
+            sampling: SamplingParams { seed: 17, ..Default::default() },
+            max_new: 30,
+        };
+        let a = generate(&models, &[4, 2], &cfg).unwrap();
+        let b = generate(&stateless, &[4, 2], &cfg).unwrap();
+        assert_eq!(a.tokens, b.tokens);
     }
 
     #[test]

@@ -4,15 +4,26 @@
 //!
 //! Kept as an independent implementation (rather than `polybasic` with n=2)
 //! so the general algorithm can be cross-checked against it in tests.
+//!
+//! Both models are driven through [`ScoringSession`]s: drafting scores one
+//! new token per step, and a rejection rolls the sessions back to the
+//! surviving prefix instead of rescoring it. Call accounting matches the
+//! stateless loop exactly (k draft calls + 1 target call per round), and
+//! the committed output is token-for-token identical under every
+//! [`VerifyRule`] — the sessions change *where* rows come from, never their
+//! values.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::rng::Pcg32;
-use super::sampler::{self, filter_top_kp};
-use super::types::{GenerationOutput, LanguageModel, SamplingParams, Token, VerifyRule};
-use super::verify::{verify_block, BlockVerdict};
+use super::sampler::{self, FilterScratch};
+use super::types::{
+    reconcile, softmax_into, GenerationOutput, LanguageModel, SamplingParams, ScoringSession,
+    Token, VerifyRule,
+};
+use super::verify::{verify_token, TokenVerdict};
 
 #[derive(Debug, Clone, Copy)]
 pub struct DualisticConfig {
@@ -33,15 +44,16 @@ impl Default for DualisticConfig {
     }
 }
 
-/// Temperature-softmaxed, top-k/p-filtered distribution at `pos`.
-pub(crate) fn dist_row(
-    logits: &super::types::Logits,
-    pos: usize,
+/// Temperature-softmaxed, top-k/p-filtered distribution for one logits row,
+/// written into `out` — the zero-alloc form of the old `dist_row`.
+pub(crate) fn dist_row_into(
+    row: &[f32],
     sampling: &SamplingParams,
-) -> Vec<f32> {
-    let mut p = logits.probs(pos, sampling.temperature.max(1e-3));
-    filter_top_kp(&mut p, sampling.top_k, sampling.top_p);
-    p
+    scratch: &mut FilterScratch,
+    out: &mut Vec<f32>,
+) {
+    softmax_into(row, sampling.temperature.max(1e-3), out);
+    sampler::filter_top_kp_scratch(out, sampling.top_k, sampling.top_p, scratch);
 }
 
 pub(crate) fn pick(probs: &mut [f32], sampling: &SamplingParams, rule: VerifyRule,
@@ -79,44 +91,66 @@ pub fn generate(
     let mut ctx = prompt.to_vec();
     let mut accept_lengths = Vec::new();
 
+    let mut tsess = target.open_session()?;
+    let mut dsess = draft.open_session()?;
+    let mut scratch = FilterScratch::default();
+    // Buffers reused across rounds: the drafted block, its proposal
+    // distributions, the verifier row under scrutiny, and the frontier
+    // (ctx + block) the sessions reconcile against.
+    let mut block: Vec<Token> = Vec::new();
+    let mut q_rows: Vec<Vec<f32>> = Vec::new();
+    let mut p: Vec<f32> = Vec::new();
+    let mut frontier: Vec<Token> = Vec::new();
+
     while ctx.len() - prompt.len() < cfg.max_new {
         let remaining = cfg.max_new - (ctx.len() - prompt.len());
         let k = cfg.draft_k.min(remaining);
 
-        // Draft k tokens autoregressively with the small model.
-        let mut block: Vec<Token> = Vec::with_capacity(k);
-        let mut q_rows: Vec<Vec<f32>> = Vec::with_capacity(k);
-        let mut frontier = ctx.clone();
-        for _ in 0..k {
-            let logits = draft.forward(&frontier)?;
-            let mut q = dist_row(&logits, frontier.len() - 1, &cfg.sampling);
-            let tok = pick(&mut q, &cfg.sampling, cfg.rule, &mut rng);
-            q_rows.push(q);
+        // ---- draft k tokens, scoring only the unscored suffix ------------
+        frontier.clear();
+        frontier.extend_from_slice(&ctx);
+        reconcile(&mut *dsess, &frontier)?;
+        block.clear();
+        while q_rows.len() < k {
+            q_rows.push(Vec::new());
+        }
+        for (i, q) in q_rows.iter_mut().enumerate().take(k) {
+            dist_row_into(dsess.row(frontier.len() - 1), &cfg.sampling, &mut scratch, q);
+            let tok = pick(q, &cfg.sampling, cfg.rule, &mut rng);
             block.push(tok);
             frontier.push(tok);
+            // The last drafted token's row is only needed if drafting
+            // continues from it next round; score it lazily then.
+            if i + 1 < k {
+                dsess.append(&[tok])?;
+            }
         }
 
-        // One target forward scores the whole block (+ the bonus position).
-        let logits = target.forward(&frontier)?;
+        // ---- one target scoring of the block (+ the bonus row) -----------
+        reconcile(&mut *tsess, &frontier)?;
         let base = ctx.len();
-        let p_rows: Vec<Vec<f32>> =
-            (0..k).map(|i| dist_row(&logits, base - 1 + i, &cfg.sampling)).collect();
-
-        let BlockVerdict { accepted, replacement } =
-            verify_block(&block, &p_rows, &q_rows, cfg.rule, &mut rng);
-
-        let mut committed = 0usize;
-        for &tok in &block[..accepted] {
-            ctx.push(tok);
-            committed += 1;
+        let mut accepted = 0usize;
+        let mut replacement: Option<Token> = None;
+        for i in 0..k {
+            dist_row_into(tsess.row(base - 1 + i), &cfg.sampling, &mut scratch, &mut p);
+            match verify_token(block[i], &p, &q_rows[i], cfg.rule, &mut rng) {
+                TokenVerdict::Accepted => accepted += 1,
+                TokenVerdict::Rejected { replacement: r } => {
+                    replacement = Some(r);
+                    break;
+                }
+            }
         }
+
+        ctx.extend_from_slice(&block[..accepted]);
+        let mut committed = accepted;
         if let Some(r) = replacement {
             ctx.push(r);
             committed += 1;
         } else {
             // Full acceptance: the target's row after the last drafted token
             // yields a free bonus token.
-            let mut p = dist_row(&logits, base + k - 1, &cfg.sampling);
+            dist_row_into(tsess.row(base + k - 1), &cfg.sampling, &mut scratch, &mut p);
             let bonus = pick(&mut p, &cfg.sampling, cfg.rule, &mut rng);
             ctx.push(bonus);
             committed += 1;
@@ -140,6 +174,7 @@ mod tests {
     use super::*;
     use crate::spec::autoregressive;
     use crate::spec::mock::MockModel;
+    use crate::spec::types::ForceStateless;
 
     fn models() -> (MockModel, MockModel) {
         (
@@ -200,5 +235,29 @@ mod tests {
         let out = generate(&t, &d, &[1], &cfg).unwrap();
         // Perfect drafter: every block fully accepted (k + bonus).
         assert!(out.mean_accept() > 4.9, "mu = {}", out.mean_accept());
+    }
+
+    #[test]
+    fn session_decode_identical_to_stateless_all_rules() {
+        for rule in [
+            VerifyRule::Greedy,
+            VerifyRule::Speculative,
+            VerifyRule::Typical { eps: 0.25 },
+        ] {
+            let temperature = if rule == VerifyRule::Greedy { 0.0 } else { 1.0 };
+            let cfg = DualisticConfig {
+                rule,
+                sampling: SamplingParams { temperature, seed: 11, ..Default::default() },
+                max_new: 40,
+                ..Default::default()
+            };
+            let (t, d) = models();
+            let cached = generate(&t, &d, &[3, 1, 4], &cfg).unwrap();
+            let (t, d) = models();
+            let stateless =
+                generate(&ForceStateless(t), &ForceStateless(d), &[3, 1, 4], &cfg).unwrap();
+            assert_eq!(cached.tokens, stateless.tokens, "{rule:?}");
+            assert_eq!(cached.forward_passes, stateless.forward_passes, "{rule:?}");
+        }
     }
 }

@@ -13,7 +13,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::rng::Pcg32;
-use super::types::{LanguageModel, Logits, ModelCounters, Token};
+use super::types::{LanguageModel, Logits, ModelCounters, ScoringSession, Token};
+
+/// FNV-1a offset basis; the empty-prefix rolling-hash state.
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 
 #[derive(Debug)]
 pub struct MockModel {
@@ -50,26 +53,26 @@ impl MockModel {
         self
     }
 
-    fn row_for_prefix(&self, prefix: &[Token]) -> Vec<f32> {
-        let h = hash_tokens(prefix, self.base_seed);
+    /// Append the logits row for prefix-hash `h` onto `out`. The row is a
+    /// pure function of `h` (and model parameters), which is what makes the
+    /// rolling-hash session below bit-exact with full forwards.
+    fn extend_row_for_hash(&self, h: u64, out: &mut Vec<f32>) {
+        let base = out.len();
         // Oracle logits: deterministic in (base_seed, prefix).
         let mut rng = Pcg32::new(h, 0x5851f42d4c957f2d);
-        let mut logits: Vec<f32> = (0..self.vocab)
-            .map(|_| 3.0 * (rng.next_f32() - 0.5))
-            .collect();
+        out.extend((0..self.vocab).map(|_| 3.0 * (rng.next_f32() - 0.5)));
         // A few "peaky" tokens so distributions are LLM-like (low entropy).
         let peak = (h % self.vocab as u64) as usize;
-        logits[peak] += 4.0;
+        out[base + peak] += 4.0;
         let peak2 = ((h >> 17) % self.vocab as u64) as usize;
-        logits[peak2] += 2.0;
+        out[base + peak2] += 2.0;
         // Model-private perturbation.
         if self.noise > 0.0 {
             let mut nrng = Pcg32::new(h ^ self.model_seed, 0x14057b7ef767814f);
-            for l in logits.iter_mut() {
+            for l in &mut out[base..] {
                 *l += self.noise * 3.0 * (nrng.next_f32() - 0.5);
             }
         }
-        logits
     }
 }
 
@@ -90,8 +93,12 @@ impl LanguageModel for MockModel {
         anyhow::ensure!(tokens.len() <= self.seq_len, "context too long");
         let start = Instant::now();
         let mut data = Vec::with_capacity(tokens.len() * self.vocab);
-        for t in 0..tokens.len() {
-            data.extend_from_slice(&self.row_for_prefix(&tokens[..=t]));
+        // Rolling prefix hash: hash(tokens[..=t]) folds one token into
+        // hash(tokens[..t]), so the whole pass is O(len · vocab).
+        let mut h = self.base_seed ^ FNV_OFFSET;
+        for &t in tokens {
+            h = fnv(&t.to_le_bytes(), h);
+            self.extend_row_for_hash(h, &mut data);
         }
         if !self.cost.is_zero() {
             while start.elapsed() < self.cost {
@@ -113,14 +120,92 @@ impl LanguageModel for MockModel {
     fn reset_counters(&self) {
         self.counters.reset();
     }
+
+    fn open_session(&self) -> Result<Box<dyn ScoringSession + '_>> {
+        Ok(Box::new(MockSession {
+            model: self,
+            tokens: Vec::new(),
+            hashes: Vec::new(),
+            rows: Vec::new(),
+        }))
+    }
 }
 
-fn hash_tokens(tokens: &[Token], seed: u64) -> u64 {
-    let mut h = seed ^ 0xcbf29ce484222325;
-    for &t in tokens {
-        h = fnv(&t.to_le_bytes(), h);
+/// Incremental scoring session over a [`MockModel`]: a rolling prefix hash
+/// plus memoized rows make `append` O(suffix · vocab) where a stateless
+/// forward is O(prefix · vocab), and `rollback` a truncation. Rows are
+/// bit-identical to what [`MockModel::forward`] produces for the same
+/// prefix (both derive each row purely from the rolling hash).
+pub struct MockSession<'m> {
+    model: &'m MockModel,
+    tokens: Vec<Token>,
+    /// `hashes[t]` = rolling FNV hash of `tokens[0..=t]`.
+    hashes: Vec<u64>,
+    /// Flat `[len, vocab]` row cache.
+    rows: Vec<f32>,
+}
+
+impl ScoringSession for MockSession<'_> {
+    fn vocab(&self) -> usize {
+        self.model.vocab
     }
-    h
+
+    fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    fn tokens(&self) -> &[Token] {
+        &self.tokens
+    }
+
+    fn append(&mut self, suffix: &[Token]) -> Result<()> {
+        if suffix.is_empty() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.tokens.len() + suffix.len() <= self.model.seq_len,
+            "context too long"
+        );
+        let start = Instant::now();
+        let mut h = self
+            .hashes
+            .last()
+            .copied()
+            .unwrap_or(self.model.base_seed ^ FNV_OFFSET);
+        for &t in suffix {
+            h = fnv(&t.to_le_bytes(), h);
+            self.hashes.push(h);
+            self.model.extend_row_for_hash(h, &mut self.rows);
+            self.tokens.push(t);
+        }
+        // One append emulates one forward pass: same per-call cost `T_i`
+        // and call accounting as a stateless forward.
+        if !self.model.cost.is_zero() {
+            while start.elapsed() < self.model.cost {
+                std::hint::spin_loop();
+            }
+        }
+        self.model.counters.record(start.elapsed());
+        Ok(())
+    }
+
+    fn rollback(&mut self, to_len: usize) -> Result<()> {
+        anyhow::ensure!(
+            to_len <= self.tokens.len(),
+            "rollback to {to_len} past session length {}",
+            self.tokens.len()
+        );
+        self.tokens.truncate(to_len);
+        self.hashes.truncate(to_len);
+        self.rows.truncate(to_len * self.model.vocab);
+        Ok(())
+    }
+
+    fn row(&self, pos: usize) -> &[f32] {
+        let vocab = self.model.vocab;
+        assert!(pos < self.tokens.len(), "row {pos} out of range {}", self.tokens.len());
+        &self.rows[pos * vocab..(pos + 1) * vocab]
+    }
 }
 
 fn fnv(bytes: &[u8], mut h: u64) -> u64 {
@@ -188,6 +273,53 @@ mod tests {
         let of = overlap(&lt, &lf);
         assert!(oc > of + 0.05, "close {oc} vs far {of}");
         assert!(oc > 0.6, "close overlap too low: {oc}");
+    }
+
+    #[test]
+    fn session_rows_bit_identical_to_forward() {
+        let m = MockModel::new("m", 64, 16, 7, 0.5);
+        let toks: Vec<Token> = (0..20).map(|i| (i * 5 % 16) as Token).collect();
+        let full = m.forward(&toks).unwrap();
+        let mut sess = m.open_session().unwrap();
+        // Append in uneven chunks; rows must still match the one-shot pass.
+        sess.append(&toks[..3]).unwrap();
+        sess.append(&toks[3..4]).unwrap();
+        sess.append(&toks[4..]).unwrap();
+        for t in 0..toks.len() {
+            assert_eq!(sess.row(t), full.row(t), "row {t}");
+        }
+    }
+
+    #[test]
+    fn session_rollback_restores_rows_bit_identically() {
+        let m = MockModel::new("m", 64, 16, 7, 0.5);
+        let mut sess = m.open_session().unwrap();
+        sess.append(&[1, 2, 3, 4, 5]).unwrap();
+        let keep: Vec<Vec<f32>> = (0..3).map(|t| sess.row(t).to_vec()).collect();
+        sess.rollback(3).unwrap();
+        assert_eq!(sess.len(), 3);
+        for (t, row) in keep.iter().enumerate() {
+            assert_eq!(sess.row(t), &row[..], "row {t} changed across rollback");
+        }
+        // Diverge after the rollback point: rows must match a fresh forward.
+        sess.append(&[9, 9]).unwrap();
+        let full = m.forward(&[1, 2, 3, 9, 9]).unwrap();
+        for t in 0..5 {
+            assert_eq!(sess.row(t), full.row(t), "row {t}");
+        }
+    }
+
+    #[test]
+    fn session_counts_appends_as_calls_and_respects_cost() {
+        let m = MockModel::new("m", 32, 8, 0, 0.0).with_cost(Duration::from_millis(1));
+        let mut sess = m.open_session().unwrap();
+        sess.append(&[1, 2, 3]).unwrap();
+        sess.append(&[4]).unwrap();
+        sess.append(&[]).unwrap(); // no-op, must not count
+        assert_eq!(m.calls(), 2);
+        assert!(m.total_time() >= Duration::from_millis(2));
+        sess.rollback(1).unwrap(); // free, must not count
+        assert_eq!(m.calls(), 2);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! The paper's contribution: polybasic speculative decoding.
 //!
-//! * [`types`]   — `LanguageModel` trait, logits, sampling/verify configs.
+//! * [`types`]   — `LanguageModel` trait, `ScoringSession` incremental
+//!   decode API (cached-prefix suffix scoring + rollback), logits,
+//!   sampling/verify configs.
 //! * [`rng`], [`sampler`], [`verify`] — sampling + verification primitives.
 //! * [`autoregressive`], [`dualistic`], [`polybasic`], [`csdraft`] — the
 //!   decoding algorithms (vanilla baseline, Leviathan baseline, the paper's
@@ -25,4 +27,6 @@ pub mod types;
 pub mod verify;
 
 pub use polybasic::{generate as polybasic_generate, PolyConfig};
-pub use types::{GenerationOutput, LanguageModel, SamplingParams, Token, VerifyRule};
+pub use types::{
+    GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
+};

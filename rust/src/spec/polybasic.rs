@@ -2,28 +2,37 @@
 //! from three models to an arbitrary chain `M_1 (target) … M_n (drafter)`.
 //!
 //! Pipeline model: tokens are drafted by `M_n` and flow *up* the chain.
-//! `pending[j]` holds tokens awaiting verification by `models[j]`, each
-//! carrying the distribution it was proposed from.  Position order in the
-//! logical sequence is
+//! `queues[j]` holds the proposal distributions of tokens awaiting
+//! verification by `models[j]`; the tokens themselves live in one logical
+//! sequence `flat`, in position order
 //!
 //! ```text
-//! committed ctx | pending[0] | pending[1] | … | pending[n-2] | (new drafts)
+//! committed | queues[0] | queues[1] | … | queues[n-2] | (new drafts)
 //! ```
 //!
-//! Stage `j` fires once `pending[j]` reaches its threshold `μ_j` (Algorithm
-//! 1's `cnt >= μ` check): one forward of `models[j]` scores the whole prefix
-//! and verifies its queue sequentially.  Accepted tokens (plus the
-//! replacement emitted on a rejection, whose marginal is exactly `p_j` by
-//! the speculative-sampling theorem) move to `pending[j-1]` with proposal
-//! distribution `p_j`; a full acceptance yields a bonus token.  A rejection
-//! at stage `j` invalidates everything at later positions (the rest of
-//! `pending[j]` and all `pending[k]`, `k > j`).
+//! Stage `j` fires once `queues[j]` reaches its threshold `μ_j` (Algorithm
+//! 1's `cnt >= μ` check) and verifies its block sequentially.  Accepted
+//! tokens (plus the replacement emitted on a rejection, whose marginal is
+//! exactly `p_j` by the speculative-sampling theorem) move to `queues[j-1]`
+//! with proposal distribution `p_j`; a full acceptance yields a bonus
+//! token.  A rejection at stage `j` invalidates everything at later
+//! positions.  Stage 0 commits to the output.
 //!
-//! Stage 0 commits to the output.  With `VerifyRule::Speculative` at every
-//! stage the committed stream is distributed *exactly* as the target's
-//! sampling distribution (chained losslessness, see `verify.rs`); with
-//! `VerifyRule::Greedy` it equals the target's greedy decode token-for-token
-//! — both properties are asserted in tests.
+//! Every chain member holds one [`ScoringSession`]: drafting scores only
+//! each new token, a verify scores only the block (not the whole prefix),
+//! and a rejection *rolls the session back* to the surviving prefix — the
+//! cached-prefix cost model of Lemma 3.1.  Distribution rows are pooled and
+//! verification materializes verifier rows lazily, so the steady-state loop
+//! allocates nothing.  Committed output is token-for-token identical to the
+//! stateless implementation under every [`VerifyRule`] (sessions change
+//! where rows come from, never their values — asserted in
+//! `tests/property_tests.rs`).
+//!
+//! With `VerifyRule::Speculative` at every stage the committed stream is
+//! distributed *exactly* as the target's sampling distribution (chained
+//! losslessness, see `verify.rs`); with `VerifyRule::Greedy` it equals the
+//! target's greedy decode token-for-token — both properties are asserted in
+//! tests.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -31,10 +40,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::dualistic::{dist_row, pick};
+use super::dualistic::{dist_row_into, pick};
 use super::rng::Pcg32;
-use super::types::{GenerationOutput, LanguageModel, SamplingParams, Token, VerifyRule};
-use super::verify::{verify_block, BlockVerdict};
+use super::sampler::FilterScratch;
+use super::types::{
+    reconcile, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
+};
+use super::verify::{verify_token, TokenVerdict};
 
 /// Configuration of a polybasic decode.
 #[derive(Debug, Clone)]
@@ -72,11 +84,42 @@ impl PolyConfig {
     }
 }
 
-/// A token in flight, with the distribution it was proposed from.
-#[derive(Debug, Clone)]
-struct Pending {
-    tok: Token,
-    q: Vec<f32>,
+/// Mutable decode-loop state: the logical token sequence plus per-stage
+/// queues of proposal distributions and a buffer pool keeping the hot path
+/// allocation-free.  `flat[..committed]` is committed output; `queues[j]`'s
+/// tokens occupy `flat[start(j) .. start(j) + queues[j].len()]`.
+struct Pipeline {
+    flat: Vec<Token>,
+    committed: usize,
+    queues: Vec<VecDeque<Vec<f32>>>,
+    /// Recycled vocab-sized distribution buffers.
+    pool: Vec<Vec<f32>>,
+}
+
+impl Pipeline {
+    /// Position of `queues[j]`'s first token in `flat`.
+    fn start(&self, j: usize) -> usize {
+        self.committed + self.queues[..j].iter().map(|q| q.len()).sum::<usize>()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.flat.len() - self.committed
+    }
+
+    fn grab(&mut self) -> Vec<f32> {
+        self.pool.pop().unwrap_or_default()
+    }
+
+    fn recycle(&mut self, mut buf: Vec<f32>) {
+        buf.clear();
+        self.pool.push(buf);
+    }
+
+    fn recycle_queue(&mut self, j: usize) {
+        while let Some(buf) = self.queues[j].pop_front() {
+            self.recycle(buf);
+        }
+    }
 }
 
 /// Generate with a polybasic chain. `models[0]` is the target `M_1`,
@@ -107,35 +150,52 @@ pub fn generate(
     let start = Instant::now();
     let mut rng = Pcg32::seeded(cfg.sampling.seed);
 
-    let mut ctx = prompt.to_vec();
-    let mut pending: Vec<VecDeque<Pending>> = (0..n - 1).map(|_| VecDeque::new()).collect();
+    let mut sessions: Vec<Box<dyn ScoringSession + '_>> = Vec::with_capacity(n);
+    for m in models {
+        sessions.push(m.open_session()?);
+    }
+    let mut scratch = FilterScratch::default();
+    let mut pipe = Pipeline {
+        flat: prompt.to_vec(),
+        committed: prompt.len(),
+        queues: (0..n - 1).map(|_| VecDeque::new()).collect(),
+        pool: Vec::new(),
+    };
     let mut accept_lengths: Vec<u32> = Vec::new();
     let mut stage_accepts: Vec<Vec<u32>> = vec![Vec::new(); n - 1];
 
-    'outer: while ctx.len() - prompt.len() < cfg.max_new {
-        let committed = ctx.len() - prompt.len();
+    'outer: while pipe.committed - prompt.len() < cfg.max_new {
+        let committed = pipe.committed - prompt.len();
         let remaining = cfg.max_new - committed;
-        let in_flight: usize = pending.iter().map(|p| p.len()).sum();
+        let in_flight = pipe.in_flight();
         // Flush mode: the pipeline already holds enough tokens to finish the
         // request (or drafting would overflow the context) — stop drafting
         // and fire every non-empty stage regardless of thresholds.
-        let draft_room = seq_cap.saturating_sub(ctx.len() + in_flight);
+        let draft_room = seq_cap.saturating_sub(pipe.flat.len());
         let flush = in_flight >= remaining || draft_room == 0;
 
         let mut fired = false;
 
         // ---- 1. draft with M_n into the deepest queue --------------------
         let deepest = n - 2;
-        if !flush && pending[deepest].len() < cfg.thresholds[deepest].max(1) {
+        if !flush && pipe.queues[deepest].len() < cfg.thresholds[deepest].max(1) {
             let want = cfg.draft_k.min(remaining.saturating_sub(in_flight)).min(draft_room);
             if want > 0 {
-                let mut frontier = flat_sequence(&ctx, &pending);
+                let dsess = &mut sessions[n - 1];
                 for _ in 0..want {
-                    let logits = models[n - 1].forward(&frontier)?;
-                    let mut q = dist_row(&logits, frontier.len() - 1, &cfg.sampling);
+                    // Score up to the frontier (a single incremental append
+                    // in the steady state) and sample the next draft.
+                    reconcile(&mut **dsess, &pipe.flat)?;
+                    let mut q = pipe.grab();
+                    dist_row_into(
+                        dsess.row(pipe.flat.len() - 1),
+                        &cfg.sampling,
+                        &mut scratch,
+                        &mut q,
+                    );
                     let tok = pick(&mut q, &cfg.sampling, cfg.rule, &mut rng);
-                    pending[deepest].push_back(Pending { tok, q });
-                    frontier.push(tok);
+                    pipe.queues[deepest].push_back(q);
+                    pipe.flat.push(tok);
                 }
                 fired = true;
             }
@@ -143,20 +203,20 @@ pub fn generate(
 
         // ---- 2. verification sweep, deepest stage first ------------------
         for j in (0..n - 1).rev() {
-            if pending[j].is_empty() {
+            if pipe.queues[j].is_empty() {
                 continue;
             }
-            let ready = pending[j].len() >= cfg.thresholds[j];
+            let ready = pipe.queues[j].len() >= cfg.thresholds[j];
             if !(ready || flush) {
                 continue;
             }
             let committed_now = verify_stage(
-                models, j, &mut ctx, &mut pending, cfg, &mut rng, &mut stage_accepts,
+                &mut *sessions[j], j, &mut pipe, cfg, &mut rng, &mut scratch, &mut stage_accepts,
             )?;
             fired = true;
             if j == 0 {
                 accept_lengths.push(committed_now as u32);
-                if ctx.len() - prompt.len() >= cfg.max_new {
+                if pipe.committed - prompt.len() >= cfg.max_new {
                     break 'outer;
                 }
             }
@@ -166,9 +226,10 @@ pub fn generate(
         if !fired {
             // Nothing met its threshold and drafting was blocked: force the
             // deepest non-empty stage (guaranteed progress).
-            if let Some(j) = (0..n - 1).rev().find(|&j| !pending[j].is_empty()) {
+            if let Some(j) = (0..n - 1).rev().find(|&j| !pipe.queues[j].is_empty()) {
                 let committed_now = verify_stage(
-                    models, j, &mut ctx, &mut pending, cfg, &mut rng, &mut stage_accepts,
+                    &mut *sessions[j], j, &mut pipe, cfg, &mut rng, &mut scratch,
+                    &mut stage_accepts,
                 )?;
                 if j == 0 {
                     accept_lengths.push(committed_now as u32);
@@ -179,9 +240,9 @@ pub fn generate(
         }
     }
 
-    ctx.truncate(prompt.len() + cfg.max_new);
+    let end = (prompt.len() + cfg.max_new).min(pipe.committed);
     Ok(GenerationOutput {
-        tokens: ctx[prompt.len()..].to_vec(),
+        tokens: pipe.flat[prompt.len()..end].to_vec(),
         wall: start.elapsed(),
         forward_passes: models.iter().map(|m| m.calls()).collect(),
         forward_time: models.iter().map(|m| m.total_time()).collect(),
@@ -190,79 +251,79 @@ pub fn generate(
     })
 }
 
-/// The logical token sequence: ctx followed by every pending queue in
-/// position order.
-fn flat_sequence(ctx: &[Token], pending: &[VecDeque<Pending>]) -> Vec<Token> {
-    let mut seq = ctx.to_vec();
-    for queue in pending {
-        seq.extend(queue.iter().map(|p| p.tok));
-    }
-    seq
-}
-
-/// Run verifier `j` over its queue. Returns the number of tokens committed
-/// (only non-zero for `j == 0`).
+/// Run verifier `j` over its queue through its incremental session: sync
+/// the session to the block's prefix (rollback + one append), verify
+/// sequentially with lazily materialized verifier rows, and splice the
+/// outcome into the pipeline. Returns the number of tokens committed
+/// (non-zero only for `j == 0`).
 #[allow(clippy::too_many_arguments)]
-fn verify_stage(
-    models: &[Arc<dyn LanguageModel>],
+fn verify_stage<S: ScoringSession + ?Sized>(
+    session: &mut S,
     j: usize,
-    ctx: &mut Vec<Token>,
-    pending: &mut [VecDeque<Pending>],
+    pipe: &mut Pipeline,
     cfg: &PolyConfig,
     rng: &mut Pcg32,
+    scratch: &mut FilterScratch,
     stage_accepts: &mut [Vec<u32>],
 ) -> Result<usize> {
-    // Input: everything up to and including pending[j].
-    let mut input = ctx.clone();
-    for queue in pending[..j].iter() {
-        input.extend(queue.iter().map(|p| p.tok));
+    let base = pipe.start(j);
+    let len = pipe.queues[j].len();
+    reconcile(session, &pipe.flat[..base + len])?;
+
+    // Sequential verification; rows after the first rejection are never
+    // computed. `emitted_q` collects the verifier rows that become the
+    // emitted tokens' proposal distributions at stage j-1.
+    let mut accepted = 0usize;
+    let mut replacement: Option<Token> = None;
+    let mut emitted_q: Vec<Vec<f32>> = Vec::with_capacity(len + 1);
+    for i in 0..len {
+        let mut p = pipe.grab();
+        dist_row_into(session.row(base - 1 + i), &cfg.sampling, scratch, &mut p);
+        match verify_token(pipe.flat[base + i], &p, &pipe.queues[j][i], cfg.rule, rng) {
+            TokenVerdict::Accepted => {
+                emitted_q.push(p);
+                accepted += 1;
+            }
+            TokenVerdict::Rejected { replacement: r } => {
+                // The rejected position's verifier row is exactly the
+                // replacement token's proposal distribution.
+                emitted_q.push(p);
+                replacement = Some(r);
+                break;
+            }
+        }
     }
-    let base = input.len(); // position of pending[j][0]
-    let block: Vec<Token> = pending[j].iter().map(|p| p.tok).collect();
-    let q_rows: Vec<Vec<f32>> = pending[j].iter().map(|p| p.q.clone()).collect();
-    input.extend(&block);
-
-    let logits = models[j].forward(&input)?;
-    let p_rows: Vec<Vec<f32>> = (0..block.len())
-        .map(|i| dist_row(&logits, base - 1 + i, &cfg.sampling))
-        .collect();
-
-    let BlockVerdict { accepted, replacement } =
-        verify_block(&block, &p_rows, &q_rows, cfg.rule, rng);
     stage_accepts[j].push(accepted as u32);
 
-    // Emitted stream = accepted prefix (+ replacement | bonus), each with
-    // proposal distribution p_j (the verifier's own rows).
-    let mut emitted: Vec<Pending> = Vec::with_capacity(accepted + 1);
-    for i in 0..accepted {
-        emitted.push(Pending { tok: block[i], q: p_rows[i].clone() });
-    }
-    let rejected = replacement.is_some();
     if let Some(r) = replacement {
-        emitted.push(Pending { tok: r, q: p_rows[accepted].clone() });
-    } else {
-        // Full acceptance: free bonus token from the row after the block.
-        let mut p = dist_row(&logits, base + block.len() - 1, &cfg.sampling);
-        let bonus = pick(&mut p, &cfg.sampling, cfg.rule, rng);
-        emitted.push(Pending { tok: bonus, q: p });
-    }
-
-    // A rejection invalidates every later position in the pipeline.
-    if rejected {
-        for queue in pending[j..].iter_mut() {
-            queue.clear();
+        // A rejection invalidates every later position in the pipeline:
+        // truncate the logical sequence and drop this + all deeper queues.
+        pipe.flat.truncate(base + accepted);
+        pipe.flat.push(r);
+        for q in j..pipe.queues.len() {
+            pipe.recycle_queue(q);
         }
     } else {
-        pending[j].clear();
+        // Full acceptance: free bonus token from the row after the block,
+        // inserted at the block boundary (deeper queues shift right by 1).
+        let mut p = pipe.grab();
+        dist_row_into(session.row(base + len - 1), &cfg.sampling, scratch, &mut p);
+        let bonus = pick(&mut p, &cfg.sampling, cfg.rule, rng);
+        pipe.flat.insert(base + len, bonus);
+        emitted_q.push(p);
+        pipe.recycle_queue(j);
     }
 
     if j == 0 {
-        let committed = emitted.len();
-        ctx.extend(emitted.into_iter().map(|p| p.tok));
-        Ok(committed)
+        let committed_now = accepted + 1;
+        pipe.committed += committed_now;
+        for q in emitted_q {
+            pipe.recycle(q);
+        }
+        Ok(committed_now)
     } else {
-        for p in emitted {
-            pending[j - 1].push_back(p);
+        for q in emitted_q {
+            pipe.queues[j - 1].push_back(q);
         }
         Ok(0)
     }
@@ -273,6 +334,7 @@ mod tests {
     use super::*;
     use crate::spec::autoregressive;
     use crate::spec::mock::{mock_chain, MockModel};
+    use crate::spec::types::ForceStateless;
 
     fn greedy_cfg(n: usize, max_new: usize) -> PolyConfig {
         let mut cfg = PolyConfig::for_chain(n, 4, 4, max_new);
@@ -363,6 +425,32 @@ mod tests {
         let a = generate(&chain, &[5], &cfg).unwrap();
         let b = generate(&chain, &[5], &cfg).unwrap();
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn session_decode_identical_to_stateless() {
+        // Cached sessions vs the StatelessSession fallback on the same
+        // weights: outputs and per-stage forward accounting must agree.
+        let mk = |stateless: bool| -> Vec<Arc<dyn LanguageModel>> {
+            [("mock-target", 0.0f32), ("mock-mid", 0.35), ("mock-draft", 0.8)]
+                .iter()
+                .map(|&(name, noise)| -> Arc<dyn LanguageModel> {
+                    let m = MockModel::new(name, 512, 24, 29, noise);
+                    if stateless {
+                        Arc::new(ForceStateless(m))
+                    } else {
+                        Arc::new(m)
+                    }
+                })
+                .collect()
+        };
+        let mut cfg = PolyConfig::for_chain(3, 4, 6, 48);
+        cfg.sampling.seed = 5;
+        let cached = generate(&mk(false), &[2, 4, 6], &cfg).unwrap();
+        let stateless = generate(&mk(true), &[2, 4, 6], &cfg).unwrap();
+        assert_eq!(cached.tokens, stateless.tokens);
+        assert_eq!(cached.forward_passes, stateless.forward_passes);
+        assert_eq!(cached.accept_lengths, stateless.accept_lengths);
     }
 
     /// Statistical losslessness: the marginal distribution of the first

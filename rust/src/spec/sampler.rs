@@ -32,18 +32,40 @@ pub fn argmax(xs: &[f32]) -> Token {
     best as Token
 }
 
+/// Reusable buffers for [`filter_top_kp_scratch`], so the decode hot path
+/// pays no per-token allocation when top-k / top-p filtering is active.
+#[derive(Debug, Default)]
+pub struct FilterScratch {
+    idx: Vec<usize>,
+    keep: Vec<bool>,
+}
+
 /// Apply top-k / top-p filtering to a normalized distribution in place,
 /// renormalizing afterwards. `top_k == 0` and `top_p >= 1.0` disable the
 /// respective filter.
 pub fn filter_top_kp(probs: &mut [f32], top_k: usize, top_p: f32) {
+    filter_top_kp_scratch(probs, top_k, top_p, &mut FilterScratch::default());
+}
+
+/// [`filter_top_kp`] with caller-owned scratch buffers (identical results).
+pub fn filter_top_kp_scratch(
+    probs: &mut [f32],
+    top_k: usize,
+    top_p: f32,
+    scratch: &mut FilterScratch,
+) {
     let n = probs.len();
     if (top_k == 0 || top_k >= n) && top_p >= 1.0 {
         return;
     }
-    let mut idx: Vec<usize> = (0..n).collect();
+    let idx = &mut scratch.idx;
+    idx.clear();
+    idx.extend(0..n);
     idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
 
-    let mut keep = vec![false; n];
+    let keep = &mut scratch.keep;
+    keep.clear();
+    keep.resize(n, false);
     let mut cum = 0.0f32;
     for (rank, &i) in idx.iter().enumerate() {
         if top_k > 0 && rank >= top_k {
@@ -73,10 +95,21 @@ pub fn filter_top_kp(probs: &mut [f32], top_k: usize, top_p: f32) {
 /// Sample a token from `logits`-derived `probs` under `params`.
 /// `probs` must already be softmaxed at `params.temperature`.
 pub fn sample(probs: &mut [f32], params: &SamplingParams, rng: &mut Pcg32) -> Token {
+    sample_scratch(probs, params, rng, &mut FilterScratch::default())
+}
+
+/// [`sample`] with caller-owned filter scratch (identical results) — the
+/// per-token form for decode loops.
+pub fn sample_scratch(
+    probs: &mut [f32],
+    params: &SamplingParams,
+    rng: &mut Pcg32,
+    scratch: &mut FilterScratch,
+) -> Token {
     if params.temperature <= 1e-3 {
         return argmax(probs);
     }
-    filter_top_kp(probs, params.top_k, params.top_p);
+    filter_top_kp_scratch(probs, params.top_k, params.top_p, scratch);
     sample_categorical(probs, rng)
 }
 

@@ -4,6 +4,34 @@
 //! trait — never on PJRT — so every algorithm is unit-testable against
 //! [`crate::spec::mock::MockModel`] and runs unchanged against the real
 //! AOT-compiled engines in `runtime::`.
+//!
+//! # Incremental scoring sessions
+//!
+//! [`LanguageModel::forward`] is stateless full-context scoring: every call
+//! pays for the whole prefix, so an L-token decode loop is O(L²) in model
+//! work. [`ScoringSession`] is the incremental alternative the decode loops
+//! use: a session owns a scored prefix, `append` scores only the new
+//! suffix, and `rollback` rewinds a speculative rejection instead of
+//! recomputing — the cost model Lemma 3.1 assumes (per-call cost `T_i`
+//! independent of how the prefix was built).
+//!
+//! Invariants every session backend must uphold:
+//!
+//! * **Prefix determinism** — `row(t)` depends only on `tokens()[0..=t]`.
+//!   It equals `forward(tokens[..=t]).row(t)` bit-for-bit, however the
+//!   prefix was assembled (one append, many appends, or appends interleaved
+//!   with rollbacks).
+//! * **Rollback exactness** — `rollback(to_len)` restores exactly the state
+//!   after the first `to_len` tokens; cached rows for the surviving prefix
+//!   are preserved bit-identically, never recomputed.
+//! * **Row availability** — after `append`, every position `< len()` is
+//!   readable through `row`, not just the freshly appended suffix.
+//!
+//! Backends: [`StatelessSession`] adapts any `LanguageModel` (full-context
+//! re-forward per append, rows cached host-side), `spec::mock` keeps a
+//! rolling prefix hash making appends O(suffix · vocab), and
+//! `runtime::host` speaks a session protocol to the engine thread with a
+//! host-side logits cache.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -47,15 +75,24 @@ impl Logits {
 
 /// Numerically-stable softmax with temperature.
 pub fn softmax(logits: &[f32], temperature: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(logits.len());
+    softmax_into(logits, temperature, &mut out);
+    out
+}
+
+/// [`softmax`] into a caller-owned buffer (cleared and refilled) — the
+/// decode hot paths reuse one buffer per loop instead of allocating a
+/// vocab-sized `Vec` per token. Produces bit-identical values to `softmax`.
+pub fn softmax_into(logits: &[f32], temperature: f32, out: &mut Vec<f32>) {
     let temp = temperature.max(1e-4);
     let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - m) / temp).exp()).collect();
+    out.clear();
+    out.extend(logits.iter().map(|&l| ((l - m) / temp).exp()));
     let sum: f32 = out.iter().sum();
     let inv = 1.0 / sum;
-    for p in &mut out {
+    for p in out.iter_mut() {
         *p *= inv;
     }
-    out
 }
 
 /// A causal full-context scorer: `tokens[0..len] -> logits[len, vocab]`.
@@ -96,6 +133,191 @@ pub trait LanguageModel {
             self.total_time().as_secs_f64() * 1e3 / calls as f64
         }
     }
+
+    /// Open an incremental [`ScoringSession`] on this model. The default is
+    /// a [`StatelessSession`] (full-context re-forward per append), so every
+    /// implementation gets the session API for free; backends with native
+    /// prefix caching override this.
+    fn open_session(&self) -> anyhow::Result<Box<dyn ScoringSession + '_>> {
+        Ok(Box::new(StatelessSession::new(self)))
+    }
+}
+
+/// An incremental decode handle: a scored token prefix whose logits rows
+/// stay cached, extended by [`append`](Self::append) and rewound by
+/// [`rollback`](Self::rollback). See the module docs for the invariants.
+pub trait ScoringSession {
+    fn vocab(&self) -> usize;
+
+    /// Number of tokens currently scored.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The scored prefix itself.
+    fn tokens(&self) -> &[Token];
+
+    /// Extend the prefix with `suffix`, scoring (at most) the new tokens.
+    /// On error the session is left unchanged. An empty suffix is a no-op
+    /// and must not count as a forward pass.
+    fn append(&mut self, suffix: &[Token]) -> anyhow::Result<()>;
+
+    /// Rewind the prefix to its first `to_len` tokens. Cached rows for the
+    /// surviving prefix are preserved bit-identically. Errors if
+    /// `to_len > len()`.
+    fn rollback(&mut self, to_len: usize) -> anyhow::Result<()>;
+
+    /// Cached next-token logits after `tokens()[0..=pos]` (`pos < len()`);
+    /// bit-identical to `forward(tokens[..=pos]).row(pos)`.
+    fn row(&self, pos: usize) -> &[f32];
+
+    /// Copy of rows `[from, len())` as a [`Logits`] value (convenience for
+    /// callers that want the suffix of the last append; allocates).
+    fn suffix_logits(&self, from: usize) -> Logits {
+        let vocab = self.vocab();
+        let rows = self.len() - from;
+        let mut data = Vec::with_capacity(rows * vocab);
+        for t in from..self.len() {
+            data.extend_from_slice(self.row(t));
+        }
+        Logits::new(data, rows, vocab)
+    }
+}
+
+/// Sync a session to `target`: roll back to the longest common prefix, then
+/// append the divergent suffix (one forward at most). This is the only
+/// primitive the decode loops need — drafting appends at the tail, a
+/// speculative rejection diverges at the rejected position, and both reduce
+/// to rollback-then-append.
+pub fn reconcile<S: ScoringSession + ?Sized>(
+    session: &mut S,
+    target: &[Token],
+) -> anyhow::Result<()> {
+    let lcp = session
+        .tokens()
+        .iter()
+        .zip(target)
+        .take_while(|(a, b)| a == b)
+        .count();
+    if lcp < session.len() {
+        session.rollback(lcp)?;
+    }
+    if lcp < target.len() {
+        session.append(&target[lcp..])?;
+    }
+    Ok(())
+}
+
+/// The universal [`ScoringSession`] fallback: re-runs `forward` over the
+/// whole prefix on every append (the model itself stays stateless) and
+/// keeps all rows cached host-side, so `rollback` and re-reads are free.
+pub struct StatelessSession<'m, M: LanguageModel + ?Sized> {
+    model: &'m M,
+    tokens: Vec<Token>,
+    /// Flat `[len, vocab]` row cache.
+    rows: Vec<f32>,
+}
+
+impl<'m, M: LanguageModel + ?Sized> StatelessSession<'m, M> {
+    pub fn new(model: &'m M) -> Self {
+        Self { model, tokens: Vec::new(), rows: Vec::new() }
+    }
+}
+
+impl<M: LanguageModel + ?Sized> ScoringSession for StatelessSession<'_, M> {
+    fn vocab(&self) -> usize {
+        self.model.vocab()
+    }
+
+    fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    fn tokens(&self) -> &[Token] {
+        &self.tokens
+    }
+
+    fn append(&mut self, suffix: &[Token]) -> anyhow::Result<()> {
+        if suffix.is_empty() {
+            return Ok(());
+        }
+        let old = self.tokens.len();
+        self.tokens.extend_from_slice(suffix);
+        match self.model.forward(&self.tokens) {
+            Ok(logits) => {
+                // Keep previously cached rows (rollback exactness); copy
+                // only the rows for the new suffix.
+                for t in old..self.tokens.len() {
+                    self.rows.extend_from_slice(logits.row(t));
+                }
+                Ok(())
+            }
+            Err(e) => {
+                self.tokens.truncate(old);
+                Err(e)
+            }
+        }
+    }
+
+    fn rollback(&mut self, to_len: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            to_len <= self.tokens.len(),
+            "rollback to {to_len} past session length {}",
+            self.tokens.len()
+        );
+        self.tokens.truncate(to_len);
+        self.rows.truncate(to_len * self.model.vocab());
+        Ok(())
+    }
+
+    fn row(&self, pos: usize) -> &[f32] {
+        let vocab = self.model.vocab();
+        assert!(pos < self.tokens.len(), "row {pos} out of range {}", self.tokens.len());
+        &self.rows[pos * vocab..(pos + 1) * vocab]
+    }
+}
+
+/// Delegating wrapper that hides a model's native session support, forcing
+/// the [`StatelessSession`] fallback. Lets tests and benches A/B the cached
+/// incremental path against full-context rescoring on identical weights.
+pub struct ForceStateless<M: LanguageModel>(pub M);
+
+impl<M: LanguageModel> LanguageModel for ForceStateless<M> {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.0.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.0.vocab()
+    }
+
+    fn forward(&self, tokens: &[Token]) -> anyhow::Result<Logits> {
+        self.0.forward(tokens)
+    }
+
+    fn calls(&self) -> u64 {
+        self.0.calls()
+    }
+
+    fn total_time(&self) -> Duration {
+        self.0.total_time()
+    }
+
+    fn reset_counters(&self) {
+        self.0.reset_counters()
+    }
+
+    fn cost_ms(&self) -> f64 {
+        self.0.cost_ms()
+    }
+    // `open_session` deliberately NOT overridden: the default
+    // StatelessSession is the point of this wrapper.
 }
 
 /// Shared instrumentation for `LanguageModel` implementations.
@@ -216,6 +438,67 @@ mod tests {
         let p = softmax(&[-1e30, 0.0, 1e3], 1.0);
         assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
         assert!(p[0] >= 0.0 && p[2] <= 1.0);
+    }
+
+    #[test]
+    fn softmax_into_matches_softmax() {
+        let logits = [1.5f32, -2.0, 0.25, 7.0];
+        let mut buf = vec![9.0f32; 2]; // stale contents must be discarded
+        softmax_into(&logits, 0.7, &mut buf);
+        assert_eq!(buf, softmax(&logits, 0.7));
+    }
+
+    #[test]
+    fn stateless_session_matches_forward() {
+        use crate::spec::mock::MockModel;
+        let m = MockModel::new("m", 64, 8, 3, 0.4);
+        let mut sess = StatelessSession::new(&m);
+        sess.append(&[1, 2]).unwrap();
+        sess.append(&[3]).unwrap();
+        let full = m.forward(&[1, 2, 3]).unwrap();
+        for t in 0..3 {
+            assert_eq!(sess.row(t), full.row(t), "row {t}");
+        }
+        assert_eq!(sess.tokens(), &[1, 2, 3]);
+        assert_eq!(sess.len(), 3);
+        assert_eq!(sess.suffix_logits(1).row(1), full.row(2));
+    }
+
+    #[test]
+    fn stateless_session_rollback_and_reconcile() {
+        use crate::spec::mock::MockModel;
+        let m = MockModel::new("m", 64, 8, 3, 0.4);
+        let mut sess = StatelessSession::new(&m);
+        sess.append(&[5, 6, 7, 8]).unwrap();
+        let row1 = sess.row(1).to_vec();
+        sess.rollback(2).unwrap();
+        assert_eq!(sess.len(), 2);
+        assert_eq!(sess.row(1), &row1[..], "rollback must keep surviving rows");
+        assert!(sess.rollback(3).is_err(), "rollback past end must fail");
+        // Reconcile to a diverging target: rollback + single append.
+        reconcile(&mut sess, &[5, 9, 1]).unwrap();
+        assert_eq!(sess.tokens(), &[5, 9, 1]);
+        let full = m.forward(&[5, 9, 1]).unwrap();
+        for t in 0..3 {
+            assert_eq!(sess.row(t), full.row(t), "row {t}");
+        }
+        // Reconcile to a strict prefix: rollback only, no forward.
+        let calls = m.calls();
+        reconcile(&mut sess, &[5, 9]).unwrap();
+        assert_eq!(sess.tokens(), &[5, 9]);
+        assert_eq!(m.calls(), calls, "prefix reconcile must not forward");
+    }
+
+    #[test]
+    fn default_open_session_works_on_trait_objects() {
+        use crate::spec::mock::MockModel;
+        let m = ForceStateless(MockModel::new("m", 32, 8, 1, 0.0));
+        let as_dyn: &dyn LanguageModel = &m;
+        let mut sess = as_dyn.open_session().unwrap();
+        sess.append(&[1, 2, 3]).unwrap();
+        assert_eq!(sess.len(), 3);
+        assert_eq!(sess.vocab(), 8);
+        assert!(!sess.is_empty());
     }
 
     #[test]

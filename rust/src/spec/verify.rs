@@ -83,18 +83,20 @@ pub struct BlockVerdict {
 }
 
 /// Verify `tokens[i]` (proposed from `q_rows[i]`) against `p_rows[i]`
-/// sequentially; stop at the first rejection.
-pub fn verify_block(
+/// sequentially; stop at the first rejection. Rows may be owned
+/// (`Vec<f32>`) or borrowed (`&[f32]`, e.g. straight out of a
+/// [`crate::spec::types::ScoringSession`] cache) — no cloning required.
+pub fn verify_block<P: AsRef<[f32]>, Q: AsRef<[f32]>>(
     tokens: &[Token],
-    p_rows: &[Vec<f32>],
-    q_rows: &[Vec<f32>],
+    p_rows: &[P],
+    q_rows: &[Q],
     rule: VerifyRule,
     rng: &mut Pcg32,
 ) -> BlockVerdict {
     assert_eq!(tokens.len(), p_rows.len());
     assert_eq!(tokens.len(), q_rows.len());
     for (i, &tok) in tokens.iter().enumerate() {
-        match verify_token(tok, &p_rows[i], &q_rows[i], rule, rng) {
+        match verify_token(tok, p_rows[i].as_ref(), q_rows[i].as_ref(), rule, rng) {
             TokenVerdict::Accepted => continue,
             TokenVerdict::Rejected { replacement } => {
                 return BlockVerdict { accepted: i, replacement: Some(replacement) };

@@ -12,9 +12,11 @@ use polyspec::coordinator::kv::{KvConfig, KvManager};
 use polyspec::runtime::json::Json;
 use polyspec::spec::mock::{mock_chain, MockModel};
 use polyspec::spec::rng::Pcg32;
-use polyspec::spec::types::{softmax, LanguageModel, SamplingParams, VerifyRule};
+use polyspec::spec::types::{
+    reconcile, softmax, ForceStateless, LanguageModel, SamplingParams, ScoringSession, VerifyRule,
+};
 use polyspec::spec::verify::verify_block;
-use polyspec::spec::{autoregressive, polybasic, PolyConfig};
+use polyspec::spec::{autoregressive, dualistic, polybasic, PolyConfig};
 use polyspec::workload::tasks::{make_query, ALL_TASKS};
 
 /// KV manager: under arbitrary admit/grow/release sequences the allocator
@@ -187,6 +189,158 @@ fn prop_accept_lengths_account_for_output() {
             out.tokens.len()
         );
         assert_eq!(out.accept_lengths.len() as u64, out.forward_passes[0], "seed {seed}");
+    }
+}
+
+/// Session-based decode must be token-identical to the stateless fallback
+/// (ForceStateless hides the mock's cached sessions, so every scoring call
+/// re-runs the full prefix — the pre-session behaviour) for every
+/// verification rule, across random chain configurations.
+#[test]
+fn prop_session_decode_identical_to_stateless() {
+    for rule in [VerifyRule::Greedy, VerifyRule::Speculative, VerifyRule::Typical { eps: 0.25 }] {
+        for seed in 0..6u64 {
+            let mut rng = Pcg32::seeded(seed * 131 + 17);
+            let vocab = 8 + rng.next_below(24) as usize;
+            let n_models = 2 + rng.next_below(2) as usize; // 2..3
+            let mk = |stateless: bool| -> Vec<Arc<dyn LanguageModel>> {
+                (0..n_models)
+                    .map(|j| -> Arc<dyn LanguageModel> {
+                        let noise = 0.4 * j as f32;
+                        let m = MockModel::new(&format!("m{j}"), 512, vocab, seed, noise);
+                        if stateless {
+                            Arc::new(ForceStateless(m))
+                        } else {
+                            Arc::new(m)
+                        }
+                    })
+                    .collect()
+            };
+            let draft_k = 2 + rng.next_below(5) as usize;
+            let mu = 1 + rng.next_below(6) as usize;
+            let max_new = 8 + rng.next_below(24) as usize;
+            let mut cfg = PolyConfig::for_chain(n_models, draft_k, mu, max_new);
+            cfg.rule = rule;
+            let temperature = if rule == VerifyRule::Greedy { 0.0 } else { 1.0 };
+            cfg.sampling = SamplingParams { temperature, seed, ..Default::default() };
+            let prompt: Vec<i32> = (0..2 + rng.next_below(5) as usize)
+                .map(|_| rng.next_below(vocab as u32) as i32)
+                .collect();
+
+            let cached = polybasic::generate(&mk(false), &prompt, &cfg)
+                .unwrap_or_else(|e| panic!("seed {seed} {rule:?}: {e}"));
+            let stateless = polybasic::generate(&mk(true), &prompt, &cfg).unwrap();
+            assert_eq!(cached.tokens, stateless.tokens, "seed {seed} rule {rule:?}");
+            assert_eq!(
+                cached.forward_passes, stateless.forward_passes,
+                "seed {seed} rule {rule:?}: call accounting diverged"
+            );
+            assert_eq!(cached.accept_lengths, stateless.accept_lengths, "seed {seed} {rule:?}");
+
+            // Dualistic gets the same guarantee.
+            let dcfg = dualistic::DualisticConfig {
+                draft_k,
+                rule,
+                sampling: cfg.sampling,
+                max_new,
+            };
+            let c = mk(false);
+            let s = mk(true);
+            let dc = dualistic::generate(c[0].as_ref(), c[n_models - 1].as_ref(), &prompt, &dcfg)
+                .unwrap();
+            let ds = dualistic::generate(s[0].as_ref(), s[n_models - 1].as_ref(), &prompt, &dcfg)
+                .unwrap();
+            assert_eq!(dc.tokens, ds.tokens, "dualistic seed {seed} rule {rule:?}");
+        }
+    }
+}
+
+/// Session invariants under random append / rollback / reconcile walks:
+/// rows depend only on the prefix, rollback restores bit-identical rows,
+/// and the session always agrees with a from-scratch `forward`.
+#[test]
+fn prop_session_rollback_bit_identical() {
+    for seed in 0..12u64 {
+        let mut rng = Pcg32::seeded(seed * 7 + 3);
+        let vocab = 4 + rng.next_below(28) as usize;
+        let model = MockModel::new("m", 256, vocab, seed, 0.6);
+        let mut sess = model.open_session().unwrap();
+        let mut shadow: Vec<i32> = Vec::new();
+        for _step in 0..60 {
+            match rng.next_below(3) {
+                0 => {
+                    // Append a random chunk (bounded by seq_len).
+                    let room = 256 - shadow.len();
+                    if room > 0 {
+                        let k = 1 + rng.next_below(room.min(7) as u32) as usize;
+                        let chunk: Vec<i32> =
+                            (0..k).map(|_| rng.next_below(vocab as u32) as i32).collect();
+                        shadow.extend_from_slice(&chunk);
+                        sess.append(&chunk).unwrap();
+                    }
+                }
+                1 => {
+                    // Roll back to a random earlier length.
+                    let to = rng.next_below(shadow.len() as u32 + 1) as usize;
+                    shadow.truncate(to);
+                    sess.rollback(to).unwrap();
+                }
+                _ => {
+                    // Reconcile against a mutated copy (diverge + extend).
+                    let mut target = shadow.clone();
+                    if !target.is_empty() {
+                        let at = rng.next_below(target.len() as u32) as usize;
+                        target.truncate(at);
+                    }
+                    target.push(rng.next_below(vocab as u32) as i32);
+                    reconcile(&mut *sess, &target).unwrap();
+                    shadow = target;
+                }
+            }
+            assert_eq!(sess.tokens(), &shadow[..], "seed {seed}: prefix diverged");
+            assert_eq!(sess.len(), shadow.len(), "seed {seed}");
+            if !shadow.is_empty() {
+                // Spot-check a random cached row against a fresh forward:
+                // bit-identical, not approximately equal.
+                let t = rng.next_below(shadow.len() as u32) as usize;
+                let fresh = model.forward(&shadow).unwrap();
+                assert_eq!(sess.row(t), fresh.row(t), "seed {seed} pos {t}");
+            }
+        }
+    }
+}
+
+/// The session API on the trait-object / default path: StatelessSession
+/// must satisfy the same invariants as the cached mock session.
+#[test]
+fn prop_stateless_session_matches_cached() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg32::seeded(seed + 900);
+        let vocab = 6 + rng.next_below(10) as usize;
+        let cached_model = MockModel::new("m", 128, vocab, seed, 0.3);
+        let stateless_model = ForceStateless(MockModel::new("m", 128, vocab, seed, 0.3));
+        let mut cached = cached_model.open_session().unwrap();
+        let mut stateless = stateless_model.open_session().unwrap();
+        let mut shadow: Vec<i32> = Vec::new();
+        for _ in 0..25 {
+            if shadow.is_empty() || rng.next_f32() < 0.7 {
+                let k = 1 + rng.next_below(5) as usize;
+                let chunk: Vec<i32> =
+                    (0..k).map(|_| rng.next_below(vocab as u32) as i32).collect();
+                shadow.extend_from_slice(&chunk);
+                cached.append(&chunk).unwrap();
+                stateless.append(&chunk).unwrap();
+            } else {
+                let to = rng.next_below(shadow.len() as u32 + 1) as usize;
+                shadow.truncate(to);
+                cached.rollback(to).unwrap();
+                stateless.rollback(to).unwrap();
+            }
+            assert_eq!(cached.len(), stateless.len());
+            for t in 0..shadow.len() {
+                assert_eq!(cached.row(t), stateless.row(t), "seed {seed} pos {t}");
+            }
+        }
     }
 }
 
