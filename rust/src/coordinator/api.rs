@@ -64,10 +64,15 @@ impl Request {
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<Token>,
-    /// Time spent queued before a worker picked the request up.
+    /// Time spent queued before a worker opened a decode task for the
+    /// request.
     pub queue_time: Duration,
-    /// Decode wall time.
+    /// Task open -> finish. Under continuous batching this includes time
+    /// spent sharing the worker with interleaved requests; the pure decode
+    /// wall (sum of this task's step times) is smaller.
     pub service_time: Duration,
+    /// Enqueue -> first committed token.
+    pub ttft: Duration,
     /// Mean acceptance length at the target (μ) for speculative methods.
     pub mean_accept: f64,
     /// Per-model forward passes, chain order.
@@ -80,4 +85,16 @@ impl Response {
     pub fn tokens_per_s(&self) -> f64 {
         self.tokens.len() as f64 / self.service_time.as_secs_f64().max(1e-9)
     }
+}
+
+/// One item of a streamed generation (see `Server::submit_stream`):
+/// committed-token deltas as decode steps complete, then the final
+/// [`Response`].
+#[derive(Debug, Clone)]
+pub enum StreamItem {
+    /// Tokens committed by one decode step, in order.
+    Delta(Vec<Token>),
+    /// The generation finished; carries the full response (its `tokens`
+    /// equal the concatenation of all deltas).
+    Done(Response),
 }

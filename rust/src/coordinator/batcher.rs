@@ -1,10 +1,20 @@
-//! Dynamic batcher: groups queued requests into dispatch batches under a
-//! size-or-deadline policy (vLLM-style), with priority classes.
+//! Dynamic batcher: the admission queue feeding the continuous-batching
+//! step scheduler, with priority classes and a starvation guard.
 //!
-//! The paper's SpecBench protocol is batch-1 *decoding*; batching here
-//! operates at the request-dispatch level — workers pull batches and decode
-//! their members, so a multi-worker server drains bursts in parallel while
-//! a single worker degrades gracefully to FCFS.
+//! Two ways out of the queue:
+//!
+//! * [`DynamicBatcher::pop_batch`] — blocking pull of an *initial* batch
+//!   under a size-or-deadline policy (vLLM-style); an idle worker parks
+//!   here until work arrives.
+//! * [`DynamicBatcher::try_pop`] — non-blocking pull the step scheduler
+//!   calls **between decode steps**, so new requests join a mid-flight
+//!   round-robin instead of waiting for the running work to drain (the
+//!   continuous-batching admission path; see `coordinator::scheduler`).
+//!
+//! Interactive requests are drained before batch-class ones, except that a
+//! batch-class request that has waited longer than
+//! [`BatchPolicy::starvation_wait`] is promoted ahead of the interactive
+//! queue — sustained interactive load can no longer starve batch traffic.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -31,14 +41,27 @@ pub fn classify(req: &Request) -> Priority {
 
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
+    /// Maximum requests per initial batch AND maximum decode tasks a worker
+    /// keeps in flight at once (the continuous-batching concurrency cap).
     pub max_batch: usize,
     /// Dispatch a partial batch once its oldest member waited this long.
+    /// Under continuous batching stragglers also join mid-flight via
+    /// [`DynamicBatcher::try_pop`], so this window only shapes the
+    /// *initial* batch; latency-sensitive deployments can set it to zero
+    /// to shave its cost off time-to-first-token at an idle server.
     pub max_wait: Duration,
+    /// Anti-starvation: a batch-class request that has queued this long is
+    /// drained ahead of interactive requests.
+    pub starvation_wait: Duration,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 4, max_wait: Duration::from_millis(5) }
+        Self {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            starvation_wait: Duration::from_millis(250),
+        }
     }
 }
 
@@ -97,7 +120,8 @@ impl DynamicBatcher {
     }
 
     /// Blocking pull: returns `None` only when the queue is closed AND
-    /// drained. Interactive requests are always drained first.
+    /// drained. Interactive requests are drained first, subject to the
+    /// starvation guard.
     pub fn pop_batch(&self) -> Option<Batch> {
         let mut st = self.state.lock().unwrap();
         loop {
@@ -122,24 +146,44 @@ impl DynamicBatcher {
                         continue;
                     }
                 }
-                let mut out: Batch = Vec::with_capacity(self.policy.max_batch);
-                while out.len() < self.policy.max_batch {
-                    let q = if let Some(q) = st.interactive.pop_front() {
-                        q
-                    } else if let Some(q) = st.batch.pop_front() {
-                        q
-                    } else {
-                        break;
-                    };
-                    out.push((q.req, q.enqueued));
-                }
-                return Some(out);
+                return Some(self.drain_locked(&mut st, self.policy.max_batch));
             }
             if st.closed {
                 return None;
             }
             st = self.cv.wait(st).unwrap();
         }
+    }
+
+    /// Non-blocking pull of up to `n` requests — the step scheduler's
+    /// between-steps admission path. Returns an empty batch when the queue
+    /// is idle; never waits out the batching window.
+    pub fn try_pop(&self, n: usize) -> Batch {
+        let mut st = self.state.lock().unwrap();
+        self.drain_locked(&mut st, n)
+    }
+
+    /// Drain up to `n` queued requests under the priority policy:
+    /// interactive first, except that a batch-class head past
+    /// `starvation_wait` is promoted.
+    fn drain_locked(&self, st: &mut State, n: usize) -> Batch {
+        let mut out: Batch = Vec::with_capacity(n.min(st.interactive.len() + st.batch.len()));
+        while out.len() < n {
+            let starved = st
+                .batch
+                .front()
+                .is_some_and(|q| q.enqueued.elapsed() >= self.policy.starvation_wait);
+            let q = if starved {
+                st.batch.pop_front()
+            } else {
+                st.interactive.pop_front().or_else(|| st.batch.pop_front())
+            };
+            match q {
+                Some(q) => out.push((q.req, q.enqueued)),
+                None => break,
+            }
+        }
+        out
     }
 }
 
@@ -156,7 +200,7 @@ mod tests {
 
     #[test]
     fn batches_up_to_max() {
-        let b = DynamicBatcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
+        let b = DynamicBatcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO, ..Default::default() });
         for i in 0..3 {
             b.push(req(i, None));
         }
@@ -168,7 +212,7 @@ mod tests {
 
     #[test]
     fn interactive_preempts_batch() {
-        let b = DynamicBatcher::new(BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
+        let b = DynamicBatcher::new(BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..Default::default() });
         b.push(req(1, Some(TaskKind::Summarization)));
         b.push(req(2, Some(TaskKind::Math)));
         let first = b.pop_batch().unwrap();
@@ -176,8 +220,51 @@ mod tests {
     }
 
     #[test]
+    fn try_pop_is_nonblocking_and_bounded() {
+        let b = DynamicBatcher::new(BatchPolicy::default());
+        assert!(b.try_pop(4).is_empty(), "idle queue must return immediately");
+        for i in 0..3 {
+            b.push(req(i, None));
+        }
+        let got = b.try_pop(2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(b.try_pop(2).len(), 1);
+        assert!(b.try_pop(2).is_empty());
+    }
+
+    #[test]
+    fn starved_batch_request_promoted_over_interactive() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            starvation_wait: Duration::from_millis(10),
+        });
+        b.push(req(1, Some(TaskKind::Summarization))); // batch class
+        std::thread::sleep(Duration::from_millis(15)); // let it starve
+        b.push(req(2, Some(TaskKind::Math))); // interactive
+        b.push(req(3, Some(TaskKind::Qa))); // interactive
+        let got = b.try_pop(2);
+        assert_eq!(got[0].0.id, 1, "starved batch request must be promoted");
+        assert_eq!(got[1].0.id, 2);
+    }
+
+    #[test]
+    fn fresh_batch_request_still_yields_to_interactive() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            starvation_wait: Duration::from_secs(60),
+        });
+        b.push(req(1, Some(TaskKind::Summarization)));
+        b.push(req(2, Some(TaskKind::Math)));
+        let got = b.try_pop(2);
+        assert_eq!(got[0].0.id, 2);
+        assert_eq!(got[1].0.id, 1);
+    }
+
+    #[test]
     fn close_drains_then_none() {
-        let b = DynamicBatcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::ZERO });
+        let b = DynamicBatcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::ZERO, ..Default::default() });
         b.push(req(1, None));
         b.close();
         assert!(b.pop_batch().is_some());
@@ -190,6 +277,7 @@ mod tests {
         let b = Arc::new(DynamicBatcher::new(BatchPolicy {
             max_batch: 1,
             max_wait: Duration::ZERO,
+            ..Default::default()
         }));
         let b2 = b.clone();
         let h = std::thread::spawn(move || b2.pop_batch().map(|v| v[0].0.id));
@@ -203,6 +291,7 @@ mod tests {
         let b = DynamicBatcher::new(BatchPolicy {
             max_batch: 2,
             max_wait: Duration::from_millis(30),
+            ..Default::default()
         });
         b.push(req(1, None));
         let t0 = Instant::now();

@@ -7,6 +7,15 @@
 //! accounting model rather than live buffers — but the allocator, admission
 //! control and utilization accounting are the real thing and gate the
 //! router exactly as a vLLM-style block manager would.
+//!
+//! Under continuous batching a sequence's allocation tracks its **live
+//! length**: the router admits `prompt + speculative headroom`, and the
+//! step scheduler [`grow`](KvManager::grow)s the allocation as tokens
+//! commit ([`seq_tokens`](KvManager::seq_tokens) reports the tracked
+//! length).  Admission therefore reserves what a request *holds*, not its
+//! worst-case finished size — more concurrent sequences fit, at the cost
+//! that a `grow` can fail mid-decode when the pool saturates (the
+//! scheduler fails that request; a future PR can preempt instead).
 
 use std::collections::BTreeMap;
 
@@ -111,6 +120,11 @@ impl KvManager {
         }
     }
 
+    /// Tracked live length (tokens) of an admitted sequence, if any.
+    pub fn seq_tokens(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).map(|a| a.tokens)
+    }
+
     pub fn allocated_blocks(&self) -> usize {
         self.cfg.total_blocks - self.free_blocks
     }
@@ -155,8 +169,11 @@ mod tests {
         let mut m = mgr(10);
         m.admit(1, 7).unwrap(); // 2 blocks
         assert_eq!(m.allocated_blocks(), 2);
+        assert_eq!(m.seq_tokens(1), Some(7));
+        assert_eq!(m.seq_tokens(2), None);
         m.grow(1, 13).unwrap(); // 4 blocks total
         assert_eq!(m.allocated_blocks(), 4);
+        assert_eq!(m.seq_tokens(1), Some(13));
         assert_eq!(m.allocated_bytes(), 13 * 8);
         m.release(1).unwrap();
         assert_eq!(m.allocated_blocks(), 0);

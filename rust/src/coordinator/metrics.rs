@@ -81,10 +81,16 @@ pub struct Metrics {
     pub queue_latency: LatencyHistogram,
     pub service_latency: LatencyHistogram,
     pub e2e_latency: LatencyHistogram,
+    /// Time-to-first-token: enqueue -> first committed token of a request
+    /// (the latency continuous batching exists to protect).
+    pub ttft_latency: LatencyHistogram,
     pub requests_completed: AtomicU64,
     pub requests_rejected: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub target_forwards: AtomicU64,
+    /// Requests currently holding a live decode task on some worker.
+    inflight: AtomicU64,
+    inflight_peak: AtomicU64,
     /// Mean-acceptance accumulator (sum of per-request μ x 1000, fixed point).
     accept_milli_sum: AtomicU64,
     accept_count: AtomicU64,
@@ -116,6 +122,33 @@ impl Metrics {
         }
     }
 
+    /// Record a request's time-to-first-token (enqueue -> first commit).
+    pub fn record_first_token(&self, ttft: Duration) {
+        self.ttft_latency.record(ttft);
+    }
+
+    /// A decode task went live on a worker. Returns the new concurrency.
+    pub fn task_started(&self) -> u64 {
+        let now = self.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inflight_peak.fetch_max(now, Ordering::Relaxed);
+        now
+    }
+
+    /// A live decode task finished (or failed).
+    pub fn task_ended(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Decode tasks currently in flight across all workers.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of in-flight concurrency.
+    pub fn inflight_peak(&self) -> u64 {
+        self.inflight_peak.load(Ordering::Relaxed)
+    }
+
     pub fn mean_accept(&self) -> f64 {
         let n = self.accept_count.load(Ordering::Relaxed);
         if n == 0 {
@@ -140,10 +173,13 @@ impl Metrics {
         put("target_forwards",
             Json::Num(self.target_forwards.load(Ordering::Relaxed) as f64));
         put("mean_accept", Json::Num(self.mean_accept()));
+        put("inflight", Json::Num(self.inflight() as f64));
+        put("inflight_peak", Json::Num(self.inflight_peak() as f64));
         for (name, h) in [
             ("queue", &self.queue_latency),
             ("service", &self.service_latency),
             ("e2e", &self.e2e_latency),
+            ("ttft", &self.ttft_latency),
         ] {
             let mut lat = BTreeMap::new();
             lat.insert("mean_ms".into(), Json::Num(h.mean().as_secs_f64() * 1e3));
@@ -176,6 +212,21 @@ mod tests {
         assert!(h.quantile(0.5) <= h.quantile(0.95));
         assert!(h.quantile(0.95) <= h.quantile(1.0).max(h.max()));
         assert!(h.mean() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn inflight_gauge_tracks_peak() {
+        let m = Metrics::default();
+        assert_eq!(m.task_started(), 1);
+        assert_eq!(m.task_started(), 2);
+        m.task_ended();
+        assert_eq!(m.task_started(), 2);
+        m.task_ended();
+        m.task_ended();
+        assert_eq!(m.inflight(), 0);
+        assert_eq!(m.inflight_peak(), 2);
+        m.record_first_token(Duration::from_millis(3));
+        assert_eq!(m.ttft_latency.count(), 1);
     }
 
     #[test]

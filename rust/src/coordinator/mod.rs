@@ -1,6 +1,17 @@
-//! L3 serving coordinator: router -> dynamic batcher -> worker scheduler,
-//! with paged KV accounting and serving metrics. The decode algorithms live
-//! in [`crate::spec`]; this layer turns them into a server.
+//! L3 serving coordinator: router -> admission queue -> continuous-batching
+//! step scheduler, with live-length KV accounting and serving metrics.
+//!
+//! The decode algorithms live in [`crate::spec`] as resumable
+//! [`DecodeTask`](crate::spec::task::DecodeTask)s; this layer turns them
+//! into a server. Scheduling is **step-level**: each worker round-robins
+//! one draft→verify round per live task, admits newly queued requests
+//! between steps ([`batcher`]), streams committed tokens as they land
+//! ([`api::StreamItem`]), grows KV allocations with live sequence lengths
+//! ([`kv`]), and reports time-to-first-token + in-flight concurrency
+//! ([`metrics`]). Short interactive requests therefore finish while long
+//! batch requests are still mid-decode — no head-of-line blocking — while
+//! a starvation guard keeps sustained interactive load from parking batch
+//! traffic forever.
 
 pub mod api;
 pub mod batcher;
@@ -10,5 +21,6 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use api::{Method, Request, Response};
+pub use api::{Method, Request, Response, StreamItem};
+pub use scheduler::BatchEvent;
 pub use server::{Server, ServerConfig};

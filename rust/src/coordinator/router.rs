@@ -4,6 +4,11 @@
 //! speculative pipeline headroom) and that the KV pool can host it, then
 //! routes it to the family's queue. Multi-family deployments route by the
 //! request's family tag.
+//!
+//! KV admission is **live-length** based: the router reserves only what the
+//! request holds on arrival (prompt + the speculative pipeline window); the
+//! step scheduler grows the allocation as tokens commit. See
+//! `coordinator::kv`.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -86,14 +91,17 @@ impl Router {
         if req.prompt.is_empty() {
             return Err(RejectReason::EmptyPrompt);
         }
-        let need =
-            req.prompt.len() + req.max_new + pipeline_headroom(&req.method, lane.n_models);
+        let headroom = pipeline_headroom(&req.method, lane.n_models);
+        let need = req.prompt.len() + req.max_new + headroom;
         if need > lane.seq_len {
             return Err(RejectReason::ContextOverflow { need, cap: lane.seq_len });
         }
         {
+            // Reserve the live footprint only (prompt + speculative
+            // window); the scheduler grows it as tokens commit.
             let mut kv = lane.kv.lock().unwrap();
-            kv.admit(req.id, need).map_err(|_| RejectReason::KvExhausted)?;
+            kv.admit(req.id, req.prompt.len() + headroom)
+                .map_err(|_| RejectReason::KvExhausted)?;
         }
         lane.batcher.push(req);
         Ok(())
@@ -111,6 +119,7 @@ mod tests {
             batcher: Arc::new(DynamicBatcher::new(BatchPolicy {
                 max_batch: 4,
                 max_wait: std::time::Duration::ZERO,
+                ..Default::default()
             })),
             kv: Arc::new(Mutex::new(KvManager::new(KvConfig {
                 block_size: 16,

@@ -1,50 +1,93 @@
-//! Worker scheduler: drains batches from the queue and decodes them.
+//! Continuous-batching step scheduler: the worker's decode loop.
 //!
-//! Within a dispatched batch the scheduler runs shortest-job-first (by
-//! output budget) — the classic latency win when a worker serializes batch
-//! members (decode itself is batch-1, the paper's protocol). The scheduler
-//! owns the decode dispatch: it picks the algorithm for the request's
-//! [`Method`], manages KV admission lifecycles, and reports metrics.
+//! The pre-refactor scheduler dispatched *whole requests*: each batch
+//! member ran `generate()` to completion, so a 512-token batch job
+//! head-of-line-blocked a 10-token interactive one. [`run_batch`] now
+//! schedules **decode steps**: every live request is a resumable
+//! [`DecodeTask`] (one [`step`](DecodeTask::step) = one draft→verify
+//! round), and the scheduler round-robins one step per task per sweep.
+//! Between sweeps it admits newly queued requests
+//! ([`DynamicBatcher::try_pop`]), so interactive arrivals join mid-flight
+//! instead of waiting for the running work to drain; committed tokens
+//! stream out as [`BatchEvent::Delta`]s the moment their step completes;
+//! KV allocations grow with each task's live length; and [`Metrics`] gains
+//! time-to-first-token and in-flight concurrency.
+//!
+//! The scheduler owns the decode dispatch: it picks the task type for the
+//! request's [`Method`], manages KV admission lifecycles, and reports
+//! metrics. Initial batches are ordered shortest-job-first (by output
+//! budget) so short jobs take the early round-robin slots, but under
+//! continuous batching ordering only affects step interleaving — nothing
+//! waits for a longer neighbour to finish.
 
+use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::spec::types::{GenerationOutput, LanguageModel};
-use crate::spec::{autoregressive, dualistic, polybasic, PolyConfig};
+use crate::spec::autoregressive::ArTask;
+use crate::spec::dualistic::{self, DualisticTask};
+use crate::spec::polybasic::PolyTask;
+use crate::spec::task::DecodeTask;
+use crate::spec::types::{GenerationOutput, LanguageModel, Token};
+use crate::spec::PolyConfig;
 
 use super::api::{Method, Request, Response};
+use super::batcher::DynamicBatcher;
 use super::kv::KvManager;
 use super::metrics::Metrics;
+use super::router::pipeline_headroom;
 
-/// Decode one request against a chain (target first).
-pub fn decode(chain: &[Arc<dyn LanguageModel>], req: &Request) -> Result<GenerationOutput> {
+/// Open a resumable decode task for one request against a chain (target
+/// first). The task borrows the chain and owns one scoring session per
+/// member.
+pub fn open_task<'m>(
+    chain: &'m [Arc<dyn LanguageModel>],
+    req: &Request,
+) -> Result<Box<dyn DecodeTask + 'm>> {
     match req.method {
-        Method::Autoregressive => {
-            autoregressive::generate(chain[0].as_ref(), &req.prompt, req.max_new, &req.sampling)
-        }
+        Method::Autoregressive => Ok(Box::new(ArTask::new(
+            chain[0].as_ref(),
+            &req.prompt,
+            req.max_new,
+            req.sampling,
+        )?)),
         Method::Dualistic { draft_k } => {
             let draft = chain.last().expect("chain non-empty");
-            dualistic::generate(
+            Ok(Box::new(DualisticTask::new(
                 chain[0].as_ref(),
                 draft.as_ref(),
                 &req.prompt,
-                &dualistic::DualisticConfig {
+                dualistic::DualisticConfig {
                     draft_k,
                     rule: req.rule,
                     sampling: req.sampling,
                     max_new: req.max_new,
                 },
-            )
+            )?))
         }
         Method::Polybasic { draft_k, mu } => {
             let mut cfg = PolyConfig::for_chain(chain.len(), draft_k, mu, req.max_new);
             cfg.rule = req.rule;
             cfg.sampling = req.sampling;
-            polybasic::generate(chain, &req.prompt, &cfg)
+            Ok(Box::new(PolyTask::new(chain, &req.prompt, cfg)?))
         }
     }
+}
+
+/// Decode one request to completion (the single-shot path: CLI, benches).
+/// Shares the Method-to-task dispatch with the serving path through
+/// [`open_task`], so served and one-shot output cannot drift.
+pub fn decode(chain: &[Arc<dyn LanguageModel>], req: &Request) -> Result<GenerationOutput> {
+    for m in chain {
+        m.reset_counters();
+    }
+    let mut task = open_task(chain, req)?;
+    while !task.finished() {
+        task.step()?;
+    }
+    Ok(task.finish())
 }
 
 /// Order a batch shortest-job-first by output budget (stable for ties).
@@ -52,48 +95,184 @@ pub fn sjf_order(batch: &mut [(Request, Instant)]) {
     batch.sort_by_key(|(r, _)| r.max_new);
 }
 
-/// Decode a dispatched batch on this worker, emitting responses.
+/// Progress notifications emitted by [`run_batch`] as it schedules steps.
+#[derive(Debug)]
+pub enum BatchEvent<'a> {
+    /// One decode step committed new tokens for request `id` (in order;
+    /// concatenated deltas equal the final response's tokens).
+    Delta { id: u64, tokens: &'a [Token] },
+    /// Request `id` left the scheduler: finished, failed, or refused at
+    /// task-open time. Carries the response by value — the scheduler
+    /// retains nothing per completed request, so a server worker can stay
+    /// inside one `run_batch` call indefinitely under sustained load
+    /// without accumulating memory.
+    Done { id: u64, response: Result<Response> },
+}
+
+/// A request with a live decode task on this worker.
+struct Live<'m> {
+    req: Request,
+    enqueued: Instant,
+    opened: Instant,
+    queue_time: std::time::Duration,
+    headroom: usize,
+    ttft: Option<std::time::Duration>,
+    /// Committed tokens already emitted as deltas.
+    streamed: usize,
+    task: Box<dyn DecodeTask + 'm>,
+}
+
+/// Continuous-batching decode of `batch` (plus anything `admit` delivers
+/// while work is in flight) on this worker.
+///
+/// Round-robin, one step per live task per sweep; between sweeps up to
+/// `max_live` tasks are kept alive by pulling newly queued requests from
+/// `admit` — an interactive request completes while a long batch request
+/// is still mid-decode instead of waiting behind it. Returns when the live
+/// set and (momentarily) the admission queue are empty. All output flows
+/// through `on_event`: every committed-token delta as it lands, then one
+/// [`BatchEvent::Done`] per request in **completion order** (failures
+/// surface as `Err` responses rather than silent drops). KV for every
+/// request is released exactly once.
 pub fn run_batch(
     chain: &[Arc<dyn LanguageModel>],
     mut batch: Vec<(Request, Instant)>,
+    admit: Option<&DynamicBatcher>,
+    max_live: usize,
     kv: &Arc<Mutex<KvManager>>,
     metrics: &Arc<Metrics>,
-) -> Vec<Result<Response>> {
+    mut on_event: impl FnMut(BatchEvent<'_>),
+) {
+    let max_live = max_live.max(1);
     sjf_order(&mut batch);
-    let mut out = Vec::with_capacity(batch.len());
-    for (req, enqueued) in batch {
-        let queue_time = enqueued.elapsed();
-        let started = Instant::now();
-        let result = decode(chain, &req);
-        let released = kv.lock().unwrap().release(req.id);
-        let resp = result.map(|gen| {
-            let service_time = started.elapsed();
-            metrics.record_completion(
-                queue_time,
-                service_time,
-                gen.tokens.len(),
-                gen.forward_passes.first().copied().unwrap_or(0),
-                gen.mean_accept(),
-                req.task.map(|t| t.label()),
-            );
-            Response {
-                id: req.id,
-                tokens: gen.tokens,
-                queue_time,
-                service_time,
-                mean_accept: gen.accept_lengths.iter().map(|&a| a as f64).sum::<f64>()
-                    / gen.accept_lengths.len().max(1) as f64,
-                forward_passes: gen.forward_passes,
-                task: req.task,
-                method: req.method,
+    let mut waiting: VecDeque<(Request, Instant)> = batch.into();
+    let mut live: Vec<Live<'_>> = Vec::new();
+
+    loop {
+        // ---- admission: new requests join between steps ------------------
+        if let Some(queue) = admit {
+            if live.len() + waiting.len() < max_live {
+                waiting.extend(queue.try_pop(max_live - live.len() - waiting.len()));
             }
-        });
-        // A sequence the router admitted must always be released, even if
-        // decode failed; surface double-release bugs loudly in debug builds.
-        debug_assert!(released.is_ok() || resp.is_err() || true);
-        out.push(resp);
+        }
+        while live.len() < max_live {
+            let Some((req, enqueued)) = waiting.pop_front() else { break };
+            let opened = Instant::now();
+            match open_task(chain, &req) {
+                Ok(task) => {
+                    metrics.task_started();
+                    live.push(Live {
+                        headroom: pipeline_headroom(&req.method, chain.len()),
+                        queue_time: opened.duration_since(enqueued),
+                        req,
+                        enqueued,
+                        opened,
+                        ttft: None,
+                        streamed: 0,
+                        task,
+                    });
+                }
+                Err(e) => {
+                    // The router admitted it, so the KV reservation exists
+                    // and must be returned even though no task ever ran.
+                    let released = kv.lock().unwrap().release(req.id);
+                    debug_assert!(
+                        released.is_ok(),
+                        "KV release failed for request {}: every admitted request \
+                         must hold exactly one allocation ({released:?})",
+                        req.id
+                    );
+                    on_event(BatchEvent::Done { id: req.id, response: Err(e) });
+                }
+            }
+        }
+        if live.is_empty() {
+            break;
+        }
+
+        // ---- one sweep: one step per live task, round-robin --------------
+        let mut i = 0;
+        while i < live.len() {
+            let (step_err, finished) = {
+                let l = &mut live[i];
+                match l.task.step() {
+                    Ok(_) => {
+                        let mut err = None;
+                        let committed_len = l.task.committed().len();
+                        if committed_len > l.streamed {
+                            if l.ttft.is_none() {
+                                let ttft = l.enqueued.elapsed();
+                                l.ttft = Some(ttft);
+                                metrics.record_first_token(ttft);
+                            }
+                            on_event(BatchEvent::Delta {
+                                id: l.req.id,
+                                tokens: &l.task.committed()[l.streamed..],
+                            });
+                            l.streamed = committed_len;
+                            // Track the live length in the KV manager; a
+                            // saturated pool fails the request (no silent
+                            // overcommit).
+                            let target = l.req.prompt.len() + l.streamed + l.headroom;
+                            let mut kv = kv.lock().unwrap();
+                            if kv.seq_tokens(l.req.id).is_some_and(|cur| target > cur) {
+                                if let Err(e) = kv.grow(l.req.id, target) {
+                                    err = Some(e);
+                                }
+                            }
+                        }
+                        let finished = err.is_none() && l.task.finished();
+                        (err, finished)
+                    }
+                    Err(e) => (Some(e), false),
+                }
+            };
+            if step_err.is_none() && !finished {
+                i += 1;
+                continue;
+            }
+
+            // ---- completion: release KV, record metrics, emit ------------
+            let Live { req, opened, queue_time, ttft, task, .. } = live.remove(i);
+            metrics.task_ended();
+            let released = kv.lock().unwrap().release(req.id);
+            debug_assert!(
+                released.is_ok(),
+                "KV release failed for request {}: every admitted request must \
+                 hold exactly one allocation ({released:?})",
+                req.id
+            );
+            let id = req.id;
+            let resp: Result<Response> = match step_err {
+                Some(e) => Err(e),
+                None => {
+                    let gen = task.finish();
+                    let service_time = opened.elapsed();
+                    let mean_accept = gen.mean_accept();
+                    metrics.record_completion(
+                        queue_time,
+                        service_time,
+                        gen.tokens.len(),
+                        gen.forward_passes.first().copied().unwrap_or(0),
+                        mean_accept,
+                        req.task.map(|t| t.label()),
+                    );
+                    Ok(Response {
+                        id,
+                        tokens: gen.tokens,
+                        queue_time,
+                        service_time,
+                        ttft: ttft.unwrap_or(queue_time + service_time),
+                        mean_accept,
+                        forward_passes: gen.forward_passes,
+                        task: req.task,
+                        method: req.method,
+                    })
+                }
+            };
+            on_event(BatchEvent::Done { id, response: resp });
+        }
     }
-    out
 }
 
 #[cfg(test)]
@@ -142,7 +321,12 @@ mod tests {
             (req, now)
         })
         .collect();
-        let out = run_batch(&chain, batch, &kv, &metrics);
+        let mut out: Vec<Result<Response>> = Vec::new();
+        run_batch(&chain, batch, None, 4, &kv, &metrics, |ev| {
+            if let BatchEvent::Done { response, .. } = ev {
+                out.push(response);
+            }
+        });
         assert_eq!(out.len(), 3);
         for r in &out {
             let resp = r.as_ref().unwrap();
@@ -150,5 +334,51 @@ mod tests {
         }
         assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
         assert_eq!(metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(metrics.inflight(), 0);
+        assert!(metrics.inflight_peak() >= 2, "steps should interleave");
+        assert_eq!(metrics.ttft_latency.count(), 3);
+    }
+
+    #[test]
+    fn response_mean_accept_matches_generation_output() {
+        let chain = mock_chain(512, 24, 9);
+        let kv = Arc::new(Mutex::new(KvManager::new(KvConfig::default())));
+        let metrics = Arc::new(Metrics::default());
+        let req = mk_req(1, 16, Method::Polybasic { draft_k: 3, mu: 4 });
+        kv.lock().unwrap().admit(1, 60).unwrap();
+        let gen = decode(&chain, &req).unwrap();
+        let mut out: Vec<Result<Response>> = Vec::new();
+        run_batch(&chain, vec![(req, Instant::now())], None, 1, &kv, &metrics, |ev| {
+            if let BatchEvent::Done { response, .. } = ev {
+                out.push(response);
+            }
+        });
+        let resp = out[0].as_ref().unwrap();
+        assert_eq!(resp.tokens, gen.tokens, "stepped serving must match one-shot decode");
+        assert!(
+            (resp.mean_accept - gen.mean_accept()).abs() < 1e-12,
+            "response mean_accept {} != generation {}",
+            resp.mean_accept,
+            gen.mean_accept()
+        );
+    }
+
+    #[test]
+    fn open_failure_releases_kv_and_reports_error() {
+        let chain = mock_chain(64, 24, 5); // tiny context
+        let kv = Arc::new(Mutex::new(KvManager::new(KvConfig::default())));
+        let metrics = Arc::new(Metrics::default());
+        // max_new far beyond the 64-token context: task open must fail.
+        let req = mk_req(1, 600, Method::Polybasic { draft_k: 3, mu: 4 });
+        kv.lock().unwrap().admit(1, 30).unwrap();
+        let mut out: Vec<Result<Response>> = Vec::new();
+        run_batch(&chain, vec![(req, Instant::now())], None, 2, &kv, &metrics, |ev| {
+            if let BatchEvent::Done { response, .. } = ev {
+                out.push(response);
+            }
+        });
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_err());
+        assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked on open failure");
     }
 }

@@ -1,9 +1,14 @@
 //! The serving loop: router -> batcher -> worker threads -> responses.
 //!
 //! Each worker thread owns its own [`EngineHost`] (PJRT objects are
-//! thread-bound), pulls batches from the shared queue, decodes them with the
-//! configured chain, and delivers [`Response`]s through per-request
-//! channels. No Python anywhere near this path.
+//! thread-bound), parks on the shared queue, and runs the
+//! continuous-batching step scheduler ([`scheduler::run_batch`]) over a
+//! chain of resumable decode tasks: new requests are admitted between
+//! decode steps, committed tokens stream out per step, and a short
+//! interactive request finishes while a long batch request is still
+//! mid-decode. Clients receive either a single final [`Response`]
+//! ([`Server::submit`]) or a live [`StreamItem`] feed of per-step token
+//! deltas ([`Server::submit_stream`]). No Python anywhere near this path.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -15,12 +20,12 @@ use anyhow::{Context, Result};
 use crate::runtime::EngineHost;
 use crate::workload::tasks::TaskKind;
 
-use super::api::{Method, Request, Response};
+use super::api::{Method, Request, Response, StreamItem};
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::kv::{chain_bytes_per_token, KvConfig, KvManager};
 use super::metrics::Metrics;
 use super::router::{FamilyLane, RejectReason, Router};
-use super::scheduler;
+use super::scheduler::{self, BatchEvent};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -48,13 +53,22 @@ impl ServerConfig {
     }
 }
 
+/// Where a request's output goes: one final response, or a live stream of
+/// per-step deltas followed by the final response.
+enum ReplySink {
+    Final(mpsc::Sender<Response>),
+    Stream(mpsc::Sender<StreamItem>),
+}
+
+type SinkMap = Arc<Mutex<HashMap<u64, ReplySink>>>;
+
 /// A running server instance.
 pub struct Server {
     router: Router,
     batcher: Arc<DynamicBatcher>,
     metrics: Arc<Metrics>,
     kv: Arc<Mutex<KvManager>>,
-    replies: Arc<Mutex<HashMap<u64, mpsc::Sender<Response>>>>,
+    replies: SinkMap,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     seq_len: usize,
@@ -66,8 +80,7 @@ impl Server {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
         let batcher = Arc::new(DynamicBatcher::new(cfg.batch));
         let metrics = Arc::new(Metrics::default());
-        let replies: Arc<Mutex<HashMap<u64, mpsc::Sender<Response>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        let replies: SinkMap = Arc::new(Mutex::new(HashMap::new()));
 
         // Probe the manifest once for chain geometry.
         let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
@@ -97,6 +110,7 @@ impl Server {
 
         let mut workers = Vec::with_capacity(cfg.workers);
         let roles: Vec<String> = cfg.roles.clone();
+        let max_live = cfg.batch.max_batch;
         for w in 0..cfg.workers {
             let batcher = batcher.clone();
             let metrics = metrics.clone();
@@ -121,16 +135,19 @@ impl Server {
                         }
                     };
                     let chain = host.chain();
+                    // Park until work arrives, then continuously batch: the
+                    // step scheduler keeps admitting from the queue between
+                    // steps and returns only once it drains.
                     while let Some(batch) = batcher.pop_batch() {
-                        let results = scheduler::run_batch(&chain, batch, &kv, &metrics);
-                        for result in results {
-                            if let Ok(resp) = result {
-                                let tx = replies.lock().unwrap().remove(&resp.id);
-                                if let Some(tx) = tx {
-                                    let _ = tx.send(resp);
-                                }
-                            }
-                        }
+                        scheduler::run_batch(
+                            &chain,
+                            batch,
+                            Some(&batcher),
+                            max_live,
+                            &kv,
+                            &metrics,
+                            |event| deliver(&replies, event),
+                        );
                     }
                 })
                 .context("spawning worker")?;
@@ -153,14 +170,13 @@ impl Server {
         })
     }
 
-    /// Submit a generation; returns a receiver that yields the response.
-    pub fn submit(
+    fn make_request(
         &self,
         prompt: Vec<crate::spec::types::Token>,
         max_new: usize,
         method: Method,
         task: Option<TaskKind>,
-    ) -> Result<mpsc::Receiver<Response>, RejectReason> {
+    ) -> Request {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = Request::new(id, prompt, max_new);
         req.method = method;
@@ -169,16 +185,52 @@ impl Server {
             req.sampling.temperature = t.temperature();
             req.sampling.seed = id;
         }
-        let (tx, rx) = mpsc::channel();
-        self.replies.lock().unwrap().insert(id, tx);
+        req
+    }
+
+    fn route(&self, req: Request, sink: ReplySink) -> Result<(), RejectReason> {
+        let id = req.id;
+        self.replies.lock().unwrap().insert(id, sink);
         match self.router.route(None, req) {
-            Ok(()) => Ok(rx),
+            Ok(()) => Ok(()),
             Err(e) => {
                 self.replies.lock().unwrap().remove(&id);
                 self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                 Err(e)
             }
         }
+    }
+
+    /// Submit a generation; returns a receiver that yields the final
+    /// response once the decode completes.
+    pub fn submit(
+        &self,
+        prompt: Vec<crate::spec::types::Token>,
+        max_new: usize,
+        method: Method,
+        task: Option<TaskKind>,
+    ) -> Result<mpsc::Receiver<Response>, RejectReason> {
+        let req = self.make_request(prompt, max_new, method, task);
+        let (tx, rx) = mpsc::channel();
+        self.route(req, ReplySink::Final(tx))?;
+        Ok(rx)
+    }
+
+    /// Submit a generation and stream it: the receiver yields a
+    /// [`StreamItem::Delta`] for every decode step that commits tokens
+    /// (first delta = time-to-first-token), then [`StreamItem::Done`] with
+    /// the final response. A failed decode simply closes the channel.
+    pub fn submit_stream(
+        &self,
+        prompt: Vec<crate::spec::types::Token>,
+        max_new: usize,
+        method: Method,
+        task: Option<TaskKind>,
+    ) -> Result<mpsc::Receiver<StreamItem>, RejectReason> {
+        let req = self.make_request(prompt, max_new, method, task);
+        let (tx, rx) = mpsc::channel();
+        self.route(req, ReplySink::Stream(tx))?;
+        Ok(rx)
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -216,6 +268,33 @@ impl Server {
             std::thread::sleep(Duration::from_millis(10));
         }
         false
+    }
+}
+
+/// Fan a scheduler event out to the request's sink. Delta events reach
+/// stream sinks only; Done removes the sink and delivers the final
+/// response (errors close the channel by dropping the sink).
+fn deliver(replies: &SinkMap, event: BatchEvent<'_>) {
+    match event {
+        BatchEvent::Delta { id, tokens } => {
+            let map = replies.lock().unwrap();
+            if let Some(ReplySink::Stream(tx)) = map.get(&id) {
+                let _ = tx.send(StreamItem::Delta(tokens.to_vec()));
+            }
+        }
+        BatchEvent::Done { id, response } => {
+            let sink = replies.lock().unwrap().remove(&id);
+            if let (Some(sink), Ok(resp)) = (sink, response) {
+                match sink {
+                    ReplySink::Final(tx) => {
+                        let _ = tx.send(resp);
+                    }
+                    ReplySink::Stream(tx) => {
+                        let _ = tx.send(StreamItem::Done(resp));
+                    }
+                }
+            }
+        }
     }
 }
 

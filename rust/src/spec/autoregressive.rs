@@ -1,17 +1,121 @@
 //! Vanilla autoregressive decoding — the speedup-ratio denominator.
 //!
-//! Runs on a [`ScoringSession`](super::types::ScoringSession), so each step
-//! scores only the freshly sampled token on backends with prefix caching
-//! (falling back to full-context forwards through `StatelessSession`).
-//! Call accounting is unchanged: one scoring call per generated token.
-
-use std::time::Instant;
+//! Implemented as a steppable [`ArTask`] (one token per
+//! [`step`](DecodeTask::step)) with [`generate`] as the drive-to-completion
+//! wrapper. Runs on a [`ScoringSession`](super::types::ScoringSession), so
+//! each step scores only the freshly sampled token on backends with prefix
+//! caching (falling back to full-context forwards through
+//! `StatelessSession`). Call accounting is unchanged: one scoring call per
+//! generated token.
 
 use anyhow::Result;
 
 use super::rng::Pcg32;
 use super::sampler::{self};
-use super::types::{softmax_into, GenerationOutput, LanguageModel, SamplingParams, Token};
+use super::task::{DecodeTask, StepMeter, StepOutcome};
+use super::types::{
+    softmax_into, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token,
+};
+
+/// Autoregressive decode as a resumable state machine: `step` commits
+/// exactly one token. The prompt is prefilled lazily on the first step, so
+/// constructing a task is free.
+pub struct ArTask<'m> {
+    model: &'m dyn LanguageModel,
+    session: Box<dyn ScoringSession + 'm>,
+    prompt: Vec<Token>,
+    max_new: usize,
+    sampling: SamplingParams,
+    rng: Pcg32,
+    probs: Vec<f32>,
+    scratch: sampler::FilterScratch,
+    tokens: Vec<Token>,
+    meter: StepMeter,
+}
+
+impl<'m> ArTask<'m> {
+    pub fn new(
+        model: &'m dyn LanguageModel,
+        prompt: &[Token],
+        max_new: usize,
+        sampling: SamplingParams,
+    ) -> Result<Self> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt.len() + max_new <= model.seq_len(),
+            "prompt {} + max_new {} exceeds context {}",
+            prompt.len(),
+            max_new,
+            model.seq_len()
+        );
+        Ok(Self {
+            model,
+            session: model.open_session()?,
+            prompt: prompt.to_vec(),
+            max_new,
+            sampling,
+            rng: Pcg32::seeded(sampling.seed),
+            probs: Vec::new(),
+            scratch: sampler::FilterScratch::default(),
+            tokens: Vec::with_capacity(max_new),
+            meter: StepMeter::new(1),
+        })
+    }
+}
+
+impl DecodeTask for ArTask<'_> {
+    fn committed(&self) -> &[Token] {
+        &self.tokens
+    }
+
+    fn finished(&self) -> bool {
+        self.tokens.len() >= self.max_new
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.finished() {
+            return Ok(StepOutcome::Finished { new_tokens: 0 });
+        }
+        let models: [&dyn LanguageModel; 1] = [self.model];
+        self.meter.begin(&models);
+        // Lazy prefill: the prompt is scored on the first step.
+        if self.session.is_empty() {
+            self.session.append(&self.prompt)?;
+        }
+        softmax_into(
+            self.session.row(self.session.len() - 1),
+            self.sampling.temperature,
+            &mut self.probs,
+        );
+        let tok =
+            sampler::sample_scratch(&mut self.probs, &self.sampling, &mut self.rng, &mut self.scratch);
+        self.tokens.push(tok);
+        // The final token's own row is never read — skip scoring it.
+        if self.tokens.len() < self.max_new {
+            self.session.append(&[tok])?;
+        }
+        self.meter.end(&models);
+        if self.finished() {
+            Ok(StepOutcome::Finished { new_tokens: 1 })
+        } else {
+            Ok(StepOutcome::Progress { new_tokens: 1 })
+        }
+    }
+
+    fn finish(self: Box<Self>) -> GenerationOutput {
+        let accept = vec![1; self.tokens.len()];
+        let tokens = self.tokens;
+        let (wall, forward_passes, forward_time) = self.meter.into_parts();
+        GenerationOutput {
+            tokens,
+            wall,
+            forward_passes,
+            forward_time,
+            accept_lengths: accept,
+            stage_accept_lengths: vec![],
+        }
+    }
+}
 
 /// Generate `max_new` tokens with plain next-token sampling.
 pub fn generate(
@@ -20,41 +124,12 @@ pub fn generate(
     max_new: usize,
     sampling: &SamplingParams,
 ) -> Result<GenerationOutput> {
-    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-    anyhow::ensure!(
-        prompt.len() + max_new <= model.seq_len(),
-        "prompt {} + max_new {} exceeds context {}",
-        prompt.len(),
-        max_new,
-        model.seq_len()
-    );
     model.reset_counters();
-    let start = Instant::now();
-    let mut rng = Pcg32::seeded(sampling.seed);
-    let mut tokens: Vec<Token> = Vec::with_capacity(max_new);
-    if max_new > 0 {
-        let mut session = model.open_session()?;
-        session.append(prompt)?;
-        let mut probs: Vec<f32> = Vec::new();
-        let mut scratch = sampler::FilterScratch::default();
-        for i in 0..max_new {
-            softmax_into(session.row(session.len() - 1), sampling.temperature, &mut probs);
-            let tok = sampler::sample_scratch(&mut probs, sampling, &mut rng, &mut scratch);
-            tokens.push(tok);
-            // The final token's own row is never read — skip scoring it.
-            if i + 1 < max_new {
-                session.append(&[tok])?;
-            }
-        }
+    let mut task = ArTask::new(model, prompt, max_new, *sampling)?;
+    while !task.finished() {
+        task.step()?;
     }
-    Ok(GenerationOutput {
-        tokens,
-        wall: start.elapsed(),
-        forward_passes: vec![model.calls()],
-        forward_time: vec![model.total_time()],
-        accept_lengths: vec![1; max_new],
-        stage_accept_lengths: vec![],
-    })
+    Ok(Box::new(task).finish())
 }
 
 #[cfg(test)]
@@ -98,6 +173,37 @@ mod tests {
         let b = generate(&stateless, &[5, 1], 20, &params).unwrap();
         assert_eq!(a.tokens, b.tokens);
         assert_eq!(a.forward_passes, b.forward_passes);
+    }
+
+    #[test]
+    fn stepped_task_commits_one_token_per_step() {
+        let m = MockModel::new("m", 64, 16, 1, 0.0);
+        let mut task = ArTask::new(&m, &[1, 2], 5, SamplingParams::default()).unwrap();
+        let mut steps = 0;
+        while !task.finished() {
+            let before = task.committed().len();
+            let o = task.step().unwrap();
+            assert_eq!(o.new_tokens(), 1);
+            assert_eq!(task.committed().len(), before + 1);
+            steps += 1;
+        }
+        assert_eq!(steps, 5);
+        // Stepping a finished task is a no-op.
+        assert_eq!(task.step().unwrap(), StepOutcome::Finished { new_tokens: 0 });
+        let out = Box::new(task).finish();
+        assert_eq!(out.tokens.len(), 5);
+        assert_eq!(out.forward_passes, vec![5]);
+    }
+
+    #[test]
+    fn zero_budget_task_is_born_finished() {
+        let m = MockModel::new("m", 64, 16, 1, 0.0);
+        let task = ArTask::new(&m, &[1], 0, SamplingParams::default()).unwrap();
+        assert!(task.finished());
+        assert!(task.committed().is_empty());
+        let out = Box::new(task).finish();
+        assert!(out.tokens.is_empty());
+        assert_eq!(out.forward_passes, vec![0]);
     }
 
     #[test]

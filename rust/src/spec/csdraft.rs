@@ -12,20 +12,22 @@
 //!   accepted) get the *better* drafters and longer budgets; later positions
 //!   fall to cheaper drafters.
 //!
-//! Verification is one target scoring of the assembled block, with each
-//! position verified against the distribution of whichever drafter proposed
-//! it.  Every cascade member holds a [`ScoringSession`], so drafters score
-//! only their own new tokens and a rejection rolls cached prefixes back
-//! instead of rescoring them.
+//! Implemented as a steppable [`CsDraftTask`]: one
+//! [`step`](DecodeTask::step) assembles one cascade block and verifies it
+//! with one target scoring, each position checked against the distribution
+//! of whichever drafter proposed it; [`generate`] drives a task to
+//! completion. Every cascade member holds a [`ScoringSession`], so drafters
+//! score only their own new tokens and a rejection rolls cached prefixes
+//! back instead of rescoring them.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use super::dualistic::{dist_row_into, pick};
 use super::rng::Pcg32;
 use super::sampler::FilterScratch;
+use super::task::{DecodeTask, StepMeter, StepOutcome};
 use super::types::{
     reconcile, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
 };
@@ -47,69 +49,123 @@ impl CsDraftConfig {
     }
 }
 
-/// Generate with a CS-Drafting cascade. `models[0]` is the target; the
-/// remaining entries are drafters in decreasing capability (the last one is
-/// typically a [`BigramModel`](super::ngram::BigramModel)).
-pub fn generate(
-    models: &[Arc<dyn LanguageModel>],
-    prompt: &[Token],
-    cfg: &CsDraftConfig,
-) -> Result<GenerationOutput> {
-    anyhow::ensure!(models.len() >= 2, "need a target and at least one drafter");
-    anyhow::ensure!(
-        cfg.lens.len() == models.len() - 1,
-        "need a horizontal budget per drafter ({} != {})",
-        cfg.lens.len(),
-        models.len() - 1
-    );
-    anyhow::ensure!(cfg.block_len() >= 1, "empty draft block");
-    let seq_cap = models.iter().map(|m| m.seq_len()).min().unwrap();
-    anyhow::ensure!(
-        prompt.len() + cfg.max_new + cfg.block_len() + 1 <= seq_cap,
-        "request does not fit the context window"
-    );
-
-    for m in models {
-        m.reset_counters();
-    }
-    let start = Instant::now();
-    let mut rng = Pcg32::seeded(cfg.sampling.seed);
-    let mut ctx = prompt.to_vec();
-    let mut accept_lengths = Vec::new();
-    let mut stage_accepts: Vec<Vec<u32>> = vec![Vec::new(); models.len() - 1];
-
-    let mut sessions: Vec<Box<dyn ScoringSession + '_>> = Vec::with_capacity(models.len());
-    for m in models {
-        sessions.push(m.open_session()?);
-    }
-    let mut scratch = FilterScratch::default();
+/// CS-Drafting decode as a resumable state machine. `models[0]` is the
+/// target; the remaining entries are drafters in decreasing capability (the
+/// last one is typically a [`BigramModel`](super::ngram::BigramModel)).
+pub struct CsDraftTask<'m> {
+    models: Vec<&'m dyn LanguageModel>,
+    sessions: Vec<Box<dyn ScoringSession + 'm>>,
+    cfg: CsDraftConfig,
+    rng: Pcg32,
+    scratch: FilterScratch,
+    ctx: Vec<Token>,
+    prompt_len: usize,
     // Round-persistent buffers: the assembled block, per-position proposal
     // distributions, the verifier row, and the frontier (ctx + block).
-    let mut block: Vec<Token> = Vec::new();
-    let mut q_rows: Vec<Vec<f32>> = Vec::new();
-    let mut p: Vec<f32> = Vec::new();
-    let mut frontier: Vec<Token> = Vec::new();
+    block: Vec<Token>,
+    q_rows: Vec<Vec<f32>>,
+    p: Vec<f32>,
+    frontier: Vec<Token>,
+    accept_lengths: Vec<u32>,
+    stage_accepts: Vec<Vec<u32>>,
+    meter: StepMeter,
+}
 
-    while ctx.len() - prompt.len() < cfg.max_new {
-        let remaining = cfg.max_new - (ctx.len() - prompt.len());
+impl<'m> CsDraftTask<'m> {
+    pub fn new(
+        models: &'m [Arc<dyn LanguageModel>],
+        prompt: &[Token],
+        cfg: CsDraftConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(models.len() >= 2, "need a target and at least one drafter");
+        anyhow::ensure!(
+            cfg.lens.len() == models.len() - 1,
+            "need a horizontal budget per drafter ({} != {})",
+            cfg.lens.len(),
+            models.len() - 1
+        );
+        anyhow::ensure!(cfg.block_len() >= 1, "empty draft block");
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let seq_cap = models.iter().map(|m| m.seq_len()).min().unwrap();
+        anyhow::ensure!(
+            prompt.len() + cfg.max_new + cfg.block_len() + 1 <= seq_cap,
+            "request does not fit the context window"
+        );
+        let mut sessions: Vec<Box<dyn ScoringSession + 'm>> = Vec::with_capacity(models.len());
+        for m in models {
+            sessions.push(m.open_session()?);
+        }
+        let n_drafters = models.len() - 1;
+        Ok(Self {
+            models: models.iter().map(|m| m.as_ref()).collect(),
+            sessions,
+            rng: Pcg32::seeded(cfg.sampling.seed),
+            cfg,
+            scratch: FilterScratch::default(),
+            ctx: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            block: Vec::new(),
+            q_rows: Vec::new(),
+            p: Vec::new(),
+            frontier: Vec::new(),
+            accept_lengths: Vec::new(),
+            stage_accepts: vec![Vec::new(); n_drafters],
+            meter: StepMeter::new(n_drafters + 1),
+        })
+    }
+}
+
+impl DecodeTask for CsDraftTask<'_> {
+    fn committed(&self) -> &[Token] {
+        let end = (self.prompt_len + self.cfg.max_new).min(self.ctx.len());
+        &self.ctx[self.prompt_len..end]
+    }
+
+    fn finished(&self) -> bool {
+        self.ctx.len() - self.prompt_len >= self.cfg.max_new
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.finished() {
+            return Ok(StepOutcome::Finished { new_tokens: 0 });
+        }
+        let before = self.committed().len();
+        let Self {
+            models,
+            sessions,
+            cfg,
+            rng,
+            scratch,
+            ctx,
+            prompt_len,
+            block,
+            q_rows,
+            p,
+            frontier,
+            accept_lengths,
+            stage_accepts,
+            meter,
+        } = self;
+        meter.begin(models);
+        let remaining = cfg.max_new - (ctx.len() - *prompt_len);
 
         // ---- horizontal cascade: assemble the block ----------------------
         block.clear();
         frontier.clear();
-        frontier.extend_from_slice(&ctx);
+        frontier.extend_from_slice(ctx);
         'assemble: for (d, &len) in cfg.lens.iter().enumerate() {
             let dsess = &mut sessions[d + 1];
             for _ in 0..len {
                 if block.len() >= remaining + 1 {
                     break 'assemble;
                 }
-                reconcile(&mut **dsess, &frontier)?;
+                reconcile(&mut **dsess, frontier)?;
                 if q_rows.len() == block.len() {
                     q_rows.push(Vec::new());
                 }
                 let q = &mut q_rows[block.len()];
-                dist_row_into(dsess.row(frontier.len() - 1), &cfg.sampling, &mut scratch, q);
-                let tok = pick(q, &cfg.sampling, cfg.rule, &mut rng);
+                dist_row_into(dsess.row(frontier.len() - 1), &cfg.sampling, scratch, q);
+                let tok = pick(q, &cfg.sampling, cfg.rule, rng);
                 block.push(tok);
                 frontier.push(tok);
             }
@@ -117,13 +173,13 @@ pub fn generate(
 
         // ---- one target scoring verifies everything ----------------------
         let tsess = &mut sessions[0];
-        reconcile(&mut **tsess, &frontier)?;
+        reconcile(&mut **tsess, frontier)?;
         let base = ctx.len();
         let mut accepted = 0usize;
         let mut replacement: Option<Token> = None;
         for i in 0..block.len() {
-            dist_row_into(tsess.row(base - 1 + i), &cfg.sampling, &mut scratch, &mut p);
-            match verify_token(block[i], &p, &q_rows[i], cfg.rule, &mut rng) {
+            dist_row_into(tsess.row(base - 1 + i), &cfg.sampling, scratch, p);
+            match verify_token(block[i], p, &q_rows[i], cfg.rule, rng) {
                 TokenVerdict::Accepted => accepted += 1,
                 TokenVerdict::Rejected { replacement: r } => {
                     replacement = Some(r);
@@ -142,33 +198,58 @@ pub fn generate(
         }
 
         ctx.extend_from_slice(&block[..accepted]);
-        let mut committed = accepted;
+        let mut committed_now = accepted;
         if let Some(r) = replacement {
             ctx.push(r);
-            committed += 1;
+            committed_now += 1;
         } else {
-            dist_row_into(
-                tsess.row(base + block.len() - 1),
-                &cfg.sampling,
-                &mut scratch,
-                &mut p,
-            );
-            let bonus = pick(&mut p, &cfg.sampling, cfg.rule, &mut rng);
+            dist_row_into(tsess.row(base + block.len() - 1), &cfg.sampling, scratch, p);
+            let bonus = pick(p, &cfg.sampling, cfg.rule, rng);
             ctx.push(bonus);
-            committed += 1;
+            committed_now += 1;
         }
-        accept_lengths.push(committed as u32);
+        accept_lengths.push(committed_now as u32);
+        meter.end(models);
+
+        let new_tokens = self.committed().len() - before;
+        if self.finished() {
+            Ok(StepOutcome::Finished { new_tokens })
+        } else {
+            Ok(StepOutcome::Progress { new_tokens })
+        }
     }
 
-    ctx.truncate(prompt.len() + cfg.max_new);
-    Ok(GenerationOutput {
-        tokens: ctx[prompt.len()..].to_vec(),
-        wall: start.elapsed(),
-        forward_passes: models.iter().map(|m| m.calls()).collect(),
-        forward_time: models.iter().map(|m| m.total_time()).collect(),
-        accept_lengths,
-        stage_accept_lengths: stage_accepts,
-    })
+    fn finish(self: Box<Self>) -> GenerationOutput {
+        let end = (self.prompt_len + self.cfg.max_new).min(self.ctx.len());
+        let tokens = self.ctx[self.prompt_len..end].to_vec();
+        let accept_lengths = self.accept_lengths;
+        let stage_accept_lengths = self.stage_accepts;
+        let (wall, forward_passes, forward_time) = self.meter.into_parts();
+        GenerationOutput {
+            tokens,
+            wall,
+            forward_passes,
+            forward_time,
+            accept_lengths,
+            stage_accept_lengths,
+        }
+    }
+}
+
+/// Generate with a CS-Drafting cascade, driven to completion.
+pub fn generate(
+    models: &[Arc<dyn LanguageModel>],
+    prompt: &[Token],
+    cfg: &CsDraftConfig,
+) -> Result<GenerationOutput> {
+    for m in models {
+        m.reset_counters();
+    }
+    let mut task = CsDraftTask::new(models, prompt, cfg.clone())?;
+    while !task.finished() {
+        task.step()?;
+    }
+    Ok(Box::new(task).finish())
 }
 
 #[cfg(test)]
@@ -248,6 +329,34 @@ mod tests {
         let a = generate(&models, &[4, 2], &cfg).unwrap();
         let b = generate(&stateless, &[4, 2], &cfg).unwrap();
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn stepped_task_matches_generate() {
+        let models = cascade();
+        let cfg = CsDraftConfig {
+            lens: vec![3, 2],
+            rule: VerifyRule::Speculative,
+            sampling: SamplingParams { seed: 29, ..Default::default() },
+            max_new: 26,
+        };
+        let whole = generate(&models, &[4, 2], &cfg).unwrap();
+        for m in &models {
+            m.reset_counters();
+        }
+        let mut task = CsDraftTask::new(&models, &[4, 2], cfg).unwrap();
+        let mut streamed: Vec<Token> = Vec::new();
+        while !task.finished() {
+            let before = task.committed().len();
+            let outcome = task.step().unwrap();
+            assert_eq!(outcome.new_tokens(), task.committed().len() - before);
+            streamed.extend_from_slice(&task.committed()[before..]);
+        }
+        assert_eq!(streamed, whole.tokens);
+        let out = Box::new(task).finish();
+        assert_eq!(out.tokens, whole.tokens);
+        assert_eq!(out.forward_passes, whole.forward_passes);
+        assert_eq!(out.stage_accept_lengths, whole.stage_accept_lengths);
     }
 
     #[test]

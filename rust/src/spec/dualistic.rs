@@ -5,20 +5,23 @@
 //! Kept as an independent implementation (rather than `polybasic` with n=2)
 //! so the general algorithm can be cross-checked against it in tests.
 //!
-//! Both models are driven through [`ScoringSession`]s: drafting scores one
-//! new token per step, and a rejection rolls the sessions back to the
-//! surviving prefix instead of rescoring it. Call accounting matches the
-//! stateless loop exactly (k draft calls + 1 target call per round), and
-//! the committed output is token-for-token identical under every
-//! [`VerifyRule`] — the sessions change *where* rows come from, never their
-//! values.
-
-use std::time::Instant;
+//! Implemented as a steppable [`DualisticTask`]: each
+//! [`step`](DecodeTask::step) runs one draft-k → verify round and commits
+//! the accepted block (+ replacement or bonus token); [`generate`] drives a
+//! task to completion. Both models are driven through
+//! [`ScoringSession`]s: drafting scores one new token per step, and a
+//! rejection rolls the sessions back to the surviving prefix instead of
+//! rescoring it. Call accounting matches the stateless loop exactly (k
+//! draft calls + 1 target call per round), and the committed output is
+//! token-for-token identical under every [`VerifyRule`] whether stepped or
+//! driven to completion — the sessions change *where* rows come from, never
+//! their values.
 
 use anyhow::Result;
 
 use super::rng::Pcg32;
 use super::sampler::{self, FilterScratch};
+use super::task::{DecodeTask, StepMeter, StepOutcome};
 use super::types::{
     reconcile, softmax_into, GenerationOutput, LanguageModel, SamplingParams, ScoringSession,
     Token, VerifyRule,
@@ -70,70 +73,122 @@ pub(crate) fn pick(probs: &mut [f32], sampling: &SamplingParams, rule: VerifyRul
     }
 }
 
-/// Standard draft-then-verify speculative decoding.
-pub fn generate(
-    target: &dyn LanguageModel,
-    draft: &dyn LanguageModel,
-    prompt: &[Token],
-    cfg: &DualisticConfig,
-) -> Result<GenerationOutput> {
-    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-    anyhow::ensure!(cfg.draft_k >= 1, "draft_k must be >= 1");
-    let seq_cap = target.seq_len().min(draft.seq_len());
-    anyhow::ensure!(
-        prompt.len() + cfg.max_new + cfg.draft_k + 1 <= seq_cap,
-        "request does not fit the context window"
-    );
-    target.reset_counters();
-    draft.reset_counters();
-    let start = Instant::now();
-    let mut rng = Pcg32::seeded(cfg.sampling.seed);
-    let mut ctx = prompt.to_vec();
-    let mut accept_lengths = Vec::new();
-
-    let mut tsess = target.open_session()?;
-    let mut dsess = draft.open_session()?;
-    let mut scratch = FilterScratch::default();
+/// Standard draft-then-verify speculative decoding as a resumable state
+/// machine: one `step` = draft up to `k` tokens, verify them with one
+/// target scoring, commit the accepted prefix (+ replacement or bonus).
+pub struct DualisticTask<'m> {
+    target: &'m dyn LanguageModel,
+    draft: &'m dyn LanguageModel,
+    tsess: Box<dyn ScoringSession + 'm>,
+    dsess: Box<dyn ScoringSession + 'm>,
+    cfg: DualisticConfig,
+    rng: Pcg32,
+    scratch: FilterScratch,
+    /// prompt + committed tokens (may briefly exceed the budget by the
+    /// bonus token; `committed()` caps the view).
+    ctx: Vec<Token>,
+    prompt_len: usize,
     // Buffers reused across rounds: the drafted block, its proposal
     // distributions, the verifier row under scrutiny, and the frontier
     // (ctx + block) the sessions reconcile against.
-    let mut block: Vec<Token> = Vec::new();
-    let mut q_rows: Vec<Vec<f32>> = Vec::new();
-    let mut p: Vec<f32> = Vec::new();
-    let mut frontier: Vec<Token> = Vec::new();
+    block: Vec<Token>,
+    q_rows: Vec<Vec<f32>>,
+    p: Vec<f32>,
+    frontier: Vec<Token>,
+    accept_lengths: Vec<u32>,
+    meter: StepMeter,
+}
 
-    while ctx.len() - prompt.len() < cfg.max_new {
-        let remaining = cfg.max_new - (ctx.len() - prompt.len());
-        let k = cfg.draft_k.min(remaining);
+impl<'m> DualisticTask<'m> {
+    pub fn new(
+        target: &'m dyn LanguageModel,
+        draft: &'m dyn LanguageModel,
+        prompt: &[Token],
+        cfg: DualisticConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(cfg.draft_k >= 1, "draft_k must be >= 1");
+        let seq_cap = target.seq_len().min(draft.seq_len());
+        anyhow::ensure!(
+            prompt.len() + cfg.max_new + cfg.draft_k + 1 <= seq_cap,
+            "request does not fit the context window"
+        );
+        Ok(Self {
+            target,
+            draft,
+            tsess: target.open_session()?,
+            dsess: draft.open_session()?,
+            rng: Pcg32::seeded(cfg.sampling.seed),
+            cfg,
+            scratch: FilterScratch::default(),
+            ctx: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            block: Vec::new(),
+            q_rows: Vec::new(),
+            p: Vec::new(),
+            frontier: Vec::new(),
+            accept_lengths: Vec::new(),
+            meter: StepMeter::new(2),
+        })
+    }
+}
+
+impl DecodeTask for DualisticTask<'_> {
+    fn committed(&self) -> &[Token] {
+        let end = (self.prompt_len + self.cfg.max_new).min(self.ctx.len());
+        &self.ctx[self.prompt_len..end]
+    }
+
+    fn finished(&self) -> bool {
+        self.ctx.len() - self.prompt_len >= self.cfg.max_new
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.finished() {
+            return Ok(StepOutcome::Finished { new_tokens: 0 });
+        }
+        let models: [&dyn LanguageModel; 2] = [self.target, self.draft];
+        self.meter.begin(&models);
+        let before = self.committed().len();
+
+        let remaining = self.cfg.max_new - (self.ctx.len() - self.prompt_len);
+        let k = self.cfg.draft_k.min(remaining);
 
         // ---- draft k tokens, scoring only the unscored suffix ------------
-        frontier.clear();
-        frontier.extend_from_slice(&ctx);
-        reconcile(&mut *dsess, &frontier)?;
-        block.clear();
-        while q_rows.len() < k {
-            q_rows.push(Vec::new());
+        self.frontier.clear();
+        self.frontier.extend_from_slice(&self.ctx);
+        reconcile(&mut *self.dsess, &self.frontier)?;
+        self.block.clear();
+        while self.q_rows.len() < k {
+            self.q_rows.push(Vec::new());
         }
-        for (i, q) in q_rows.iter_mut().enumerate().take(k) {
-            dist_row_into(dsess.row(frontier.len() - 1), &cfg.sampling, &mut scratch, q);
-            let tok = pick(q, &cfg.sampling, cfg.rule, &mut rng);
-            block.push(tok);
-            frontier.push(tok);
+        for (i, q) in self.q_rows.iter_mut().enumerate().take(k) {
+            dist_row_into(self.dsess.row(self.frontier.len() - 1), &self.cfg.sampling,
+                          &mut self.scratch, q);
+            let tok = pick(q, &self.cfg.sampling, self.cfg.rule, &mut self.rng);
+            self.block.push(tok);
+            self.frontier.push(tok);
             // The last drafted token's row is only needed if drafting
             // continues from it next round; score it lazily then.
             if i + 1 < k {
-                dsess.append(&[tok])?;
+                self.dsess.append(&[tok])?;
             }
         }
 
         // ---- one target scoring of the block (+ the bonus row) -----------
-        reconcile(&mut *tsess, &frontier)?;
-        let base = ctx.len();
+        reconcile(&mut *self.tsess, &self.frontier)?;
+        let base = self.ctx.len();
         let mut accepted = 0usize;
         let mut replacement: Option<Token> = None;
         for i in 0..k {
-            dist_row_into(tsess.row(base - 1 + i), &cfg.sampling, &mut scratch, &mut p);
-            match verify_token(block[i], &p, &q_rows[i], cfg.rule, &mut rng) {
+            dist_row_into(
+                self.tsess.row(base - 1 + i),
+                &self.cfg.sampling,
+                &mut self.scratch,
+                &mut self.p,
+            );
+            match verify_token(self.block[i], &self.p, &self.q_rows[i], self.cfg.rule, &mut self.rng)
+            {
                 TokenVerdict::Accepted => accepted += 1,
                 TokenVerdict::Rejected { replacement: r } => {
                     replacement = Some(r);
@@ -142,31 +197,65 @@ pub fn generate(
             }
         }
 
-        ctx.extend_from_slice(&block[..accepted]);
-        let mut committed = accepted;
+        self.ctx.extend_from_slice(&self.block[..accepted]);
+        let mut committed_now = accepted;
         if let Some(r) = replacement {
-            ctx.push(r);
-            committed += 1;
+            self.ctx.push(r);
+            committed_now += 1;
         } else {
             // Full acceptance: the target's row after the last drafted token
             // yields a free bonus token.
-            dist_row_into(tsess.row(base + k - 1), &cfg.sampling, &mut scratch, &mut p);
-            let bonus = pick(&mut p, &cfg.sampling, cfg.rule, &mut rng);
-            ctx.push(bonus);
-            committed += 1;
+            dist_row_into(
+                self.tsess.row(base + k - 1),
+                &self.cfg.sampling,
+                &mut self.scratch,
+                &mut self.p,
+            );
+            let bonus = pick(&mut self.p, &self.cfg.sampling, self.cfg.rule, &mut self.rng);
+            self.ctx.push(bonus);
+            committed_now += 1;
         }
-        accept_lengths.push(committed as u32);
+        self.accept_lengths.push(committed_now as u32);
+        self.meter.end(&models);
+
+        let new_tokens = self.committed().len() - before;
+        if self.finished() {
+            Ok(StepOutcome::Finished { new_tokens })
+        } else {
+            Ok(StepOutcome::Progress { new_tokens })
+        }
     }
 
-    ctx.truncate(prompt.len() + cfg.max_new);
-    Ok(GenerationOutput {
-        tokens: ctx[prompt.len()..].to_vec(),
-        wall: start.elapsed(),
-        forward_passes: vec![target.calls(), draft.calls()],
-        forward_time: vec![target.total_time(), draft.total_time()],
-        accept_lengths,
-        stage_accept_lengths: vec![],
-    })
+    fn finish(self: Box<Self>) -> GenerationOutput {
+        let end = (self.prompt_len + self.cfg.max_new).min(self.ctx.len());
+        let tokens = self.ctx[self.prompt_len..end].to_vec();
+        let accept_lengths = self.accept_lengths;
+        let (wall, forward_passes, forward_time) = self.meter.into_parts();
+        GenerationOutput {
+            tokens,
+            wall,
+            forward_passes,
+            forward_time,
+            accept_lengths,
+            stage_accept_lengths: vec![],
+        }
+    }
+}
+
+/// Standard draft-then-verify speculative decoding, driven to completion.
+pub fn generate(
+    target: &dyn LanguageModel,
+    draft: &dyn LanguageModel,
+    prompt: &[Token],
+    cfg: &DualisticConfig,
+) -> Result<GenerationOutput> {
+    target.reset_counters();
+    draft.reset_counters();
+    let mut task = DualisticTask::new(target, draft, prompt, *cfg)?;
+    while !task.finished() {
+        task.step()?;
+    }
+    Ok(Box::new(task).finish())
 }
 
 #[cfg(test)]
@@ -259,5 +348,32 @@ mod tests {
             assert_eq!(cached.tokens, stateless.tokens, "{rule:?}");
             assert_eq!(cached.forward_passes, stateless.forward_passes, "{rule:?}");
         }
+    }
+
+    #[test]
+    fn stepped_task_matches_generate() {
+        let (t, d) = models();
+        let cfg = DualisticConfig {
+            sampling: SamplingParams { seed: 23, ..Default::default() },
+            max_new: 37,
+            ..Default::default()
+        };
+        let whole = generate(&t, &d, &[3, 1, 4], &cfg).unwrap();
+        t.reset_counters();
+        d.reset_counters();
+        let mut task = DualisticTask::new(&t, &d, &[3, 1, 4], cfg).unwrap();
+        let mut streamed: Vec<Token> = Vec::new();
+        while !task.finished() {
+            let before = task.committed().len();
+            let outcome = task.step().unwrap();
+            let after = task.committed().len();
+            assert_eq!(outcome.new_tokens(), after - before);
+            streamed.extend_from_slice(&task.committed()[before..]);
+        }
+        assert_eq!(streamed, whole.tokens);
+        let out = Box::new(task).finish();
+        assert_eq!(out.tokens, whole.tokens);
+        assert_eq!(out.forward_passes, whole.forward_passes);
+        assert_eq!(out.accept_lengths, whole.accept_lengths);
     }
 }

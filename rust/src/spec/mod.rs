@@ -4,9 +4,13 @@
 //!   decode API (cached-prefix suffix scoring + rollback), logits,
 //!   sampling/verify configs.
 //! * [`rng`], [`sampler`], [`verify`] — sampling + verification primitives.
+//! * [`task`]    — `DecodeTask`: every decode loop as a resumable state
+//!   machine (`step()` = one draft→verify round), the unit the serving
+//!   coordinator schedules for continuous batching.
 //! * [`autoregressive`], [`dualistic`], [`polybasic`], [`csdraft`] — the
 //!   decoding algorithms (vanilla baseline, Leviathan baseline, the paper's
-//!   Algorithm 1 generalized to n models, and the CS-Drafting baseline).
+//!   Algorithm 1 generalized to n models, and the CS-Drafting baseline),
+//!   each a `DecodeTask` with `generate` as the drive-to-completion wrapper.
 //! * [`theory`]  — Lemma 3.1 / Theorem 3.2 / Theorem 3.3 as code.
 //! * [`planner`] — theory-driven chain construction from measurements.
 //! * [`stats`]   — acceptance/latency aggregation.
@@ -22,11 +26,13 @@ pub mod polybasic;
 pub mod rng;
 pub mod sampler;
 pub mod stats;
+pub mod task;
 pub mod theory;
 pub mod types;
 pub mod verify;
 
 pub use polybasic::{generate as polybasic_generate, PolyConfig};
+pub use task::{DecodeTask, StepOutcome};
 pub use types::{
     GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
 };

@@ -18,14 +18,18 @@
 //! token.  A rejection at stage `j` invalidates everything at later
 //! positions.  Stage 0 commits to the output.
 //!
-//! Every chain member holds one [`ScoringSession`]: drafting scores only
-//! each new token, a verify scores only the block (not the whole prefix),
-//! and a rejection *rolls the session back* to the surviving prefix — the
+//! The loop is a resumable [`PolyTask`]: one [`step`](DecodeTask::step) =
+//! one drafting burst + one threshold-gated verification sweep, so the
+//! serving coordinator can interleave many decodes on one worker and stream
+//! commits as they land; [`generate`] drives a task to completion.  Every
+//! chain member holds one [`ScoringSession`]: drafting scores only each new
+//! token, a verify scores only the block (not the whole prefix), and a
+//! rejection *rolls the session back* to the surviving prefix — the
 //! cached-prefix cost model of Lemma 3.1.  Distribution rows are pooled and
 //! verification materializes verifier rows lazily, so the steady-state loop
 //! allocates nothing.  Committed output is token-for-token identical to the
-//! stateless implementation under every [`VerifyRule`] (sessions change
-//! where rows come from, never their values — asserted in
+//! stateless implementation under every [`VerifyRule`], stepped or not
+//! (sessions change where rows come from, never their values — asserted in
 //! `tests/property_tests.rs`).
 //!
 //! With `VerifyRule::Speculative` at every stage the committed stream is
@@ -36,13 +40,13 @@
 
 use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use super::dualistic::{dist_row_into, pick};
 use super::rng::Pcg32;
 use super::sampler::FilterScratch;
+use super::task::{DecodeTask, StepMeter, StepOutcome};
 use super::types::{
     reconcile, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
 };
@@ -122,50 +126,99 @@ impl Pipeline {
     }
 }
 
-/// Generate with a polybasic chain. `models[0]` is the target `M_1`,
-/// `models[n-1]` the drafter `M_n`.
-pub fn generate(
-    models: &[Arc<dyn LanguageModel>],
-    prompt: &[Token],
-    cfg: &PolyConfig,
-) -> Result<GenerationOutput> {
-    let n = models.len();
-    anyhow::ensure!(n >= 2, "polybasic needs at least two models");
-    anyhow::ensure!(cfg.thresholds.len() == n - 1, "need one threshold per verifier");
-    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-    anyhow::ensure!(cfg.draft_k >= 1, "draft_k must be >= 1");
-    let seq_cap = models.iter().map(|m| m.seq_len()).min().unwrap();
-    anyhow::ensure!(
-        prompt.len() + cfg.max_new + cfg.headroom() <= seq_cap,
-        "prompt {} + max_new {} + pipeline headroom {} exceeds context {}",
-        prompt.len(),
-        cfg.max_new,
-        cfg.headroom(),
-        seq_cap
-    );
+/// Polybasic decode as a resumable state machine. `models[0]` is the
+/// target `M_1`, `models[n-1]` the drafter `M_n`.
+pub struct PolyTask<'m> {
+    models: Vec<&'m dyn LanguageModel>,
+    sessions: Vec<Box<dyn ScoringSession + 'm>>,
+    cfg: PolyConfig,
+    rng: Pcg32,
+    scratch: FilterScratch,
+    pipe: Pipeline,
+    prompt_len: usize,
+    seq_cap: usize,
+    accept_lengths: Vec<u32>,
+    stage_accepts: Vec<Vec<u32>>,
+    meter: StepMeter,
+}
 
-    for m in models {
-        m.reset_counters();
+impl<'m> PolyTask<'m> {
+    pub fn new(
+        models: &'m [Arc<dyn LanguageModel>],
+        prompt: &[Token],
+        cfg: PolyConfig,
+    ) -> Result<Self> {
+        let n = models.len();
+        anyhow::ensure!(n >= 2, "polybasic needs at least two models");
+        anyhow::ensure!(cfg.thresholds.len() == n - 1, "need one threshold per verifier");
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(cfg.draft_k >= 1, "draft_k must be >= 1");
+        let seq_cap = models.iter().map(|m| m.seq_len()).min().unwrap();
+        anyhow::ensure!(
+            prompt.len() + cfg.max_new + cfg.headroom() <= seq_cap,
+            "prompt {} + max_new {} + pipeline headroom {} exceeds context {}",
+            prompt.len(),
+            cfg.max_new,
+            cfg.headroom(),
+            seq_cap
+        );
+        let mut sessions: Vec<Box<dyn ScoringSession + 'm>> = Vec::with_capacity(n);
+        for m in models {
+            sessions.push(m.open_session()?);
+        }
+        Ok(Self {
+            models: models.iter().map(|m| m.as_ref()).collect(),
+            sessions,
+            rng: Pcg32::seeded(cfg.sampling.seed),
+            cfg,
+            scratch: FilterScratch::default(),
+            pipe: Pipeline {
+                flat: prompt.to_vec(),
+                committed: prompt.len(),
+                queues: (0..n - 1).map(|_| VecDeque::new()).collect(),
+                pool: Vec::new(),
+            },
+            prompt_len: prompt.len(),
+            seq_cap,
+            accept_lengths: Vec::new(),
+            stage_accepts: vec![Vec::new(); n - 1],
+            meter: StepMeter::new(n),
+        })
     }
-    let start = Instant::now();
-    let mut rng = Pcg32::seeded(cfg.sampling.seed);
+}
 
-    let mut sessions: Vec<Box<dyn ScoringSession + '_>> = Vec::with_capacity(n);
-    for m in models {
-        sessions.push(m.open_session()?);
+impl DecodeTask for PolyTask<'_> {
+    fn committed(&self) -> &[Token] {
+        let end = (self.prompt_len + self.cfg.max_new).min(self.pipe.committed);
+        &self.pipe.flat[self.prompt_len..end]
     }
-    let mut scratch = FilterScratch::default();
-    let mut pipe = Pipeline {
-        flat: prompt.to_vec(),
-        committed: prompt.len(),
-        queues: (0..n - 1).map(|_| VecDeque::new()).collect(),
-        pool: Vec::new(),
-    };
-    let mut accept_lengths: Vec<u32> = Vec::new();
-    let mut stage_accepts: Vec<Vec<u32>> = vec![Vec::new(); n - 1];
 
-    'outer: while pipe.committed - prompt.len() < cfg.max_new {
-        let committed = pipe.committed - prompt.len();
+    fn finished(&self) -> bool {
+        self.pipe.committed - self.prompt_len >= self.cfg.max_new
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.finished() {
+            return Ok(StepOutcome::Finished { new_tokens: 0 });
+        }
+        let before = self.committed().len();
+        let Self {
+            models,
+            sessions,
+            cfg,
+            rng,
+            scratch,
+            pipe,
+            prompt_len,
+            seq_cap,
+            accept_lengths,
+            stage_accepts,
+            meter,
+        } = self;
+        meter.begin(models);
+        let n = sessions.len();
+
+        let committed = pipe.committed - *prompt_len;
         let remaining = cfg.max_new - committed;
         let in_flight = pipe.in_flight();
         // Flush mode: the pipeline already holds enough tokens to finish the
@@ -187,13 +240,8 @@ pub fn generate(
                     // in the steady state) and sample the next draft.
                     reconcile(&mut **dsess, &pipe.flat)?;
                     let mut q = pipe.grab();
-                    dist_row_into(
-                        dsess.row(pipe.flat.len() - 1),
-                        &cfg.sampling,
-                        &mut scratch,
-                        &mut q,
-                    );
-                    let tok = pick(&mut q, &cfg.sampling, cfg.rule, &mut rng);
+                    dist_row_into(dsess.row(pipe.flat.len() - 1), &cfg.sampling, scratch, &mut q);
+                    let tok = pick(&mut q, &cfg.sampling, cfg.rule, rng);
                     pipe.queues[deepest].push_back(q);
                     pipe.flat.push(tok);
                 }
@@ -202,6 +250,7 @@ pub fn generate(
         }
 
         // ---- 2. verification sweep, deepest stage first ------------------
+        let mut budget_reached = false;
         for j in (0..n - 1).rev() {
             if pipe.queues[j].is_empty() {
                 continue;
@@ -210,27 +259,25 @@ pub fn generate(
             if !(ready || flush) {
                 continue;
             }
-            let committed_now = verify_stage(
-                &mut *sessions[j], j, &mut pipe, cfg, &mut rng, &mut scratch, &mut stage_accepts,
-            )?;
+            let committed_now =
+                verify_stage(&mut *sessions[j], j, pipe, cfg, rng, scratch, stage_accepts)?;
             fired = true;
             if j == 0 {
                 accept_lengths.push(committed_now as u32);
-                if pipe.committed - prompt.len() >= cfg.max_new {
-                    break 'outer;
+                if pipe.committed - *prompt_len >= cfg.max_new {
+                    budget_reached = true;
+                    break;
                 }
             }
         }
 
         // ---- 3. deadlock backstop ----------------------------------------
-        if !fired {
+        if !fired && !budget_reached {
             // Nothing met its threshold and drafting was blocked: force the
             // deepest non-empty stage (guaranteed progress).
             if let Some(j) = (0..n - 1).rev().find(|&j| !pipe.queues[j].is_empty()) {
-                let committed_now = verify_stage(
-                    &mut *sessions[j], j, &mut pipe, cfg, &mut rng, &mut scratch,
-                    &mut stage_accepts,
-                )?;
+                let committed_now =
+                    verify_stage(&mut *sessions[j], j, pipe, cfg, rng, scratch, stage_accepts)?;
                 if j == 0 {
                     accept_lengths.push(committed_now as u32);
                 }
@@ -238,17 +285,48 @@ pub fn generate(
                 anyhow::bail!("decode stalled: empty pipeline but no draft room");
             }
         }
+        meter.end(models);
+
+        let new_tokens = self.committed().len() - before;
+        if self.finished() {
+            Ok(StepOutcome::Finished { new_tokens })
+        } else {
+            Ok(StepOutcome::Progress { new_tokens })
+        }
     }
 
-    let end = (prompt.len() + cfg.max_new).min(pipe.committed);
-    Ok(GenerationOutput {
-        tokens: pipe.flat[prompt.len()..end].to_vec(),
-        wall: start.elapsed(),
-        forward_passes: models.iter().map(|m| m.calls()).collect(),
-        forward_time: models.iter().map(|m| m.total_time()).collect(),
-        accept_lengths,
-        stage_accept_lengths: stage_accepts,
-    })
+    fn finish(self: Box<Self>) -> GenerationOutput {
+        let end = (self.prompt_len + self.cfg.max_new).min(self.pipe.committed);
+        let tokens = self.pipe.flat[self.prompt_len..end].to_vec();
+        let accept_lengths = self.accept_lengths;
+        let stage_accept_lengths = self.stage_accepts;
+        let (wall, forward_passes, forward_time) = self.meter.into_parts();
+        GenerationOutput {
+            tokens,
+            wall,
+            forward_passes,
+            forward_time,
+            accept_lengths,
+            stage_accept_lengths,
+        }
+    }
+}
+
+/// Generate with a polybasic chain, driven to completion. `models[0]` is
+/// the target `M_1`, `models[n-1]` the drafter `M_n`.
+pub fn generate(
+    models: &[Arc<dyn LanguageModel>],
+    prompt: &[Token],
+    cfg: &PolyConfig,
+) -> Result<GenerationOutput> {
+    for m in models {
+        m.reset_counters();
+    }
+    let mut task = PolyTask::new(models, prompt, cfg.clone())?;
+    while !task.finished() {
+        task.step()?;
+    }
+    Ok(Box::new(task).finish())
 }
 
 /// Run verifier `j` over its queue through its incremental session: sync
@@ -451,6 +529,33 @@ mod tests {
         assert_eq!(cached.tokens, stateless.tokens);
         assert_eq!(cached.forward_passes, stateless.forward_passes);
         assert_eq!(cached.accept_lengths, stateless.accept_lengths);
+    }
+
+    #[test]
+    fn stepped_task_matches_generate_and_streams_monotonically() {
+        let chain = mock_chain(512, 24, 41);
+        let mut cfg = PolyConfig::for_chain(3, 4, 6, 48);
+        cfg.sampling.seed = 9;
+        let whole = generate(&chain, &[2, 4, 6], &cfg).unwrap();
+        for m in &chain {
+            m.reset_counters();
+        }
+        let mut task = PolyTask::new(&chain, &[2, 4, 6], cfg).unwrap();
+        let mut streamed: Vec<Token> = Vec::new();
+        while !task.finished() {
+            let before = task.committed().len();
+            let outcome = task.step().unwrap();
+            let after = task.committed().len();
+            assert!(after >= before, "committed stream must be monotone");
+            assert_eq!(outcome.new_tokens(), after - before);
+            streamed.extend_from_slice(&task.committed()[before..]);
+        }
+        assert_eq!(streamed, whole.tokens, "streamed deltas diverged");
+        let out = Box::new(task).finish();
+        assert_eq!(out.tokens, whole.tokens);
+        assert_eq!(out.forward_passes, whole.forward_passes);
+        assert_eq!(out.accept_lengths, whole.accept_lengths);
+        assert_eq!(out.stage_accept_lengths, whole.stage_accept_lengths);
     }
 
     /// Statistical losslessness: the marginal distribution of the first

@@ -1,0 +1,172 @@
+//! Resumable decode tasks — the unit the serving coordinator schedules.
+//!
+//! Each decode loop in `spec::` (polybasic, dualistic, CS-Drafting,
+//! autoregressive) is a state machine implementing [`DecodeTask`]: the task
+//! owns one [`ScoringSession`](super::types::ScoringSession) per chain
+//! member, and [`step`](DecodeTask::step) runs exactly one draft→verify
+//! round (one token for autoregressive), committing zero or more tokens.
+//! `generate(...)` in each module is a thin drive-to-completion wrapper, so
+//! a stepped task is **token-identical** to one-shot generation for every
+//! method and [`VerifyRule`](super::types::VerifyRule) — asserted in
+//! `tests/property_tests.rs`.
+//!
+//! Why steps matter: a run-to-completion `generate` makes the serving layer
+//! schedule whole requests, so a 512-token batch job head-of-line-blocks a
+//! 10-token interactive one. With steppable tasks the coordinator
+//! round-robins *between* steps (continuous batching), admits new requests
+//! mid-flight, and streams committed tokens as they land — see
+//! `coordinator::scheduler`.
+//!
+//! Accounting: tasks meter forward passes and forward time per step as
+//! *deltas* of the shared model counters ([`StepMeter`]), so several tasks
+//! interleaved on one chain each report their own `F_i` / `T_i` (the
+//! quantities Lemma 3.1 prices a chain by). Wall time is the sum of step
+//! durations — time the task actually held the worker, not time it spent
+//! parked between steps.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::types::{GenerationOutput, LanguageModel, Token};
+
+/// What one [`DecodeTask::step`] accomplished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The task advanced; `new_tokens` tokens were newly committed (may be
+    /// zero when only intermediate pipeline stages fired).
+    Progress { new_tokens: usize },
+    /// The request's budget is fully committed; `new_tokens` were committed
+    /// by this final step (zero when called on an already-finished task).
+    Finished { new_tokens: usize },
+}
+
+impl StepOutcome {
+    /// Tokens newly committed by the step.
+    pub fn new_tokens(self) -> usize {
+        match self {
+            StepOutcome::Progress { new_tokens } | StepOutcome::Finished { new_tokens } => {
+                new_tokens
+            }
+        }
+    }
+
+    pub fn is_finished(self) -> bool {
+        matches!(self, StepOutcome::Finished { .. })
+    }
+}
+
+/// A resumable decode: one (request, chain) pair stepped one draft→verify
+/// round at a time. Implementations live next to their `generate` wrappers
+/// in [`polybasic`](super::polybasic), [`dualistic`](super::dualistic),
+/// [`csdraft`](super::csdraft) and
+/// [`autoregressive`](super::autoregressive).
+pub trait DecodeTask {
+    /// Tokens committed so far (excluding the prompt), capped at the
+    /// request's `max_new` — the stream a server delivers incrementally.
+    fn committed(&self) -> &[Token];
+
+    /// True once the full output budget is committed. `step` on a finished
+    /// task is a no-op returning `Finished { new_tokens: 0 }`.
+    fn finished(&self) -> bool;
+
+    /// Run one decode round. Committed tokens are visible through
+    /// [`committed`](Self::committed) immediately after the call.
+    fn step(&mut self) -> Result<StepOutcome>;
+
+    /// Consume the task into its [`GenerationOutput`] (tokens + the paper's
+    /// measurements). Callable at any point; mid-flight it reports the
+    /// partial decode.
+    fn finish(self: Box<Self>) -> GenerationOutput;
+}
+
+/// Per-task forward-pass accounting over shared model counters.
+///
+/// Counters on [`LanguageModel`] are global to the model instance; when the
+/// coordinator interleaves several tasks on one chain they all advance the
+/// same counters. The meter brackets each step (`begin`/`end`) and
+/// accumulates the *delta*, giving per-task `F_i` and `T_i` that match what
+/// a solo run would report.
+#[derive(Debug)]
+pub(crate) struct StepMeter {
+    base_calls: Vec<u64>,
+    base_time: Vec<Duration>,
+    step_started: Instant,
+    passes: Vec<u64>,
+    time: Vec<Duration>,
+    wall: Duration,
+}
+
+impl StepMeter {
+    pub fn new(n_models: usize) -> Self {
+        Self {
+            base_calls: vec![0; n_models],
+            base_time: vec![Duration::ZERO; n_models],
+            step_started: Instant::now(),
+            passes: vec![0; n_models],
+            time: vec![Duration::ZERO; n_models],
+            wall: Duration::ZERO,
+        }
+    }
+
+    /// Snapshot counters at the top of a step.
+    pub fn begin(&mut self, models: &[&dyn LanguageModel]) {
+        debug_assert_eq!(models.len(), self.passes.len());
+        for (i, m) in models.iter().enumerate() {
+            self.base_calls[i] = m.calls();
+            self.base_time[i] = m.total_time();
+        }
+        self.step_started = Instant::now();
+    }
+
+    /// Fold the step's counter deltas and wall time into the task totals.
+    pub fn end(&mut self, models: &[&dyn LanguageModel]) {
+        for (i, m) in models.iter().enumerate() {
+            // saturating: a mid-step external `reset_counters` must not panic.
+            self.passes[i] += m.calls().saturating_sub(self.base_calls[i]);
+            self.time[i] += m.total_time().saturating_sub(self.base_time[i]);
+        }
+        self.wall += self.step_started.elapsed();
+    }
+
+    /// (wall, forward_passes, forward_time), consuming the meter.
+    pub fn into_parts(self) -> (Duration, Vec<u64>, Vec<Duration>) {
+        (self.wall, self.passes, self.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::mock::MockModel;
+
+    #[test]
+    fn step_outcome_accessors() {
+        assert_eq!(StepOutcome::Progress { new_tokens: 3 }.new_tokens(), 3);
+        assert_eq!(StepOutcome::Finished { new_tokens: 1 }.new_tokens(), 1);
+        assert!(StepOutcome::Finished { new_tokens: 0 }.is_finished());
+        assert!(!StepOutcome::Progress { new_tokens: 0 }.is_finished());
+    }
+
+    #[test]
+    fn meter_accumulates_deltas_not_totals() {
+        let m = MockModel::new("m", 32, 8, 1, 0.0);
+        // Calls made before the meter's first `begin` must not be charged.
+        m.forward(&[1, 2]).unwrap();
+        let mut meter = StepMeter::new(1);
+        let models: [&dyn LanguageModel; 1] = [&m];
+        meter.begin(&models);
+        m.forward(&[1, 2, 3]).unwrap();
+        meter.end(&models);
+        // Calls between steps (another task's work) are not charged either.
+        m.forward(&[9]).unwrap();
+        meter.begin(&models);
+        m.forward(&[9, 9]).unwrap();
+        m.forward(&[9, 9, 9]).unwrap();
+        meter.end(&models);
+        let (wall, passes, time) = meter.into_parts();
+        assert_eq!(passes, vec![3]);
+        assert!(time[0] <= m.total_time());
+        assert!(wall > Duration::ZERO);
+    }
+}

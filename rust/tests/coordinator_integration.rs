@@ -1,7 +1,7 @@
 //! End-to-end coordinator tests over the real artifacts: the full
 //! router -> batcher -> worker -> engine path.
 
-use polyspec::coordinator::{Method, Server, ServerConfig};
+use polyspec::coordinator::{Method, Server, ServerConfig, StreamItem};
 use polyspec::workload::tasks::{make_query, TaskKind};
 
 fn artifacts_ready() -> bool {
@@ -53,6 +53,40 @@ fn serves_all_methods_end_to_end() {
     );
     let snap = metrics.snapshot().to_string();
     assert!(snap.contains("tokens_generated"));
+}
+
+#[test]
+fn streamed_deltas_reassemble_the_final_response() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = server();
+    let q = make_query(TaskKind::Qa, 3, 256);
+    let rx = server
+        .submit_stream(q.prompt, 12, Method::Polybasic { draft_k: 6, mu: 8 }, Some(TaskKind::Qa))
+        .expect("submit_stream");
+    let mut streamed = Vec::new();
+    let mut done = None;
+    while let Ok(item) = rx.recv_timeout(std::time::Duration::from_secs(300)) {
+        match item {
+            StreamItem::Delta(tokens) => {
+                assert!(!tokens.is_empty(), "empty delta");
+                streamed.extend(tokens);
+            }
+            StreamItem::Done(resp) => {
+                done = Some(resp);
+                break;
+            }
+        }
+    }
+    let resp = done.expect("stream must end with Done");
+    assert_eq!(streamed, resp.tokens, "deltas must reassemble the response");
+    assert_eq!(resp.tokens.len(), 12);
+    assert!(resp.ttft <= resp.queue_time + resp.service_time);
+    assert!(server.quiesce(std::time::Duration::from_secs(10)));
+    let metrics = server.shutdown();
+    assert_eq!(metrics.ttft_latency.count(), 1);
 }
 
 #[test]

@@ -9,9 +9,13 @@ use std::sync::Arc;
 use polyspec::coordinator::api::{Method, Request};
 use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use polyspec::coordinator::kv::{KvConfig, KvManager};
+use polyspec::coordinator::scheduler;
 use polyspec::runtime::json::Json;
+use polyspec::spec::csdraft::{self, CsDraftConfig, CsDraftTask};
 use polyspec::spec::mock::{mock_chain, MockModel};
+use polyspec::spec::ngram::BigramModel;
 use polyspec::spec::rng::Pcg32;
+use polyspec::spec::task::DecodeTask;
 use polyspec::spec::types::{
     reconcile, softmax, ForceStateless, LanguageModel, SamplingParams, ScoringSession, VerifyRule,
 };
@@ -81,6 +85,7 @@ fn prop_batcher_no_loss_no_dup() {
         let b = DynamicBatcher::new(BatchPolicy {
             max_batch: 1 + rng.next_below(5) as usize,
             max_wait: std::time::Duration::ZERO,
+            ..Default::default()
         });
         let n = 1 + rng.next_below(40) as usize;
         let mut pushed = std::collections::BTreeSet::new();
@@ -252,6 +257,108 @@ fn prop_session_decode_identical_to_stateless() {
                 .unwrap();
             assert_eq!(dc.tokens, ds.tokens, "dualistic seed {seed} rule {rule:?}");
         }
+    }
+}
+
+/// Stepped decode tasks must be token-identical to one-shot `generate` for
+/// every coordinator `Method` × `VerifyRule`, with matching forward-pass
+/// and acceptance accounting, and the per-step committed deltas must
+/// concatenate to exactly the final output (the stream a server delivers).
+#[test]
+fn prop_stepped_task_identical_to_generate_all_methods_rules() {
+    let methods = [
+        Method::Autoregressive,
+        Method::Dualistic { draft_k: 4 },
+        Method::Polybasic { draft_k: 4, mu: 5 },
+    ];
+    for rule in [VerifyRule::Greedy, VerifyRule::Speculative, VerifyRule::Typical { eps: 0.25 }] {
+        for &method in &methods {
+            for seed in 0..4u64 {
+                let chain = mock_chain(512, 24, seed + 50);
+                let mut req = Request::new(seed + 1, vec![3, 1, 4], 8 + seed as usize * 9);
+                req.method = method;
+                req.rule = rule;
+                req.sampling = SamplingParams {
+                    temperature: if rule == VerifyRule::Greedy { 0.0 } else { 1.0 },
+                    seed,
+                    ..Default::default()
+                };
+                let whole = scheduler::decode(&chain, &req)
+                    .unwrap_or_else(|e| panic!("{method:?} {rule:?} seed {seed}: {e}"));
+                for m in &chain {
+                    m.reset_counters();
+                }
+                let mut task = scheduler::open_task(&chain, &req).unwrap();
+                let mut streamed = Vec::new();
+                let mut steps = 0;
+                while !task.finished() {
+                    let before = task.committed().len();
+                    let outcome = task.step().unwrap();
+                    let after = task.committed().len();
+                    assert_eq!(
+                        outcome.new_tokens(),
+                        after - before,
+                        "{method:?} {rule:?} seed {seed}: outcome disagrees with committed()"
+                    );
+                    streamed.extend_from_slice(&task.committed()[before..]);
+                    steps += 1;
+                    assert!(steps < 10_000, "{method:?} {rule:?} seed {seed}: runaway task");
+                }
+                assert_eq!(
+                    streamed, whole.tokens,
+                    "{method:?} {rule:?} seed {seed}: streamed deltas diverged"
+                );
+                let out = task.finish();
+                assert_eq!(out.tokens, whole.tokens, "{method:?} {rule:?} seed {seed}");
+                assert_eq!(
+                    out.forward_passes, whole.forward_passes,
+                    "{method:?} {rule:?} seed {seed}: call accounting diverged"
+                );
+                assert_eq!(
+                    out.accept_lengths, whole.accept_lengths,
+                    "{method:?} {rule:?} seed {seed}"
+                );
+            }
+        }
+    }
+}
+
+/// CS-Drafting is not a coordinator `Method` (it is bench-only), so its
+/// stepped task is covered directly: stepped == one-shot for every rule.
+#[test]
+fn prop_stepped_csdraft_identical_to_generate() {
+    for rule in [VerifyRule::Greedy, VerifyRule::Speculative, VerifyRule::Typical { eps: 0.25 }] {
+        let models: Vec<Arc<dyn LanguageModel>> = vec![
+            Arc::new(MockModel::new("t", 512, 24, 5, 0.0)),
+            Arc::new(MockModel::new("d1", 512, 24, 5, 0.4)),
+            Arc::new(BigramModel::new(512, 24)),
+        ];
+        let cfg = CsDraftConfig {
+            lens: vec![3, 2],
+            rule,
+            sampling: SamplingParams {
+                temperature: if rule == VerifyRule::Greedy { 0.0 } else { 1.0 },
+                seed: 7,
+                ..Default::default()
+            },
+            max_new: 25,
+        };
+        let whole = csdraft::generate(&models, &[4, 2], &cfg).unwrap();
+        for m in &models {
+            m.reset_counters();
+        }
+        let mut task = CsDraftTask::new(&models, &[4, 2], cfg).unwrap();
+        let mut streamed = Vec::new();
+        while !task.finished() {
+            let before = task.committed().len();
+            task.step().unwrap();
+            streamed.extend_from_slice(&task.committed()[before..]);
+        }
+        assert_eq!(streamed, whole.tokens, "csdraft {rule:?}: streamed deltas diverged");
+        let out = Box::new(task).finish();
+        assert_eq!(out.tokens, whole.tokens, "csdraft {rule:?}");
+        assert_eq!(out.forward_passes, whole.forward_passes, "csdraft {rule:?}");
+        assert_eq!(out.stage_accept_lengths, whole.stage_accept_lengths, "csdraft {rule:?}");
     }
 }
 
