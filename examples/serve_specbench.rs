@@ -57,8 +57,20 @@ fn main() -> anyhow::Result<()> {
     let mut e2e = Welford::default();
     let mut tokens = 0usize;
     let mut mu = Welford::default();
+    let mut failed = 0usize;
+    let mut completed = 0usize;
     for (_, rx) in &receivers {
-        let resp = rx.recv_timeout(Duration::from_secs(600))?;
+        // The final channel carries Result<Response, String>: a decode
+        // failure arrives as a value with its reason, not a channel close.
+        let resp = match rx.recv_timeout(Duration::from_secs(600))? {
+            Ok(resp) => resp,
+            Err(e) => {
+                failed += 1;
+                eprintln!("failed: {e}");
+                continue;
+            }
+        };
+        completed += 1;
         e2e.push((resp.queue_time + resp.service_time).as_secs_f64() * 1e3);
         tokens += resp.tokens.len();
         if resp.mean_accept > 0.0 {
@@ -68,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     let wall = start.elapsed();
 
     println!("\n== serve_specbench report ==");
-    println!("requests: {} completed, {} rejected", receivers.len(), rejected);
+    println!("requests: {completed} completed, {failed} failed, {rejected} rejected");
     println!("wall time: {:.2}s  offered rate: {rate}/s", wall.as_secs_f64());
     println!("throughput: {:.1} tok/s  ({tokens} tokens)", tokens as f64 / wall.as_secs_f64());
     println!("e2e latency: mean {:.0} ms (n={})", e2e.mean(), e2e.count());

@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use crate::spec::task::ResumeState;
 use crate::spec::types::{SamplingParams, Token, VerifyRule};
 use crate::workload::tasks::TaskKind;
 
@@ -65,14 +66,20 @@ pub struct Response {
     pub id: u64,
     pub tokens: Vec<Token>,
     /// Time spent queued before a worker opened a decode task for the
-    /// request.
+    /// request, summed across re-queues if the request was preempted.
     pub queue_time: Duration,
-    /// Task open -> finish. Under continuous batching this includes time
-    /// spent sharing the worker with interleaved requests; the pure decode
-    /// wall (sum of this task's step times) is smaller.
+    /// Task open -> finish, summed across run segments if the request was
+    /// preempted. Under continuous batching this includes time spent
+    /// sharing the worker with interleaved requests; the pure decode wall
+    /// (sum of this task's step times) is smaller.
     pub service_time: Duration,
-    /// Enqueue -> first committed token.
-    pub ttft: Duration,
+    /// Enqueue -> first committed token. `None` when the request never
+    /// committed a token (e.g. `max_new == 0`) — there was no first token,
+    /// so no TTFT exists and none is recorded in the histogram.
+    pub ttft: Option<Duration>,
+    /// How many times this request was preempted (suspended + resumed) by
+    /// KV-pool pressure before completing. Zero on an uncontended pool.
+    pub preemptions: u32,
     /// Mean acceptance length at the target (μ) for speculative methods.
     pub mean_accept: f64,
     /// Per-model forward passes, chain order.
@@ -89,7 +96,8 @@ impl Response {
 
 /// One item of a streamed generation (see `Server::submit_stream`):
 /// committed-token deltas as decode steps complete, then the final
-/// [`Response`].
+/// [`Response`] — or [`Failed`](StreamItem::Failed) with the reason, so a
+/// decode error reaches the client instead of a bare channel close.
 #[derive(Debug, Clone)]
 pub enum StreamItem {
     /// Tokens committed by one decode step, in order.
@@ -97,4 +105,27 @@ pub enum StreamItem {
     /// The generation finished; carries the full response (its `tokens`
     /// equal the concatenation of all deltas).
     Done(Response),
+    /// The decode failed after zero or more deltas; carries the error.
+    Failed(String),
+}
+
+/// A preempted request's scheduler-level baggage, carried alongside the
+/// task-level [`ResumeState`] through the re-queue so nothing client-visible
+/// resets: tokens already streamed are not re-delivered, TTFT is not
+/// re-recorded, and queue/service times accumulate across segments.
+#[derive(Debug)]
+pub struct ResumeCarry {
+    /// The suspended decode itself (see `DecodeTask::suspend`).
+    pub state: ResumeState,
+    /// Committed tokens already delivered as stream deltas.
+    pub streamed: usize,
+    /// Time-to-first-token, if a first token was committed before
+    /// suspension (already recorded in the histogram — do not re-record).
+    pub ttft: Option<Duration>,
+    /// Queue time accumulated over all previous queue segments.
+    pub queue_time: Duration,
+    /// Service time accumulated over all previous run segments.
+    pub service_time: Duration,
+    /// How many times this request has been preempted so far.
+    pub preemptions: u32,
 }

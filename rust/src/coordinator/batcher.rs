@@ -15,12 +15,26 @@
 //! batch-class request that has waited longer than
 //! [`BatchPolicy::starvation_wait`] is promoted ahead of the interactive
 //! queue — sustained interactive load can no longer starve batch traffic.
+//!
+//! Two fairness refinements on top of the class policy:
+//!
+//! * **Resumed lane** — a request preempted mid-decode (KV saturation; see
+//!   `coordinator::scheduler`) re-enters through
+//!   [`DynamicBatcher::push_front_resumed`], which puts it at the *front*
+//!   of its class queue: a resumed request outranks every fresh arrival of
+//!   the same class, so preemption delays work but never re-queues it
+//!   behind traffic that arrived later.
+//! * **Parked-worker reservation** — a busy worker's between-step
+//!   [`try_pop`](DynamicBatcher::try_pop) used to outrace an idle worker
+//!   parked in [`pop_batch`](DynamicBatcher::pop_batch), concentrating
+//!   arrivals on one thread. The queue now tracks how many workers are
+//!   parked and `try_pop` leaves that many requests behind for them.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::api::Request;
+use super::api::{Request, ResumeCarry};
 
 /// Scheduling class, derived from the task tag: interactive tasks preempt
 /// long-form batch tasks in the queue.
@@ -69,6 +83,8 @@ impl Default for BatchPolicy {
 struct Queued {
     req: Request,
     enqueued: Instant,
+    /// Present when this is a preempted request re-entering the queue.
+    resume: Option<ResumeCarry>,
 }
 
 #[derive(Debug, Default)]
@@ -76,6 +92,9 @@ struct State {
     interactive: VecDeque<Queued>,
     batch: VecDeque<Queued>,
     closed: bool,
+    /// Workers currently blocked in [`DynamicBatcher::pop_batch`];
+    /// [`DynamicBatcher::try_pop`] leaves this many requests for them.
+    parked: usize,
 }
 
 /// Thread-safe request queue with batching semantics.
@@ -86,8 +105,25 @@ pub struct DynamicBatcher {
     cv: Condvar,
 }
 
-/// A dispatched batch: requests plus their queue-entry timestamps.
-pub type Batch = Vec<(Request, Instant)>;
+/// One dispatched request: the request, its queue-entry timestamp, and —
+/// for a preempted request re-entering the scheduler — its resume baggage.
+#[derive(Debug)]
+pub struct QueueEntry {
+    pub req: Request,
+    pub enqueued: Instant,
+    pub resume: Option<ResumeCarry>,
+}
+
+impl QueueEntry {
+    /// A fresh (non-resumed) entry — the shape tests and the one-shot path
+    /// construct directly.
+    pub fn fresh(req: Request, enqueued: Instant) -> Self {
+        Self { req, enqueued, resume: None }
+    }
+}
+
+/// A dispatched batch.
+pub type Batch = Vec<QueueEntry>;
 
 impl DynamicBatcher {
     pub fn new(policy: BatchPolicy) -> Self {
@@ -96,12 +132,32 @@ impl DynamicBatcher {
 
     pub fn push(&self, req: Request) {
         let mut st = self.state.lock().unwrap();
-        let q = Queued { req, enqueued: Instant::now() };
+        let q = Queued { req, enqueued: Instant::now(), resume: None };
         match classify(&q.req) {
             Priority::Interactive => st.interactive.push_back(q),
             Priority::Batch => st.batch.push_back(q),
         }
         self.cv.notify_one();
+    }
+
+    /// Re-queue a preempted request at the *front* of its class queue: it
+    /// outranks every fresh arrival of the same class, so KV-pressure
+    /// preemption delays its decode but never demotes it behind later
+    /// traffic. Accepted even after [`close`](Self::close) — a preempted
+    /// request is in-flight work that must drain, not a new arrival.
+    pub fn push_front_resumed(&self, req: Request, carry: ResumeCarry) {
+        let mut st = self.state.lock().unwrap();
+        let q = Queued { req, enqueued: Instant::now(), resume: Some(carry) };
+        match classify(&q.req) {
+            Priority::Interactive => st.interactive.push_front(q),
+            Priority::Batch => st.batch.push_front(q),
+        }
+        self.cv.notify_one();
+    }
+
+    /// Workers currently parked in [`pop_batch`](Self::pop_batch).
+    pub fn parked_workers(&self) -> usize {
+        self.state.lock().unwrap().parked
     }
 
     pub fn len(&self) -> usize {
@@ -140,9 +196,11 @@ impl DynamicBatcher {
                         .unwrap();
                     let waited = oldest.elapsed();
                     if waited < self.policy.max_wait {
+                        st.parked += 1;
                         let (next, _timeout) =
                             self.cv.wait_timeout(st, self.policy.max_wait - waited).unwrap();
                         st = next;
+                        st.parked -= 1;
                         continue;
                     }
                 }
@@ -151,16 +209,23 @@ impl DynamicBatcher {
             if st.closed {
                 return None;
             }
+            st.parked += 1;
             st = self.cv.wait(st).unwrap();
+            st.parked -= 1;
         }
     }
 
     /// Non-blocking pull of up to `n` requests — the step scheduler's
     /// between-steps admission path. Returns an empty batch when the queue
-    /// is idle; never waits out the batching window.
+    /// is idle; never waits out the batching window. One request is left
+    /// behind per worker parked in [`pop_batch`](Self::pop_batch), so a
+    /// busy worker topping up between steps cannot drain arrivals out from
+    /// under idle workers (multi-worker pull fairness).
     pub fn try_pop(&self, n: usize) -> Batch {
         let mut st = self.state.lock().unwrap();
-        self.drain_locked(&mut st, n)
+        let queued = st.interactive.len() + st.batch.len();
+        let reserve = st.parked.min(queued);
+        self.drain_locked(&mut st, n.min(queued - reserve))
     }
 
     /// Drain up to `n` queued requests under the priority policy:
@@ -179,7 +244,9 @@ impl DynamicBatcher {
                 st.interactive.pop_front().or_else(|| st.batch.pop_front())
             };
             match q {
-                Some(q) => out.push((q.req, q.enqueued)),
+                Some(q) => {
+                    out.push(QueueEntry { req: q.req, enqueued: q.enqueued, resume: q.resume })
+                }
                 None => break,
             }
         }
@@ -216,7 +283,7 @@ mod tests {
         b.push(req(1, Some(TaskKind::Summarization)));
         b.push(req(2, Some(TaskKind::Math)));
         let first = b.pop_batch().unwrap();
-        assert_eq!(first[0].0.id, 2, "interactive request should dispatch first");
+        assert_eq!(first[0].req.id, 2, "interactive request should dispatch first");
     }
 
     #[test]
@@ -244,8 +311,8 @@ mod tests {
         b.push(req(2, Some(TaskKind::Math))); // interactive
         b.push(req(3, Some(TaskKind::Qa))); // interactive
         let got = b.try_pop(2);
-        assert_eq!(got[0].0.id, 1, "starved batch request must be promoted");
-        assert_eq!(got[1].0.id, 2);
+        assert_eq!(got[0].req.id, 1, "starved batch request must be promoted");
+        assert_eq!(got[1].req.id, 2);
     }
 
     #[test]
@@ -258,8 +325,8 @@ mod tests {
         b.push(req(1, Some(TaskKind::Summarization)));
         b.push(req(2, Some(TaskKind::Math)));
         let got = b.try_pop(2);
-        assert_eq!(got[0].0.id, 2);
-        assert_eq!(got[1].0.id, 1);
+        assert_eq!(got[0].req.id, 2);
+        assert_eq!(got[1].req.id, 1);
     }
 
     #[test]
@@ -280,7 +347,7 @@ mod tests {
             ..Default::default()
         }));
         let b2 = b.clone();
-        let h = std::thread::spawn(move || b2.pop_batch().map(|v| v[0].0.id));
+        let h = std::thread::spawn(move || b2.pop_batch().map(|v| v[0].req.id));
         std::thread::sleep(Duration::from_millis(20));
         b.push(req(7, None));
         assert_eq!(h.join().unwrap(), Some(7));
@@ -306,5 +373,109 @@ mod tests {
         };
         assert_eq!(handle.join().unwrap(), Some(2), "straggler should join the batch");
         assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    fn dummy_carry() -> ResumeCarry {
+        ResumeCarry {
+            state: crate::spec::task::ResumeState {
+                committed: vec![],
+                rng: crate::spec::rng::Pcg32::seeded(0),
+                accept_lengths: vec![],
+                stage_accepts: vec![],
+                wall: Duration::ZERO,
+                forward_passes: vec![0],
+                forward_time: vec![Duration::ZERO],
+                inflight: crate::spec::task::InflightState::None,
+            },
+            streamed: 0,
+            ttft: None,
+            queue_time: Duration::ZERO,
+            service_time: Duration::ZERO,
+            preemptions: 1,
+        }
+    }
+
+    #[test]
+    fn resumed_request_outranks_fresh_same_class() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+            starvation_wait: Duration::from_secs(60),
+        });
+        // Fresh arrivals of both classes, then a preempted batch-class
+        // request re-enters: it must pop before the fresh batch-class one
+        // but still yield to fresh interactive traffic (class order wins
+        // between classes; resumption wins within a class).
+        b.push(req(1, Some(TaskKind::Summarization))); // fresh batch
+        b.push(req(2, Some(TaskKind::Math))); // fresh interactive
+        b.push_front_resumed(req(3, Some(TaskKind::Rag)), dummy_carry()); // resumed batch
+        let got = b.try_pop(3);
+        let ids: Vec<u64> = got.iter().map(|e| e.req.id).collect();
+        assert_eq!(ids, vec![2, 3, 1], "resumed batch request must lead its class");
+        assert!(got[1].resume.is_some(), "resume baggage must survive the queue");
+        assert!(got[0].resume.is_none() && got[2].resume.is_none());
+    }
+
+    #[test]
+    fn resumed_interactive_outranks_fresh_interactive() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        });
+        b.push(req(1, Some(TaskKind::Qa)));
+        b.push_front_resumed(req(2, Some(TaskKind::Math)), dummy_carry());
+        let got = b.try_pop(2);
+        assert_eq!(got[0].req.id, 2, "resumed interactive must lead the interactive lane");
+        assert_eq!(got[1].req.id, 1);
+    }
+
+    #[test]
+    fn resumed_request_accepted_after_close() {
+        let b = DynamicBatcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::ZERO, ..Default::default() });
+        b.close();
+        b.push_front_resumed(req(9, None), dummy_carry());
+        let batch = b.pop_batch().expect("in-flight work must drain after close");
+        assert_eq!(batch[0].req.id, 9);
+        assert!(b.pop_batch().is_none());
+    }
+
+    #[test]
+    fn try_pop_leaves_work_for_parked_workers() {
+        use std::sync::Arc;
+        let b = Arc::new(DynamicBatcher::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        }));
+        // Park a worker on the empty queue.
+        let b2 = b.clone();
+        let parked = std::thread::spawn(move || b2.pop_batch().map(|v| v[0].req.id));
+        while b.parked_workers() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // A lone arrival is reserved for the parked worker: the busy
+        // worker's between-step top-up must come back empty.
+        {
+            let mut st = b.state.lock().unwrap();
+            st.interactive.push_back(Queued {
+                req: req(1, None),
+                enqueued: Instant::now(),
+                resume: None,
+            });
+            // No notify: keep the worker parked to observe the reservation.
+        }
+        assert!(
+            b.try_pop(4).is_empty(),
+            "try_pop must leave the lone request for the parked worker"
+        );
+        // With two queued, try_pop may take at most one.
+        b.push(req(2, None));
+        let got = b.try_pop(4);
+        assert!(got.len() <= 1, "try_pop must reserve one request per parked worker");
+        // Wake the parked worker; it gets the reserved request.
+        b.cv.notify_all();
+        let woken = parked.join().unwrap();
+        assert!(woken.is_some(), "parked worker must receive the reserved request");
     }
 }

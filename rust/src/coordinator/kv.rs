@@ -12,10 +12,20 @@
 //! length**: the router admits `prompt + speculative headroom`, and the
 //! step scheduler [`grow`](KvManager::grow)s the allocation as tokens
 //! commit ([`seq_tokens`](KvManager::seq_tokens) reports the tracked
-//! length).  Admission therefore reserves what a request *holds*, not its
-//! worst-case finished size — more concurrent sequences fit, at the cost
-//! that a `grow` can fail mid-decode when the pool saturates (the
-//! scheduler fails that request; a future PR can preempt instead).
+//! length).  Admission therefore deliberately overcommits: it reserves
+//! what a request *holds*, not its worst-case finished size, so more
+//! concurrent sequences fit.  The bill comes due when a mid-decode `grow`
+//! finds the pool saturated.  The scheduler resolves that by
+//! **preemption, not failure**: it suspends a victim task (batch-class
+//! before interactive, largest holding first — see
+//! `scheduler::select_victim`), [`release`](KvManager::release)s the
+//! victim's blocks, and re-queues it with its full decode state; the
+//! victim re-reserves `prompt + committed + headroom` through
+//! [`admit`](KvManager::admit) once space frees and resumes
+//! byte-identically.  A `grow` error therefore never surfaces to a client
+//! unless the pool is smaller than one lone request's footprint
+//! ([`fits`](KvManager::fits) is false) — genuine capacity overflow, the
+//! only case that still fails.
 
 use std::collections::BTreeMap;
 
@@ -53,11 +63,26 @@ pub struct KvManager {
     seqs: BTreeMap<u64, SeqAlloc>,
     /// High-water mark of allocated blocks (reporting).
     peak_blocks: usize,
+    /// Blocks owed to preempted requests awaiting re-admission,
+    /// accumulated per debtor (each preemption contributes
+    /// `blocks_for(its footprint)`, so rounding never under-reserves).
+    /// Fresh admissions ([`admit_fresh`](Self::admit_fresh)) must leave
+    /// this many blocks free, so sustained fresh load cannot grab every
+    /// freed block ahead of a request the scheduler already suspended —
+    /// the resumed lane's queue priority, enforced at the KV altitude
+    /// where the contention actually is.
+    resume_debt_blocks: usize,
 }
 
 impl KvManager {
     pub fn new(cfg: KvConfig) -> Self {
-        Self { free_blocks: cfg.total_blocks, cfg, seqs: BTreeMap::new(), peak_blocks: 0 }
+        Self {
+            free_blocks: cfg.total_blocks,
+            cfg,
+            seqs: BTreeMap::new(),
+            peak_blocks: 0,
+            resume_debt_blocks: 0,
+        }
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
@@ -67,6 +92,12 @@ impl KvManager {
     /// Can a sequence of `tokens` total length be admitted right now?
     pub fn can_admit(&self, tokens: usize) -> bool {
         self.blocks_for(tokens) <= self.free_blocks
+    }
+
+    /// Could a sequence of `tokens` total length *ever* fit, i.e. with the
+    /// whole pool free? False means no amount of preemption helps.
+    pub fn fits(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.cfg.total_blocks
     }
 
     /// Reserve blocks for a new sequence (prompt + planned generation).
@@ -86,6 +117,46 @@ impl KvManager {
         self.seqs.insert(seq, SeqAlloc { blocks: need, tokens });
         self.peak_blocks = self.peak_blocks.max(self.allocated_blocks());
         Ok(())
+    }
+
+    /// Admission for **fresh** arrivals (the router's path): like
+    /// [`admit`](Self::admit), but refuses to eat into the blocks owed to
+    /// preempted requests awaiting re-admission. Preempted requests
+    /// re-admit through plain `admit`, which ignores the debt they are
+    /// owed.
+    pub fn admit_fresh(&mut self, seq: u64, tokens: usize) -> Result<()> {
+        let owed = self.resume_debt_blocks;
+        let need = self.blocks_for(tokens);
+        if need + owed > self.free_blocks {
+            bail!(
+                "KV pool exhausted: need {need} blocks, {} free of {} \
+                 ({owed} blocks owed to preempted requests)",
+                self.free_blocks,
+                self.cfg.total_blocks
+            );
+        }
+        self.admit(seq, tokens)
+    }
+
+    /// Record that a preempted request will need `tokens` of pool to
+    /// resume; fresh admissions keep `blocks_for(tokens)` blocks free
+    /// until [`settle_resume_debt`](Self::settle_resume_debt). Converted
+    /// to blocks per call, so several concurrent debtors' rounding never
+    /// under-reserves.
+    pub fn add_resume_debt(&mut self, tokens: usize) {
+        self.resume_debt_blocks += self.blocks_for(tokens);
+    }
+
+    /// The preempted request re-admitted (or permanently failed): stop
+    /// holding pool back on its behalf. Pass the same token count given
+    /// to [`add_resume_debt`](Self::add_resume_debt).
+    pub fn settle_resume_debt(&mut self, tokens: usize) {
+        self.resume_debt_blocks = self.resume_debt_blocks.saturating_sub(self.blocks_for(tokens));
+    }
+
+    /// Blocks currently owed to preempted requests.
+    pub fn resume_debt(&self) -> usize {
+        self.resume_debt_blocks
     }
 
     /// Grow an existing sequence to `tokens` total length.
@@ -123,6 +194,13 @@ impl KvManager {
     /// Tracked live length (tokens) of an admitted sequence, if any.
     pub fn seq_tokens(&self, seq: u64) -> Option<usize> {
         self.seqs.get(&seq).map(|a| a.tokens)
+    }
+
+    /// Blocks held by an admitted sequence, if any — the quantity the
+    /// preemption policy ranks victims by (evicting the largest holding
+    /// frees the most pool).
+    pub fn seq_blocks(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).map(|a| a.blocks)
     }
 
     pub fn allocated_blocks(&self) -> usize {
@@ -171,6 +249,10 @@ mod tests {
         assert_eq!(m.allocated_blocks(), 2);
         assert_eq!(m.seq_tokens(1), Some(7));
         assert_eq!(m.seq_tokens(2), None);
+        assert_eq!(m.seq_blocks(1), Some(2));
+        assert_eq!(m.seq_blocks(2), None);
+        assert!(m.fits(40)); // 10 blocks of 4
+        assert!(!m.fits(41));
         m.grow(1, 13).unwrap(); // 4 blocks total
         assert_eq!(m.allocated_blocks(), 4);
         assert_eq!(m.seq_tokens(1), Some(13));
@@ -214,5 +296,42 @@ mod tests {
         let mut m = mgr(4);
         m.admit(1, 8).unwrap();
         assert!(m.grow(1, 4).is_err());
+    }
+
+    #[test]
+    fn resume_debt_blocks_fresh_admissions_but_not_readmission() {
+        let mut m = mgr(10); // 10 blocks of 4 tokens
+        m.admit(1, 16).unwrap(); // 4 blocks, 6 free
+        m.add_resume_debt(20); // 5 blocks owed to a preempted request
+        assert_eq!(m.resume_debt(), 5);
+        // Fresh arrivals must leave the owed blocks free: only 1 spare.
+        assert!(m.admit_fresh(2, 8).is_err(), "2 blocks would eat the debt");
+        m.admit_fresh(3, 4).unwrap(); // 1 block still fits
+        // The preempted request itself re-admits through plain admit.
+        m.admit(4, 20).unwrap(); // exactly the owed 5 blocks
+        m.settle_resume_debt(20);
+        assert_eq!(m.resume_debt(), 0);
+        // Debt settled: fresh admissions see the whole free pool again.
+        m.release(3).unwrap();
+        m.admit_fresh(5, 1).unwrap();
+        // Over-settling saturates instead of underflowing.
+        m.settle_resume_debt(999);
+        assert_eq!(m.resume_debt(), 0);
+    }
+
+    #[test]
+    fn resume_debt_rounds_per_debtor_not_in_aggregate() {
+        // Two debtors each owing 6 tokens need 2 blocks apiece; summing
+        // tokens first (12 -> 3 blocks) would under-reserve by one block.
+        let mut m = mgr(10);
+        m.add_resume_debt(6);
+        m.add_resume_debt(6);
+        assert_eq!(m.resume_debt(), 4, "debt must round per debtor");
+        // 10 free - 4 owed: a 7-block fresh admission must be refused.
+        assert!(m.admit_fresh(1, 28).is_err());
+        m.admit_fresh(2, 24).unwrap(); // 6 blocks fits
+        m.settle_resume_debt(6);
+        m.settle_resume_debt(6);
+        assert_eq!(m.resume_debt(), 0);
     }
 }

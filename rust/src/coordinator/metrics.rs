@@ -86,8 +86,21 @@ pub struct Metrics {
     pub ttft_latency: LatencyHistogram,
     pub requests_completed: AtomicU64,
     pub requests_rejected: AtomicU64,
+    /// Requests that entered a worker and ended in an error (task open or
+    /// decode failure). KV-pressure preemption does NOT count here — a
+    /// preempted request resumes and completes.
+    pub requests_failed: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub target_forwards: AtomicU64,
+    /// Decode tasks suspended mid-flight because a KV `grow` found the
+    /// pool saturated (each increments once per eviction).
+    pub preemptions: AtomicU64,
+    /// Preempted tasks re-admitted and resumed.
+    pub resumes: AtomicU64,
+    /// Prefix tokens re-scored because a resumed task's dropped sessions
+    /// had to be rebuilt — the recompute cost preemption trades for not
+    /// failing requests.
+    pub wasted_recompute_tokens: AtomicU64,
     /// Requests currently holding a live decode task on some worker.
     inflight: AtomicU64,
     inflight_peak: AtomicU64,
@@ -123,8 +136,28 @@ impl Metrics {
     }
 
     /// Record a request's time-to-first-token (enqueue -> first commit).
+    /// Only called when a first token actually committed — a request that
+    /// commits nothing (e.g. `max_new == 0`) has no TTFT and must not
+    /// pollute the histogram.
     pub fn record_first_token(&self, ttft: Duration) {
         self.ttft_latency.record(ttft);
+    }
+
+    /// A live decode task was suspended to free KV for another request.
+    pub fn record_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A preempted task was re-admitted; `wasted_tokens` is the prefix its
+    /// fresh sessions must re-score (prompt + committed + in-flight).
+    pub fn record_resume(&self, wasted_tokens: usize) {
+        self.resumes.fetch_add(1, Ordering::Relaxed);
+        self.wasted_recompute_tokens.fetch_add(wasted_tokens as u64, Ordering::Relaxed);
+    }
+
+    /// A request failed inside a worker (task open or decode error).
+    pub fn record_failure(&self) {
+        self.requests_failed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// A decode task went live on a worker. Returns the new concurrency.
@@ -168,10 +201,16 @@ impl Metrics {
             Json::Num(self.requests_completed.load(Ordering::Relaxed) as f64));
         put("requests_rejected",
             Json::Num(self.requests_rejected.load(Ordering::Relaxed) as f64));
+        put("requests_failed",
+            Json::Num(self.requests_failed.load(Ordering::Relaxed) as f64));
         put("tokens_generated",
             Json::Num(self.tokens_generated.load(Ordering::Relaxed) as f64));
         put("target_forwards",
             Json::Num(self.target_forwards.load(Ordering::Relaxed) as f64));
+        put("preemptions", Json::Num(self.preemptions.load(Ordering::Relaxed) as f64));
+        put("resumes", Json::Num(self.resumes.load(Ordering::Relaxed) as f64));
+        put("wasted_recompute_tokens",
+            Json::Num(self.wasted_recompute_tokens.load(Ordering::Relaxed) as f64));
         put("mean_accept", Json::Num(self.mean_accept()));
         put("inflight", Json::Num(self.inflight() as f64));
         put("inflight_peak", Json::Num(self.inflight_peak() as f64));
@@ -240,11 +279,18 @@ mod tests {
             6.4,
             Some("Math"),
         );
+        m.record_preemption();
+        m.record_resume(37);
+        m.record_failure();
         let snap = m.snapshot().to_string();
         let parsed = Json::parse(&snap).unwrap();
         assert_eq!(parsed.req("requests_completed").unwrap().as_usize(), Some(1));
         assert_eq!(parsed.req("tokens_generated").unwrap().as_usize(), Some(32));
         assert!(parsed.req("per_task").unwrap().get("Math").is_some());
         assert!((parsed.req("mean_accept").unwrap().as_f64().unwrap() - 6.4).abs() < 1e-9);
+        assert_eq!(parsed.req("preemptions").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.req("resumes").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.req("wasted_recompute_tokens").unwrap().as_usize(), Some(37));
+        assert_eq!(parsed.req("requests_failed").unwrap().as_usize(), Some(1));
     }
 }

@@ -11,7 +11,10 @@
 //! ([`metrics`]). Short interactive requests therefore finish while long
 //! batch requests are still mid-decode — no head-of-line blocking — while
 //! a starvation guard keeps sustained interactive load from parking batch
-//! traffic forever.
+//! traffic forever. When the overcommitted KV pool saturates mid-decode,
+//! the scheduler preempts a victim task (suspend + release + re-queue
+//! ahead of fresh same-class arrivals) and resumes it byte-identically
+//! once space frees — pool pressure delays requests, it never fails them.
 
 pub mod api;
 pub mod batcher;
@@ -21,6 +24,6 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use api::{Method, Request, Response, StreamItem};
+pub use api::{Method, Request, Response, ResumeCarry, StreamItem};
 pub use scheduler::BatchEvent;
 pub use server::{Server, ServerConfig};

@@ -7,8 +7,11 @@
 //!
 //! KV admission is **live-length** based: the router reserves only what the
 //! request holds on arrival (prompt + the speculative pipeline window); the
-//! step scheduler grows the allocation as tokens commit. See
-//! `coordinator::kv`.
+//! step scheduler grows the allocation as tokens commit, preempting a
+//! victim when the overcommitted pool saturates. A preempted request
+//! re-enters through this same reservation shape — the scheduler re-admits
+//! `prompt + committed + headroom` before resuming it. See
+//! `coordinator::kv` and `coordinator::scheduler`.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -98,9 +101,12 @@ impl Router {
         }
         {
             // Reserve the live footprint only (prompt + speculative
-            // window); the scheduler grows it as tokens commit.
+            // window); the scheduler grows it as tokens commit. Fresh
+            // admission leaves room owed to preempted requests awaiting
+            // re-admission (see KvManager::admit_fresh), so new arrivals
+            // cannot starve a decode the scheduler already suspended.
             let mut kv = lane.kv.lock().unwrap();
-            kv.admit(req.id, req.prompt.len() + headroom)
+            kv.admit_fresh(req.id, req.prompt.len() + headroom)
                 .map_err(|_| RejectReason::KvExhausted)?;
         }
         lane.batcher.push(req);

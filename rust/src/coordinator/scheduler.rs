@@ -8,10 +8,26 @@
 //! round), and the scheduler round-robins one step per task per sweep.
 //! Between sweeps it admits newly queued requests
 //! ([`DynamicBatcher::try_pop`]), so interactive arrivals join mid-flight
-//! instead of waiting for the running work to drain; committed tokens
-//! stream out as [`BatchEvent::Delta`]s the moment their step completes;
-//! KV allocations grow with each task's live length; and [`Metrics`] gains
-//! time-to-first-token and in-flight concurrency.
+//! instead of waiting for the running work to drain (the
+//! continuous-batching admission path; see `coordinator::scheduler`);
+//! committed tokens stream out as [`BatchEvent::Delta`]s the moment their
+//! step completes; KV allocations grow with each task's live length; and
+//! [`Metrics`] gains time-to-first-token and in-flight concurrency.
+//!
+//! **Preempt-and-resume.** Live-length KV admission deliberately
+//! overcommits the pool, so a mid-decode [`KvManager::grow`] can find it
+//! saturated. That used to fail the growing request outright — discarding
+//! tokens already committed and streamed. Now the scheduler *preempts*
+//! instead: it picks a victim by class-then-cost ([`select_victim`]:
+//! batch-class before interactive, largest KV holding first — never the
+//! growing request itself while other candidates exist), suspends the
+//! victim's task into a [`ResumeState`](crate::spec::task::ResumeState),
+//! releases its KV, and re-queues it through
+//! [`DynamicBatcher::push_front_resumed`], where it outranks fresh
+//! arrivals of its class. When space frees, the victim re-reserves
+//! `prompt + committed + headroom` and resumes **byte-identically** — a
+//! client sees a pause, never a spurious failure. A grow error surfaces
+//! only when the pool is smaller than one lone request's footprint.
 //!
 //! The scheduler owns the decode dispatch: it picks the task type for the
 //! request's [`Method`], manages KV admission lifecycles, and reports
@@ -22,22 +38,68 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::spec::autoregressive::ArTask;
 use crate::spec::dualistic::{self, DualisticTask};
 use crate::spec::polybasic::PolyTask;
-use crate::spec::task::DecodeTask;
+use crate::spec::task::{DecodeTask, InflightState, ResumeState};
 use crate::spec::types::{GenerationOutput, LanguageModel, Token};
 use crate::spec::PolyConfig;
 
-use super::api::{Method, Request, Response};
-use super::batcher::DynamicBatcher;
+use super::api::{Method, Request, Response, ResumeCarry};
+use super::batcher::{classify, Batch, DynamicBatcher, Priority, QueueEntry};
 use super::kv::KvManager;
 use super::metrics::Metrics;
 use super::router::pipeline_headroom;
+
+/// The single Request→task dispatch both [`open_task`] and [`resume_task`]
+/// share: Method selection, chain-member roles, and per-method config are
+/// built in exactly one place, so a fresh open and a post-preemption
+/// resume can never drift apart (drift would silently break the
+/// byte-identity guarantee).
+fn dispatch_task<'m>(
+    chain: &'m [Arc<dyn LanguageModel>],
+    req: &Request,
+    state: Option<ResumeState>,
+) -> Result<Box<dyn DecodeTask + 'm>> {
+    match req.method {
+        Method::Autoregressive => {
+            let model = chain[0].as_ref();
+            Ok(match state {
+                None => Box::new(ArTask::new(model, &req.prompt, req.max_new, req.sampling)?),
+                Some(s) => {
+                    Box::new(ArTask::resume(model, &req.prompt, req.max_new, req.sampling, s)?)
+                }
+            })
+        }
+        Method::Dualistic { draft_k } => {
+            let target = chain[0].as_ref();
+            let draft = chain.last().expect("chain non-empty").as_ref();
+            let cfg = dualistic::DualisticConfig {
+                draft_k,
+                rule: req.rule,
+                sampling: req.sampling,
+                max_new: req.max_new,
+            };
+            Ok(match state {
+                None => Box::new(DualisticTask::new(target, draft, &req.prompt, cfg)?),
+                Some(s) => Box::new(DualisticTask::resume(target, draft, &req.prompt, cfg, s)?),
+            })
+        }
+        Method::Polybasic { draft_k, mu } => {
+            let mut cfg = PolyConfig::for_chain(chain.len(), draft_k, mu, req.max_new);
+            cfg.rule = req.rule;
+            cfg.sampling = req.sampling;
+            Ok(match state {
+                None => Box::new(PolyTask::new(chain, &req.prompt, cfg)?),
+                Some(s) => Box::new(PolyTask::resume(chain, &req.prompt, cfg, s)?),
+            })
+        }
+    }
+}
 
 /// Open a resumable decode task for one request against a chain (target
 /// first). The task borrows the chain and owns one scoring session per
@@ -46,34 +108,18 @@ pub fn open_task<'m>(
     chain: &'m [Arc<dyn LanguageModel>],
     req: &Request,
 ) -> Result<Box<dyn DecodeTask + 'm>> {
-    match req.method {
-        Method::Autoregressive => Ok(Box::new(ArTask::new(
-            chain[0].as_ref(),
-            &req.prompt,
-            req.max_new,
-            req.sampling,
-        )?)),
-        Method::Dualistic { draft_k } => {
-            let draft = chain.last().expect("chain non-empty");
-            Ok(Box::new(DualisticTask::new(
-                chain[0].as_ref(),
-                draft.as_ref(),
-                &req.prompt,
-                dualistic::DualisticConfig {
-                    draft_k,
-                    rule: req.rule,
-                    sampling: req.sampling,
-                    max_new: req.max_new,
-                },
-            )?))
-        }
-        Method::Polybasic { draft_k, mu } => {
-            let mut cfg = PolyConfig::for_chain(chain.len(), draft_k, mu, req.max_new);
-            cfg.rule = req.rule;
-            cfg.sampling = req.sampling;
-            Ok(Box::new(PolyTask::new(chain, &req.prompt, cfg)?))
-        }
-    }
+    dispatch_task(chain, req, None)
+}
+
+/// Re-open a preempted request's decode from its captured [`ResumeState`].
+/// Shares [`open_task`]'s Method dispatch, so a resumed task runs under
+/// exactly the configuration the original did.
+pub fn resume_task<'m>(
+    chain: &'m [Arc<dyn LanguageModel>],
+    req: &Request,
+    state: ResumeState,
+) -> Result<Box<dyn DecodeTask + 'm>> {
+    dispatch_task(chain, req, Some(state))
 }
 
 /// Decode one request to completion (the single-shot path: CLI, benches).
@@ -91,15 +137,17 @@ pub fn decode(chain: &[Arc<dyn LanguageModel>], req: &Request) -> Result<Generat
 }
 
 /// Order a batch shortest-job-first by output budget (stable for ties).
-pub fn sjf_order(batch: &mut [(Request, Instant)]) {
-    batch.sort_by_key(|(r, _)| r.max_new);
+pub fn sjf_order(batch: &mut [QueueEntry]) {
+    batch.sort_by_key(|e| e.req.max_new);
 }
 
 /// Progress notifications emitted by [`run_batch`] as it schedules steps.
 #[derive(Debug)]
 pub enum BatchEvent<'a> {
     /// One decode step committed new tokens for request `id` (in order;
-    /// concatenated deltas equal the final response's tokens).
+    /// concatenated deltas equal the final response's tokens). A request
+    /// preempted and resumed mid-decode never re-emits tokens: deltas
+    /// continue from where its last segment stopped.
     Delta { id: u64, tokens: &'a [Token] },
     /// Request `id` left the scheduler: finished, failed, or refused at
     /// task-open time. Carries the response by value — the scheduler
@@ -112,14 +160,265 @@ pub enum BatchEvent<'a> {
 /// A request with a live decode task on this worker.
 struct Live<'m> {
     req: Request,
-    enqueued: Instant,
     opened: Instant,
-    queue_time: std::time::Duration,
+    /// Queue time accumulated over every queue segment (re-queues included).
+    queue_time: Duration,
+    /// Service time accumulated over run segments before the current one.
+    prior_service: Duration,
     headroom: usize,
-    ttft: Option<std::time::Duration>,
-    /// Committed tokens already emitted as deltas.
+    ttft: Option<Duration>,
+    /// Committed tokens already emitted as deltas (carried across
+    /// preemption so nothing is re-delivered).
     streamed: usize,
+    /// Times this request has been preempted so far.
+    preemptions: u32,
     task: Box<dyn DecodeTask + 'm>,
+}
+
+/// One preemption candidate as seen by the victim policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VictimInfo {
+    /// Position in the live set.
+    pub index: usize,
+    /// Scheduling class: interactive tasks are preempted last.
+    pub interactive: bool,
+    /// KV blocks the task currently holds — evicting the largest holding
+    /// frees the most pool per suspension.
+    pub kv_blocks: usize,
+}
+
+/// Pick the task to preempt when the KV pool saturates: batch-class before
+/// interactive, then the largest KV holding, ties broken by the highest
+/// index (most recently admitted — LIFO, so the longest-running work keeps
+/// its worker). Callers exclude the growing request themselves; it is
+/// suspended only as a last resort when no other candidate exists.
+pub fn select_victim(candidates: impl IntoIterator<Item = VictimInfo>) -> Option<usize> {
+    candidates
+        .into_iter()
+        .max_by_key(|c| (!c.interactive, c.kv_blocks, c.index))
+        .map(|c| c.index)
+}
+
+enum Opened<'m> {
+    Live(Live<'m>),
+    /// A resumed request the pool cannot re-admit yet; retried next pass.
+    Deferred(QueueEntry),
+    Failed { id: u64, err: anyhow::Error },
+}
+
+/// Open (or re-open) one queue entry as a live task, reserving KV for
+/// resumed requests (fresh ones already hold their router reservation).
+fn open_entry<'m>(
+    chain: &'m [Arc<dyn LanguageModel>],
+    entry: QueueEntry,
+    kv: &Arc<Mutex<KvManager>>,
+    metrics: &Arc<Metrics>,
+) -> Opened<'m> {
+    let QueueEntry { req, enqueued, resume } = entry;
+    let opened = Instant::now();
+    let headroom = pipeline_headroom(&req.method, chain.len());
+    let Some(carry) = resume else {
+        return match open_task(chain, &req) {
+            Ok(task) => {
+                metrics.task_started();
+                Opened::Live(Live {
+                    headroom,
+                    queue_time: opened.duration_since(enqueued),
+                    prior_service: Duration::ZERO,
+                    req,
+                    opened,
+                    ttft: None,
+                    streamed: 0,
+                    preemptions: 0,
+                    task,
+                })
+            }
+            Err(err) => {
+                // The router admitted it, so the KV reservation exists
+                // and must be returned even though no task ever ran.
+                let released = kv.lock().unwrap().release(req.id);
+                debug_assert!(
+                    released.is_ok(),
+                    "KV release failed for request {}: every admitted request \
+                     must hold exactly one allocation ({released:?})",
+                    req.id
+                );
+                metrics.record_failure();
+                Opened::Failed { id: req.id, err }
+            }
+        };
+    };
+
+    // A preempted request released its KV at suspension; re-reserve its
+    // live footprint (prompt + committed + headroom) before reopening.
+    // The plain `admit` (not `admit_fresh`) deliberately ignores resume
+    // debt — this request IS the debt, earmarked at preemption.
+    let need = req.prompt.len() + carry.state.committed.len() + headroom;
+    {
+        let mut kvm = kv.lock().unwrap();
+        if !kvm.fits(need) {
+            kvm.settle_resume_debt(need);
+            metrics.record_failure();
+            return Opened::Failed {
+                id: req.id,
+                err: anyhow::anyhow!(
+                    "KV pool cannot host resumed request {}: needs {need} tokens \
+                     with the whole pool free",
+                    req.id
+                ),
+            };
+        }
+        if kvm.admit(req.id, need).is_err() {
+            // Saturated right now, but possible once space frees: someone
+            // else holds the pool (fits() just passed). Retry later.
+            return Opened::Deferred(QueueEntry { req, enqueued, resume: Some(carry) });
+        }
+        kvm.settle_resume_debt(need);
+    }
+    let wasted = need - headroom
+        + match &carry.state.inflight {
+            InflightState::Polybasic { drafted, .. } => drafted.len(),
+            InflightState::None => 0,
+        };
+    let ResumeCarry { state, streamed, ttft, queue_time, service_time, preemptions } = carry;
+    match resume_task(chain, &req, state) {
+        Ok(task) => {
+            metrics.task_started();
+            metrics.record_resume(wasted);
+            Opened::Live(Live {
+                headroom,
+                queue_time: queue_time + opened.duration_since(enqueued),
+                prior_service: service_time,
+                req,
+                opened,
+                ttft,
+                streamed,
+                preemptions,
+                task,
+            })
+        }
+        Err(err) => {
+            let released = kv.lock().unwrap().release(req.id);
+            debug_assert!(
+                released.is_ok(),
+                "KV release failed for resumed request {}: re-admission just \
+                 reserved it ({released:?})",
+                req.id
+            );
+            metrics.record_failure();
+            Opened::Failed { id: req.id, err }
+        }
+    }
+}
+
+/// Suspend live task `v`, release its KV, and re-queue it with its resume
+/// baggage — through the shared batcher's resumed lane when one exists,
+/// else at the front of the local waiting queue.
+fn preempt<'m>(
+    v: usize,
+    live: &mut Vec<Live<'m>>,
+    kv: &Arc<Mutex<KvManager>>,
+    metrics: &Arc<Metrics>,
+    admit: Option<&DynamicBatcher>,
+    waiting: &mut VecDeque<QueueEntry>,
+) {
+    let Live {
+        req, opened, queue_time, prior_service, headroom, ttft, streamed, preemptions, task, ..
+    } = live.remove(v);
+    metrics.task_ended();
+    metrics.record_preemption();
+    let carry = ResumeCarry {
+        state: task.suspend(),
+        streamed,
+        ttft,
+        queue_time,
+        service_time: prior_service + opened.elapsed(),
+        preemptions: preemptions + 1,
+    };
+    {
+        // Release and debt-earmark under ONE lock scope: a fresh router
+        // admission between the two would see the freed blocks with no
+        // debt and occupy exactly the space the victim needs back.
+        let mut kvm = kv.lock().unwrap();
+        let released = kvm.release(req.id);
+        debug_assert!(
+            released.is_ok(),
+            "KV release failed for preempted request {}: every live task must \
+             hold exactly one allocation ({released:?})",
+            req.id
+        );
+        kvm.add_resume_debt(req.prompt.len() + carry.state.committed.len() + headroom);
+    }
+    match admit {
+        Some(queue) => queue.push_front_resumed(req, carry),
+        None => {
+            waiting.push_front(QueueEntry { enqueued: Instant::now(), req, resume: Some(carry) })
+        }
+    }
+}
+
+enum GrowOutcome {
+    Grown,
+    /// The growing task itself was suspended and re-queued (no other
+    /// victim existed but other sequences hold pool space).
+    SelfPreempted,
+    /// The pool is smaller than this one request's live footprint; no
+    /// eviction can help.
+    Failed(anyhow::Error),
+}
+
+/// Grow `live[*i]`'s allocation to `target` tokens, evicting victims under
+/// the class-then-cost policy until it fits. Adjusts `*i` when victims at
+/// lower indices are removed.
+fn grow_with_preemption<'m>(
+    i: &mut usize,
+    target: usize,
+    live: &mut Vec<Live<'m>>,
+    kv: &Arc<Mutex<KvManager>>,
+    metrics: &Arc<Metrics>,
+    admit: Option<&DynamicBatcher>,
+    waiting: &mut VecDeque<QueueEntry>,
+) -> GrowOutcome {
+    loop {
+        let id = live[*i].req.id;
+        let (grown, fits, others) = {
+            let mut kvm = kv.lock().unwrap();
+            (kvm.grow(id, target), kvm.fits(target), kvm.active_seqs() > 1)
+        };
+        let Err(e) = grown else { return GrowOutcome::Grown };
+        if !fits {
+            return GrowOutcome::Failed(e);
+        }
+        let victim = {
+            let kvm = kv.lock().unwrap();
+            select_victim(live.iter().enumerate().filter_map(|(v, l)| {
+                if v == *i || l.task.finished() {
+                    return None;
+                }
+                Some(VictimInfo {
+                    index: v,
+                    interactive: classify(&l.req) == Priority::Interactive,
+                    kv_blocks: kvm.seq_blocks(l.req.id).unwrap_or(0),
+                })
+            }))
+        };
+        match victim {
+            Some(v) => {
+                preempt(v, live, kv, metrics, admit, waiting);
+                if v < *i {
+                    *i -= 1;
+                }
+            }
+            None if others => {
+                // Sole live task on this worker, but queued reservations or
+                // other workers hold the rest of the pool: suspend the
+                // grower itself and resume it once space frees.
+                preempt(*i, live, kv, metrics, admit, waiting);
+                return GrowOutcome::SelfPreempted;
+            }
+            None => return GrowOutcome::Failed(e),
+        }
+    }
 }
 
 /// Continuous-batching decode of `batch` (plus anything `admit` delivers
@@ -128,15 +427,17 @@ struct Live<'m> {
 /// Round-robin, one step per live task per sweep; between sweeps up to
 /// `max_live` tasks are kept alive by pulling newly queued requests from
 /// `admit` — an interactive request completes while a long batch request
-/// is still mid-decode instead of waiting behind it. Returns when the live
-/// set and (momentarily) the admission queue are empty. All output flows
-/// through `on_event`: every committed-token delta as it lands, then one
-/// [`BatchEvent::Done`] per request in **completion order** (failures
-/// surface as `Err` responses rather than silent drops). KV for every
-/// request is released exactly once.
+/// is still mid-decode instead of waiting behind it. A saturated KV pool
+/// preempts a victim task (suspended + re-queued, resumed byte-identically
+/// later) instead of failing anyone; see the module docs for the policy.
+/// Returns when the live set and (momentarily) the admission queue are
+/// empty. All output flows through `on_event`: every committed-token delta
+/// as it lands, then one [`BatchEvent::Done`] per request in **completion
+/// order** (failures surface as `Err` responses rather than silent drops).
+/// KV for every request is released exactly once per run segment.
 pub fn run_batch(
     chain: &[Arc<dyn LanguageModel>],
-    mut batch: Vec<(Request, Instant)>,
+    mut batch: Batch,
     admit: Option<&DynamicBatcher>,
     max_live: usize,
     kv: &Arc<Mutex<KvManager>>,
@@ -145,63 +446,71 @@ pub fn run_batch(
 ) {
     let max_live = max_live.max(1);
     sjf_order(&mut batch);
-    let mut waiting: VecDeque<(Request, Instant)> = batch.into();
+    let mut waiting: VecDeque<QueueEntry> = batch.into();
     let mut live: Vec<Live<'_>> = Vec::new();
 
     loop {
-        // ---- admission: new requests join between steps ------------------
+        // ---- admission: new + resumed requests join between steps --------
         if let Some(queue) = admit {
             if live.len() + waiting.len() < max_live {
                 waiting.extend(queue.try_pop(max_live - live.len() - waiting.len()));
             }
         }
+        let mut deferred: Vec<QueueEntry> = Vec::new();
         while live.len() < max_live {
-            let Some((req, enqueued)) = waiting.pop_front() else { break };
-            let opened = Instant::now();
-            match open_task(chain, &req) {
-                Ok(task) => {
-                    metrics.task_started();
-                    live.push(Live {
-                        headroom: pipeline_headroom(&req.method, chain.len()),
-                        queue_time: opened.duration_since(enqueued),
-                        req,
-                        enqueued,
-                        opened,
-                        ttft: None,
-                        streamed: 0,
-                        task,
-                    });
-                }
-                Err(e) => {
-                    // The router admitted it, so the KV reservation exists
-                    // and must be returned even though no task ever ran.
-                    let released = kv.lock().unwrap().release(req.id);
-                    debug_assert!(
-                        released.is_ok(),
-                        "KV release failed for request {}: every admitted request \
-                         must hold exactly one allocation ({released:?})",
-                        req.id
-                    );
-                    on_event(BatchEvent::Done { id: req.id, response: Err(e) });
+            let Some(entry) = waiting.pop_front() else { break };
+            match open_entry(chain, entry, kv, metrics) {
+                Opened::Live(l) => live.push(l),
+                Opened::Deferred(entry) => deferred.push(entry),
+                Opened::Failed { id, err } => {
+                    on_event(BatchEvent::Done { id, response: Err(err) })
                 }
             }
         }
+        // Deferred resumed requests keep their place at the front.
+        for entry in deferred.into_iter().rev() {
+            waiting.push_front(entry);
+        }
+
         if live.is_empty() {
-            break;
+            if waiting.is_empty() {
+                break;
+            }
+            // Only deferred resumed requests remain. The pool space they
+            // need may be reserved by *queued* fresh requests — pull one in
+            // even though `waiting` is formally at capacity, because its
+            // completion is exactly what frees the pool (otherwise a sole
+            // worker would spin here forever while the fresh request that
+            // holds the reservation never dispatches).
+            if let Some(queue) = admit {
+                let fresh = queue.try_pop(1);
+                if !fresh.is_empty() {
+                    waiting.extend(fresh);
+                    continue;
+                }
+            }
+            // Nothing to pull: space is held by other workers' tasks and
+            // will free. Back off briefly and retry.
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
         }
 
         // ---- one sweep: one step per live task, round-robin --------------
         let mut i = 0;
         while i < live.len() {
-            let (step_err, finished) = {
+            let mut step_err: Option<anyhow::Error> = None;
+            let mut grow_target: Option<usize> = None;
+            {
                 let l = &mut live[i];
                 match l.task.step() {
                     Ok(_) => {
-                        let mut err = None;
                         let committed_len = l.task.committed().len();
                         if committed_len > l.streamed {
                             if l.ttft.is_none() {
-                                let ttft = l.enqueued.elapsed();
+                                // First token of the whole request (resumed
+                                // segments carry their TTFT over): time since
+                                // the original enqueue across all segments.
+                                let ttft = l.queue_time + l.prior_service + l.opened.elapsed();
                                 l.ttft = Some(ttft);
                                 metrics.record_first_token(ttft);
                             }
@@ -211,29 +520,49 @@ pub fn run_batch(
                             });
                             l.streamed = committed_len;
                             // Track the live length in the KV manager; a
-                            // saturated pool fails the request (no silent
-                            // overcommit).
-                            let target = l.req.prompt.len() + l.streamed + l.headroom;
-                            let mut kv = kv.lock().unwrap();
-                            if kv.seq_tokens(l.req.id).is_some_and(|cur| target > cur) {
-                                if let Err(e) = kv.grow(l.req.id, target) {
-                                    err = Some(e);
+                            // saturated pool preempts instead of failing.
+                            // A task that just finished skips the grow: it
+                            // releases its whole allocation a few lines
+                            // down, so evicting a victim (or suspending a
+                            // finished task, which suspend() forbids) to
+                            // reserve headroom it will never use would be
+                            // pure waste.
+                            if !l.task.finished() {
+                                let target = l.req.prompt.len() + l.streamed + l.headroom;
+                                if kv
+                                    .lock()
+                                    .unwrap()
+                                    .seq_tokens(l.req.id)
+                                    .is_some_and(|cur| target > cur)
+                                {
+                                    grow_target = Some(target);
                                 }
                             }
                         }
-                        let finished = err.is_none() && l.task.finished();
-                        (err, finished)
                     }
-                    Err(e) => (Some(e), false),
+                    Err(e) => step_err = Some(e),
                 }
-            };
+            }
+            if let Some(target) = grow_target {
+                let outcome =
+                    grow_with_preemption(&mut i, target, &mut live, kv, metrics, admit, &mut waiting);
+                match outcome {
+                    GrowOutcome::Grown => {}
+                    // live[i] was suspended + re-queued; the next task
+                    // shifted into slot i.
+                    GrowOutcome::SelfPreempted => continue,
+                    GrowOutcome::Failed(e) => step_err = Some(e),
+                }
+            }
+            let finished = step_err.is_none() && live[i].task.finished();
             if step_err.is_none() && !finished {
                 i += 1;
                 continue;
             }
 
             // ---- completion: release KV, record metrics, emit ------------
-            let Live { req, opened, queue_time, ttft, task, .. } = live.remove(i);
+            let Live { req, opened, queue_time, prior_service, ttft, preemptions, task, .. } =
+                live.remove(i);
             metrics.task_ended();
             let released = kv.lock().unwrap().release(req.id);
             debug_assert!(
@@ -244,10 +573,13 @@ pub fn run_batch(
             );
             let id = req.id;
             let resp: Result<Response> = match step_err {
-                Some(e) => Err(e),
+                Some(e) => {
+                    metrics.record_failure();
+                    Err(e)
+                }
                 None => {
                     let gen = task.finish();
-                    let service_time = opened.elapsed();
+                    let service_time = prior_service + opened.elapsed();
                     let mean_accept = gen.mean_accept();
                     metrics.record_completion(
                         queue_time,
@@ -262,7 +594,8 @@ pub fn run_batch(
                         tokens: gen.tokens,
                         queue_time,
                         service_time,
-                        ttft: ttft.unwrap_or(queue_time + service_time),
+                        ttft,
+                        preemptions,
                         mean_accept,
                         forward_passes: gen.forward_passes,
                         task: req.task,
@@ -293,13 +626,43 @@ mod tests {
     fn sjf_orders_by_budget() {
         let now = Instant::now();
         let mut batch = vec![
-            (mk_req(1, 40, Method::Autoregressive), now),
-            (mk_req(2, 10, Method::Autoregressive), now),
-            (mk_req(3, 20, Method::Autoregressive), now),
+            QueueEntry::fresh(mk_req(1, 40, Method::Autoregressive), now),
+            QueueEntry::fresh(mk_req(2, 10, Method::Autoregressive), now),
+            QueueEntry::fresh(mk_req(3, 20, Method::Autoregressive), now),
         ];
         sjf_order(&mut batch);
-        let ids: Vec<u64> = batch.iter().map(|(r, _)| r.id).collect();
+        let ids: Vec<u64> = batch.iter().map(|e| e.req.id).collect();
         assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn victim_policy_prefers_batch_class_then_largest_holding() {
+        // Batch-class beats interactive even with a smaller holding.
+        let v = select_victim([
+            VictimInfo { index: 0, interactive: true, kv_blocks: 50 },
+            VictimInfo { index: 1, interactive: false, kv_blocks: 2 },
+        ]);
+        assert_eq!(v, Some(1));
+        // Within a class, the largest holding goes first.
+        let v = select_victim([
+            VictimInfo { index: 0, interactive: false, kv_blocks: 3 },
+            VictimInfo { index: 1, interactive: false, kv_blocks: 9 },
+            VictimInfo { index: 2, interactive: false, kv_blocks: 4 },
+        ]);
+        assert_eq!(v, Some(1));
+        // All interactive: still picks the largest holding.
+        let v = select_victim([
+            VictimInfo { index: 0, interactive: true, kv_blocks: 3 },
+            VictimInfo { index: 1, interactive: true, kv_blocks: 7 },
+        ]);
+        assert_eq!(v, Some(1));
+        // Ties: most recently admitted (highest index) is evicted.
+        let v = select_victim([
+            VictimInfo { index: 0, interactive: false, kv_blocks: 5 },
+            VictimInfo { index: 3, interactive: false, kv_blocks: 5 },
+        ]);
+        assert_eq!(v, Some(3));
+        assert_eq!(select_victim(Vec::<VictimInfo>::new()), None);
     }
 
     #[test]
@@ -318,7 +681,7 @@ mod tests {
         .map(|(i, &m)| {
             let req = mk_req(i as u64, 12, m);
             kv.lock().unwrap().admit(req.id, 40).unwrap();
-            (req, now)
+            QueueEntry::fresh(req, now)
         })
         .collect();
         let mut out: Vec<Result<Response>> = Vec::new();
@@ -331,6 +694,7 @@ mod tests {
         for r in &out {
             let resp = r.as_ref().unwrap();
             assert_eq!(resp.tokens.len(), 12);
+            assert!(resp.ttft.is_some());
         }
         assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
         assert_eq!(metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed), 3);
@@ -347,8 +711,9 @@ mod tests {
         let req = mk_req(1, 16, Method::Polybasic { draft_k: 3, mu: 4 });
         kv.lock().unwrap().admit(1, 60).unwrap();
         let gen = decode(&chain, &req).unwrap();
+        let batch = vec![QueueEntry::fresh(req, Instant::now())];
         let mut out: Vec<Result<Response>> = Vec::new();
-        run_batch(&chain, vec![(req, Instant::now())], None, 1, &kv, &metrics, |ev| {
+        run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| {
             if let BatchEvent::Done { response, .. } = ev {
                 out.push(response);
             }
@@ -371,8 +736,9 @@ mod tests {
         // max_new far beyond the 64-token context: task open must fail.
         let req = mk_req(1, 600, Method::Polybasic { draft_k: 3, mu: 4 });
         kv.lock().unwrap().admit(1, 30).unwrap();
+        let batch = vec![QueueEntry::fresh(req, Instant::now())];
         let mut out: Vec<Result<Response>> = Vec::new();
-        run_batch(&chain, vec![(req, Instant::now())], None, 2, &kv, &metrics, |ev| {
+        run_batch(&chain, batch, None, 2, &kv, &metrics, |ev| {
             if let BatchEvent::Done { response, .. } = ev {
                 out.push(response);
             }
@@ -380,5 +746,30 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert!(out[0].is_err());
         assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked on open failure");
+        assert_eq!(metrics.requests_failed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn zero_budget_request_reports_no_ttft() {
+        // A request that commits zero tokens has no first token: the
+        // response's ttft must be None (not a queue+service fallback) and
+        // the TTFT histogram must stay empty.
+        let chain = mock_chain(512, 24, 5);
+        let kv = Arc::new(Mutex::new(KvManager::new(KvConfig::default())));
+        let metrics = Arc::new(Metrics::default());
+        let req = mk_req(1, 0, Method::Autoregressive);
+        kv.lock().unwrap().admit(1, 10).unwrap();
+        let batch = vec![QueueEntry::fresh(req, Instant::now())];
+        let mut out: Vec<Result<Response>> = Vec::new();
+        run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| {
+            if let BatchEvent::Done { response, .. } = ev {
+                out.push(response);
+            }
+        });
+        let resp = out[0].as_ref().unwrap();
+        assert!(resp.tokens.is_empty());
+        assert_eq!(resp.ttft, None, "no first token -> no TTFT");
+        assert_eq!(metrics.ttft_latency.count(), 0, "histogram must not see a fake TTFT");
+        assert_eq!(kv.lock().unwrap().active_seqs(), 0);
     }
 }

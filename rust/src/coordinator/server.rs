@@ -6,9 +6,13 @@
 //! chain of resumable decode tasks: new requests are admitted between
 //! decode steps, committed tokens stream out per step, and a short
 //! interactive request finishes while a long batch request is still
-//! mid-decode. Clients receive either a single final [`Response`]
-//! ([`Server::submit`]) or a live [`StreamItem`] feed of per-step token
-//! deltas ([`Server::submit_stream`]). No Python anywhere near this path.
+//! mid-decode. Clients receive either a single final
+//! `Result<Response, String>` ([`Server::submit`]) or a live [`StreamItem`]
+//! feed of per-step token deltas ([`Server::submit_stream`]); decode
+//! failures arrive as values, never as a bare channel close. KV-pool
+//! saturation preempts and resumes decodes transparently (see
+//! `coordinator::scheduler`) — clients never observe a pool-pressure
+//! failure. No Python anywhere near this path.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -53,10 +57,12 @@ impl ServerConfig {
     }
 }
 
-/// Where a request's output goes: one final response, or a live stream of
-/// per-step deltas followed by the final response.
+/// Where a request's output goes: one final `Result` (response or failure
+/// reason), or a live stream of per-step deltas ending in
+/// [`StreamItem::Done`] / [`StreamItem::Failed`]. Either way a decode
+/// failure reaches the client as a value — never as a bare channel close.
 enum ReplySink {
-    Final(mpsc::Sender<Response>),
+    Final(mpsc::Sender<Result<Response, String>>),
     Stream(mpsc::Sender<StreamItem>),
 }
 
@@ -202,14 +208,16 @@ impl Server {
     }
 
     /// Submit a generation; returns a receiver that yields the final
-    /// response once the decode completes.
+    /// result once the decode completes — `Ok(Response)` on success,
+    /// `Err(reason)` if the decode failed, so a failure is observable
+    /// rather than an unexplained channel close.
     pub fn submit(
         &self,
         prompt: Vec<crate::spec::types::Token>,
         max_new: usize,
         method: Method,
         task: Option<TaskKind>,
-    ) -> Result<mpsc::Receiver<Response>, RejectReason> {
+    ) -> Result<mpsc::Receiver<Result<Response, String>>, RejectReason> {
         let req = self.make_request(prompt, max_new, method, task);
         let (tx, rx) = mpsc::channel();
         self.route(req, ReplySink::Final(tx))?;
@@ -219,7 +227,8 @@ impl Server {
     /// Submit a generation and stream it: the receiver yields a
     /// [`StreamItem::Delta`] for every decode step that commits tokens
     /// (first delta = time-to-first-token), then [`StreamItem::Done`] with
-    /// the final response. A failed decode simply closes the channel.
+    /// the final response — or [`StreamItem::Failed`] with the reason if
+    /// the decode errored.
     pub fn submit_stream(
         &self,
         prompt: Vec<crate::spec::types::Token>,
@@ -272,8 +281,10 @@ impl Server {
 }
 
 /// Fan a scheduler event out to the request's sink. Delta events reach
-/// stream sinks only; Done removes the sink and delivers the final
-/// response (errors close the channel by dropping the sink).
+/// stream sinks only; Done removes the sink and delivers the outcome —
+/// including failures, which used to be dropped on the floor here (the
+/// old code destructured `(Some(sink), Ok(resp))`, so an `Err` response
+/// left the client staring at a bare channel close with no reason).
 fn deliver(replies: &SinkMap, event: BatchEvent<'_>) {
     match event {
         BatchEvent::Delta { id, tokens } => {
@@ -284,15 +295,20 @@ fn deliver(replies: &SinkMap, event: BatchEvent<'_>) {
         }
         BatchEvent::Done { id, response } => {
             let sink = replies.lock().unwrap().remove(&id);
-            if let (Some(sink), Ok(resp)) = (sink, response) {
-                match sink {
-                    ReplySink::Final(tx) => {
-                        let _ = tx.send(resp);
-                    }
-                    ReplySink::Stream(tx) => {
-                        let _ = tx.send(StreamItem::Done(resp));
-                    }
+            match (sink, response) {
+                (Some(ReplySink::Final(tx)), Ok(resp)) => {
+                    let _ = tx.send(Ok(resp));
                 }
+                (Some(ReplySink::Final(tx)), Err(e)) => {
+                    let _ = tx.send(Err(e.to_string()));
+                }
+                (Some(ReplySink::Stream(tx)), Ok(resp)) => {
+                    let _ = tx.send(StreamItem::Done(resp));
+                }
+                (Some(ReplySink::Stream(tx)), Err(e)) => {
+                    let _ = tx.send(StreamItem::Failed(e.to_string()));
+                }
+                (None, _) => {}
             }
         }
     }
@@ -304,5 +320,63 @@ impl Drop for Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_response(id: u64) -> Response {
+        Response {
+            id,
+            tokens: vec![1, 2, 3],
+            queue_time: Duration::from_millis(1),
+            service_time: Duration::from_millis(2),
+            ttft: Some(Duration::from_millis(1)),
+            preemptions: 0,
+            mean_accept: 0.0,
+            forward_passes: vec![3],
+            task: None,
+            method: Method::Autoregressive,
+        }
+    }
+
+    #[test]
+    fn deliver_surfaces_errors_to_final_sink() {
+        let replies: SinkMap = Arc::new(Mutex::new(HashMap::new()));
+        let (tx, rx) = mpsc::channel();
+        replies.lock().unwrap().insert(7, ReplySink::Final(tx));
+        deliver(&replies, BatchEvent::Done { id: 7, response: Err(anyhow::anyhow!("boom")) });
+        let got = rx.recv().expect("failure must be delivered, not dropped");
+        assert_eq!(got.unwrap_err(), "boom");
+        assert!(replies.lock().unwrap().is_empty(), "sink must be removed");
+    }
+
+    #[test]
+    fn deliver_surfaces_errors_to_stream_sink() {
+        let replies: SinkMap = Arc::new(Mutex::new(HashMap::new()));
+        let (tx, rx) = mpsc::channel();
+        replies.lock().unwrap().insert(8, ReplySink::Stream(tx));
+        deliver(&replies, BatchEvent::Delta { id: 8, tokens: &[4, 5] });
+        deliver(&replies, BatchEvent::Done { id: 8, response: Err(anyhow::anyhow!("pool gone")) });
+        assert!(matches!(rx.recv().unwrap(), StreamItem::Delta(t) if t == vec![4, 5]));
+        match rx.recv().unwrap() {
+            StreamItem::Failed(msg) => assert_eq!(msg, "pool gone"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deliver_success_paths_still_work() {
+        let replies: SinkMap = Arc::new(Mutex::new(HashMap::new()));
+        let (ftx, frx) = mpsc::channel();
+        let (stx, srx) = mpsc::channel();
+        replies.lock().unwrap().insert(1, ReplySink::Final(ftx));
+        replies.lock().unwrap().insert(2, ReplySink::Stream(stx));
+        deliver(&replies, BatchEvent::Done { id: 1, response: Ok(mk_response(1)) });
+        deliver(&replies, BatchEvent::Done { id: 2, response: Ok(mk_response(2)) });
+        assert_eq!(frx.recv().unwrap().unwrap().id, 1);
+        assert!(matches!(srx.recv().unwrap(), StreamItem::Done(r) if r.id == 2));
     }
 }

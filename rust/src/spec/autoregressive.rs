@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use super::rng::Pcg32;
 use super::sampler::{self};
-use super::task::{DecodeTask, StepMeter, StepOutcome};
+use super::task::{DecodeTask, InflightState, ResumeState, StepMeter, StepOutcome};
 use super::types::{
     softmax_into, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token,
 };
@@ -61,6 +61,34 @@ impl<'m> ArTask<'m> {
             meter: StepMeter::new(1),
         })
     }
+
+    /// Re-open a suspended decode from `prompt + state`; see
+    /// [`DecodeTask::suspend`]. The fresh session re-scores the whole
+    /// `prompt + committed` prefix lazily on the first step, after which
+    /// decode continues byte-identically to an uninterrupted run.
+    pub fn resume(
+        model: &'m dyn LanguageModel,
+        prompt: &[Token],
+        max_new: usize,
+        sampling: SamplingParams,
+        state: ResumeState,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            state.committed.len() <= max_new,
+            "resume state carries {} tokens for a budget of {max_new}",
+            state.committed.len()
+        );
+        anyhow::ensure!(state.forward_passes.len() == 1, "autoregressive resume needs one model");
+        anyhow::ensure!(
+            matches!(state.inflight, InflightState::None),
+            "autoregressive tasks carry no in-flight state"
+        );
+        let mut task = Self::new(model, prompt, max_new, sampling)?;
+        task.tokens = state.committed;
+        task.rng = state.rng;
+        task.meter = StepMeter::resumed(state.wall, state.forward_passes, state.forward_time);
+        Ok(task)
+    }
 }
 
 impl DecodeTask for ArTask<'_> {
@@ -78,9 +106,13 @@ impl DecodeTask for ArTask<'_> {
         }
         let models: [&dyn LanguageModel; 1] = [self.model];
         self.meter.begin(&models);
-        // Lazy prefill: the prompt is scored on the first step.
+        // Lazy prefill: the prompt — plus any tokens committed before a
+        // suspension — is scored on the first step.
         if self.session.is_empty() {
             self.session.append(&self.prompt)?;
+            if !self.tokens.is_empty() {
+                self.session.append(&self.tokens)?;
+            }
         }
         softmax_into(
             self.session.row(self.session.len() - 1),
@@ -113,6 +145,21 @@ impl DecodeTask for ArTask<'_> {
             forward_time,
             accept_lengths: accept,
             stage_accept_lengths: vec![],
+        }
+    }
+
+    fn suspend(self: Box<Self>) -> ResumeState {
+        let n = self.tokens.len();
+        let (wall, forward_passes, forward_time) = self.meter.into_parts();
+        ResumeState {
+            committed: self.tokens,
+            rng: self.rng,
+            accept_lengths: vec![1; n],
+            stage_accepts: vec![],
+            wall,
+            forward_passes,
+            forward_time,
+            inflight: InflightState::None,
         }
     }
 }
@@ -210,5 +257,26 @@ mod tests {
     fn rejects_overlong_request() {
         let m = MockModel::new("m", 8, 16, 1, 0.0);
         assert!(generate(&m, &[1, 2], 10, &SamplingParams::default()).is_err());
+    }
+
+    #[test]
+    fn suspend_resume_mid_decode_is_byte_identical() {
+        let m = MockModel::new("m", 64, 16, 1, 0.3);
+        let params = SamplingParams { seed: 21, ..Default::default() };
+        let whole = generate(&m, &[5, 1], 20, &params).unwrap();
+        let mut task = ArTask::new(&m, &[5, 1], 20, params).unwrap();
+        for _ in 0..7 {
+            task.step().unwrap();
+        }
+        let state = Box::new(task).suspend();
+        assert_eq!(state.committed.len(), 7);
+        let mut task = ArTask::resume(&m, &[5, 1], 20, params, state).unwrap();
+        assert_eq!(task.committed().len(), 7);
+        while !task.finished() {
+            task.step().unwrap();
+        }
+        let out = Box::new(task).finish();
+        assert_eq!(out.tokens, whole.tokens, "resumed decode diverged");
+        assert_eq!(out.accept_lengths, whole.accept_lengths);
     }
 }

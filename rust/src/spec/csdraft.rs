@@ -27,7 +27,7 @@ use anyhow::Result;
 use super::dualistic::{dist_row_into, pick};
 use super::rng::Pcg32;
 use super::sampler::FilterScratch;
-use super::task::{DecodeTask, StepMeter, StepOutcome};
+use super::task::{DecodeTask, InflightState, ResumeState, StepMeter, StepOutcome};
 use super::types::{
     reconcile, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
 };
@@ -112,6 +112,47 @@ impl<'m> CsDraftTask<'m> {
             stage_accepts: vec![Vec::new(); n_drafters],
             meter: StepMeter::new(n_drafters + 1),
         })
+    }
+
+    /// Re-open a suspended decode from `prompt + state`; see
+    /// [`DecodeTask::suspend`]. Fresh sessions re-score the committed
+    /// prefix on the next step's `reconcile`, after which decode continues
+    /// byte-identically to an uninterrupted run.
+    pub fn resume(
+        models: &'m [Arc<dyn LanguageModel>],
+        prompt: &[Token],
+        cfg: CsDraftConfig,
+        state: ResumeState,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            state.committed.len() <= cfg.max_new,
+            "resume state carries {} tokens for a budget of {}",
+            state.committed.len(),
+            cfg.max_new
+        );
+        anyhow::ensure!(
+            state.forward_passes.len() == models.len(),
+            "resume state covers {} models, cascade has {}",
+            state.forward_passes.len(),
+            models.len()
+        );
+        anyhow::ensure!(
+            state.stage_accepts.len() == models.len() - 1,
+            "resume state covers {} drafter tiers, cascade has {}",
+            state.stage_accepts.len(),
+            models.len() - 1
+        );
+        anyhow::ensure!(
+            matches!(state.inflight, InflightState::None),
+            "CS-Drafting tasks carry no in-flight state"
+        );
+        let mut task = Self::new(models, prompt, cfg)?;
+        task.ctx.extend_from_slice(&state.committed);
+        task.rng = state.rng;
+        task.accept_lengths = state.accept_lengths;
+        task.stage_accepts = state.stage_accepts;
+        task.meter = StepMeter::resumed(state.wall, state.forward_passes, state.forward_time);
+        Ok(task)
     }
 }
 
@@ -232,6 +273,21 @@ impl DecodeTask for CsDraftTask<'_> {
             forward_time,
             accept_lengths,
             stage_accept_lengths,
+        }
+    }
+
+    fn suspend(self: Box<Self>) -> ResumeState {
+        let committed = self.ctx[self.prompt_len..].to_vec();
+        let (wall, forward_passes, forward_time) = self.meter.into_parts();
+        ResumeState {
+            committed,
+            rng: self.rng,
+            accept_lengths: self.accept_lengths,
+            stage_accepts: self.stage_accepts,
+            wall,
+            forward_passes,
+            forward_time,
+            inflight: InflightState::None,
         }
     }
 }
@@ -356,6 +412,31 @@ mod tests {
         let out = Box::new(task).finish();
         assert_eq!(out.tokens, whole.tokens);
         assert_eq!(out.forward_passes, whole.forward_passes);
+        assert_eq!(out.stage_accept_lengths, whole.stage_accept_lengths);
+    }
+
+    #[test]
+    fn suspend_resume_mid_decode_is_byte_identical() {
+        let models = cascade();
+        let cfg = CsDraftConfig {
+            lens: vec![3, 2],
+            rule: VerifyRule::Speculative,
+            sampling: SamplingParams { seed: 37, ..Default::default() },
+            max_new: 30,
+        };
+        let whole = generate(&models, &[4, 2], &cfg).unwrap();
+        let mut task = CsDraftTask::new(&models, &[4, 2], cfg.clone()).unwrap();
+        for _ in 0..2 {
+            task.step().unwrap();
+        }
+        let state = Box::new(task).suspend();
+        let mut task = CsDraftTask::resume(&models, &[4, 2], cfg, state).unwrap();
+        while !task.finished() {
+            task.step().unwrap();
+        }
+        let out = Box::new(task).finish();
+        assert_eq!(out.tokens, whole.tokens, "resumed decode diverged");
+        assert_eq!(out.accept_lengths, whole.accept_lengths);
         assert_eq!(out.stage_accept_lengths, whole.stage_accept_lengths);
     }
 

@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use super::rng::Pcg32;
 use super::sampler::{self, FilterScratch};
-use super::task::{DecodeTask, StepMeter, StepOutcome};
+use super::task::{DecodeTask, InflightState, ResumeState, StepMeter, StepOutcome};
 use super::types::{
     reconcile, softmax_into, GenerationOutput, LanguageModel, SamplingParams, ScoringSession,
     Token, VerifyRule,
@@ -131,6 +131,36 @@ impl<'m> DualisticTask<'m> {
             meter: StepMeter::new(2),
         })
     }
+
+    /// Re-open a suspended decode from `prompt + state`; see
+    /// [`DecodeTask::suspend`]. Fresh sessions re-score the committed
+    /// prefix on the next step's `reconcile`, after which decode continues
+    /// byte-identically to an uninterrupted run.
+    pub fn resume(
+        target: &'m dyn LanguageModel,
+        draft: &'m dyn LanguageModel,
+        prompt: &[Token],
+        cfg: DualisticConfig,
+        state: ResumeState,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            state.committed.len() <= cfg.max_new,
+            "resume state carries {} tokens for a budget of {}",
+            state.committed.len(),
+            cfg.max_new
+        );
+        anyhow::ensure!(state.forward_passes.len() == 2, "dualistic resume needs two models");
+        anyhow::ensure!(
+            matches!(state.inflight, InflightState::None),
+            "dualistic tasks carry no in-flight state"
+        );
+        let mut task = Self::new(target, draft, prompt, cfg)?;
+        task.ctx.extend_from_slice(&state.committed);
+        task.rng = state.rng;
+        task.accept_lengths = state.accept_lengths;
+        task.meter = StepMeter::resumed(state.wall, state.forward_passes, state.forward_time);
+        Ok(task)
+    }
 }
 
 impl DecodeTask for DualisticTask<'_> {
@@ -238,6 +268,21 @@ impl DecodeTask for DualisticTask<'_> {
             forward_time,
             accept_lengths,
             stage_accept_lengths: vec![],
+        }
+    }
+
+    fn suspend(self: Box<Self>) -> ResumeState {
+        let committed = self.ctx[self.prompt_len..].to_vec();
+        let (wall, forward_passes, forward_time) = self.meter.into_parts();
+        ResumeState {
+            committed,
+            rng: self.rng,
+            accept_lengths: self.accept_lengths,
+            stage_accepts: vec![],
+            wall,
+            forward_passes,
+            forward_time,
+            inflight: InflightState::None,
         }
     }
 }
@@ -375,5 +420,35 @@ mod tests {
         assert_eq!(out.tokens, whole.tokens);
         assert_eq!(out.forward_passes, whole.forward_passes);
         assert_eq!(out.accept_lengths, whole.accept_lengths);
+    }
+
+    #[test]
+    fn suspend_resume_mid_decode_is_byte_identical() {
+        for rule in [VerifyRule::Greedy, VerifyRule::Speculative] {
+            let cfg = DualisticConfig {
+                rule,
+                sampling: SamplingParams {
+                    temperature: if rule == VerifyRule::Greedy { 0.0 } else { 1.0 },
+                    seed: 31,
+                    ..Default::default()
+                },
+                max_new: 44,
+                ..Default::default()
+            };
+            let (t, d) = models();
+            let whole = generate(&t, &d, &[3, 1, 4], &cfg).unwrap();
+            let mut task = DualisticTask::new(&t, &d, &[3, 1, 4], cfg).unwrap();
+            for _ in 0..3 {
+                task.step().unwrap();
+            }
+            let state = Box::new(task).suspend();
+            let mut task = DualisticTask::resume(&t, &d, &[3, 1, 4], cfg, state).unwrap();
+            while !task.finished() {
+                task.step().unwrap();
+            }
+            let out = Box::new(task).finish();
+            assert_eq!(out.tokens, whole.tokens, "{rule:?}: resumed decode diverged");
+            assert_eq!(out.accept_lengths, whole.accept_lengths, "{rule:?}");
+        }
     }
 }

@@ -32,7 +32,7 @@ pub mod types;
 pub mod verify;
 
 pub use polybasic::{generate as polybasic_generate, PolyConfig};
-pub use task::{DecodeTask, StepOutcome};
+pub use task::{DecodeTask, InflightState, ResumeState, StepOutcome};
 pub use types::{
     GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
 };

@@ -46,7 +46,7 @@ use anyhow::Result;
 use super::dualistic::{dist_row_into, pick};
 use super::rng::Pcg32;
 use super::sampler::FilterScratch;
-use super::task::{DecodeTask, StepMeter, StepOutcome};
+use super::task::{DecodeTask, InflightState, ResumeState, StepMeter, StepOutcome};
 use super::types::{
     reconcile, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
 };
@@ -185,6 +185,64 @@ impl<'m> PolyTask<'m> {
             meter: StepMeter::new(n),
         })
     }
+
+    /// Re-open a suspended decode from `prompt + state`; see
+    /// [`DecodeTask::suspend`]. Unlike the single-round task types, the
+    /// polybasic pipeline carries uncommitted drafts and their proposal
+    /// distributions across steps, so the suspended pipeline suffix is
+    /// restored wholesale — the fresh sessions re-score the whole frontier
+    /// on the next `reconcile`, after which decode continues
+    /// byte-identically to an uninterrupted run.
+    pub fn resume(
+        models: &'m [Arc<dyn LanguageModel>],
+        prompt: &[Token],
+        cfg: PolyConfig,
+        state: ResumeState,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            state.committed.len() <= cfg.max_new,
+            "resume state carries {} tokens for a budget of {}",
+            state.committed.len(),
+            cfg.max_new
+        );
+        anyhow::ensure!(
+            state.forward_passes.len() == models.len(),
+            "resume state covers {} models, chain has {}",
+            state.forward_passes.len(),
+            models.len()
+        );
+        anyhow::ensure!(
+            state.stage_accepts.len() == models.len() - 1,
+            "resume state covers {} verifier stages, chain has {}",
+            state.stage_accepts.len(),
+            models.len() - 1
+        );
+        let mut task = Self::new(models, prompt, cfg)?;
+        task.pipe.flat.extend_from_slice(&state.committed);
+        task.pipe.committed += state.committed.len();
+        match state.inflight {
+            InflightState::None => {}
+            InflightState::Polybasic { drafted, queues } => {
+                anyhow::ensure!(
+                    queues.len() == models.len() - 1,
+                    "in-flight state covers {} queues, chain has {}",
+                    queues.len(),
+                    models.len() - 1
+                );
+                anyhow::ensure!(
+                    drafted.len() == queues.iter().map(|q| q.len()).sum::<usize>(),
+                    "in-flight tokens and proposal queues disagree"
+                );
+                task.pipe.flat.extend_from_slice(&drafted);
+                task.pipe.queues = queues;
+            }
+        }
+        task.rng = state.rng;
+        task.accept_lengths = state.accept_lengths;
+        task.stage_accepts = state.stage_accepts;
+        task.meter = StepMeter::resumed(state.wall, state.forward_passes, state.forward_time);
+        Ok(task)
+    }
 }
 
 impl DecodeTask for PolyTask<'_> {
@@ -308,6 +366,27 @@ impl DecodeTask for PolyTask<'_> {
             forward_time,
             accept_lengths,
             stage_accept_lengths,
+        }
+    }
+
+    fn suspend(self: Box<Self>) -> ResumeState {
+        let committed = self.pipe.flat[self.prompt_len..self.pipe.committed].to_vec();
+        let drafted = self.pipe.flat[self.pipe.committed..].to_vec();
+        let queues = self.pipe.queues;
+        let (wall, forward_passes, forward_time) = self.meter.into_parts();
+        ResumeState {
+            committed,
+            rng: self.rng,
+            accept_lengths: self.accept_lengths,
+            stage_accepts: self.stage_accepts,
+            wall,
+            forward_passes,
+            forward_time,
+            inflight: if drafted.is_empty() {
+                InflightState::None
+            } else {
+                InflightState::Polybasic { drafted, queues }
+            },
         }
     }
 }
@@ -556,6 +635,37 @@ mod tests {
         assert_eq!(out.forward_passes, whole.forward_passes);
         assert_eq!(out.accept_lengths, whole.accept_lengths);
         assert_eq!(out.stage_accept_lengths, whole.stage_accept_lengths);
+    }
+
+    #[test]
+    fn suspend_resume_mid_pipeline_is_byte_identical() {
+        // Suspend after a step that leaves drafts in flight: the restored
+        // pipeline (tokens + proposal distributions + RNG) must continue
+        // exactly where the uninterrupted run would have gone.
+        for seed in [9u64, 17, 23] {
+            let chain = mock_chain(512, 24, 41);
+            let mut cfg = PolyConfig::for_chain(3, 4, 6, 48);
+            cfg.sampling.seed = seed;
+            let whole = generate(&chain, &[2, 4, 6], &cfg).unwrap();
+            for suspend_after in 1..5usize {
+                let mut task = PolyTask::new(&chain, &[2, 4, 6], cfg.clone()).unwrap();
+                for _ in 0..suspend_after {
+                    task.step().unwrap();
+                }
+                let state = Box::new(task).suspend();
+                let mut task = PolyTask::resume(&chain, &[2, 4, 6], cfg.clone(), state).unwrap();
+                while !task.finished() {
+                    task.step().unwrap();
+                }
+                let out = Box::new(task).finish();
+                assert_eq!(
+                    out.tokens, whole.tokens,
+                    "seed {seed}, suspend after {suspend_after}: resumed decode diverged"
+                );
+                assert_eq!(out.accept_lengths, whole.accept_lengths, "seed {seed}");
+                assert_eq!(out.stage_accept_lengths, whole.stage_accept_lengths, "seed {seed}");
+            }
+        }
     }
 
     /// Statistical losslessness: the marginal distribution of the first

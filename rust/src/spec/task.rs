@@ -24,10 +24,12 @@
 //! durations — time the task actually held the worker, not time it spent
 //! parked between steps.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::rng::Pcg32;
 use super::types::{GenerationOutput, LanguageModel, Token};
 
 /// What one [`DecodeTask::step`] accomplished.
@@ -56,6 +58,60 @@ impl StepOutcome {
     }
 }
 
+/// Everything a preempted decode needs to continue later, captured at a
+/// step boundary by [`DecodeTask::suspend`].
+///
+/// Preemption tears the task down completely — scoring sessions are
+/// dropped and the KV allocation is released — so the state is pure host
+/// data: the committed tokens, the sampling RNG mid-stream, the per-model
+/// draft/accept statistics, and the `F_i` / `T_i` meter totals. A task
+/// re-opened from `prompt + ResumeState` (each task type has a `resume`
+/// constructor) continues the decode **byte-identically** to a run that was
+/// never suspended: the RNG draws, verify verdicts, and therefore committed
+/// tokens are exactly the sequence the uninterrupted task would have
+/// produced. The only cost is wasted recompute — the resumed sessions
+/// re-score the prefix the dropped sessions had cached (the coordinator's
+/// `wasted_recompute_tokens` gauge).
+#[derive(Debug)]
+pub struct ResumeState {
+    /// Tokens committed beyond the prompt when the task was suspended.
+    pub committed: Vec<Token>,
+    /// The sampling RNG, mid-stream. Restoring it (rather than re-seeding)
+    /// is what keeps post-resume draws identical to an uninterrupted run.
+    pub rng: Pcg32,
+    /// Acceptance lengths observed at the target so far.
+    pub accept_lengths: Vec<u32>,
+    /// Acceptance lengths at each intermediate verifier (chain order).
+    pub stage_accepts: Vec<Vec<u32>>,
+    /// Wall time the task spent holding a worker before suspension.
+    pub wall: Duration,
+    /// Per-model forward passes so far (`F_i`), chain order.
+    pub forward_passes: Vec<u64>,
+    /// Per-model forward time so far (`T_i`), chain order.
+    pub forward_time: Vec<Duration>,
+    /// Speculative work in flight at the suspension point.
+    pub inflight: InflightState,
+}
+
+/// Speculative pipeline state that outlives a step boundary. Dualistic,
+/// CS-Drafting and autoregressive tasks draft and verify within one step,
+/// so between steps they carry nothing; the polybasic pipeline holds
+/// partially verified tokens (and their proposal distributions) across
+/// steps, which must survive suspension — dropping them would desync the
+/// RNG stream from an uninterrupted run and break byte-identity.
+#[derive(Debug)]
+pub enum InflightState {
+    /// No speculative state crosses the step boundary.
+    None,
+    /// The polybasic pipeline's uncommitted suffix: `drafted` are the
+    /// in-flight tokens (`flat[committed..]`), `queues[j]` their proposal
+    /// distributions awaiting verifier `j`, in position order.
+    Polybasic {
+        drafted: Vec<Token>,
+        queues: Vec<VecDeque<Vec<f32>>>,
+    },
+}
+
 /// A resumable decode: one (request, chain) pair stepped one draft→verify
 /// round at a time. Implementations live next to their `generate` wrappers
 /// in [`polybasic`](super::polybasic), [`dualistic`](super::dualistic),
@@ -78,6 +134,12 @@ pub trait DecodeTask {
     /// measurements). Callable at any point; mid-flight it reports the
     /// partial decode.
     fn finish(self: Box<Self>) -> GenerationOutput;
+
+    /// Tear the task down for preemption, capturing a [`ResumeState`] from
+    /// which the decode continues byte-identically. Sessions are dropped
+    /// (the caller releases the KV allocation); call only at a step
+    /// boundary, on an unfinished task.
+    fn suspend(self: Box<Self>) -> ResumeState;
 }
 
 /// Per-task forward-pass accounting over shared model counters.
@@ -106,6 +168,21 @@ impl StepMeter {
             passes: vec![0; n_models],
             time: vec![Duration::ZERO; n_models],
             wall: Duration::ZERO,
+        }
+    }
+
+    /// Rebuild a meter from a suspended task's totals, so the resumed
+    /// task's `F_i` / `T_i` keep accumulating where they left off.
+    pub fn resumed(wall: Duration, passes: Vec<u64>, time: Vec<Duration>) -> Self {
+        debug_assert_eq!(passes.len(), time.len());
+        let n = passes.len();
+        Self {
+            base_calls: vec![0; n],
+            base_time: vec![Duration::ZERO; n],
+            step_started: Instant::now(),
+            passes,
+            time,
+            wall,
         }
     }
 
@@ -168,5 +245,20 @@ mod tests {
         assert_eq!(passes, vec![3]);
         assert!(time[0] <= m.total_time());
         assert!(wall > Duration::ZERO);
+    }
+
+    #[test]
+    fn resumed_meter_continues_from_saved_totals() {
+        let m = MockModel::new("m", 32, 8, 1, 0.0);
+        let models: [&dyn LanguageModel; 1] = [&m];
+        let mut meter =
+            StepMeter::resumed(Duration::from_millis(5), vec![7], vec![Duration::from_millis(3)]);
+        meter.begin(&models);
+        m.forward(&[1, 2]).unwrap();
+        meter.end(&models);
+        let (wall, passes, time) = meter.into_parts();
+        assert_eq!(passes, vec![8], "resumed pass count must extend the saved total");
+        assert!(time[0] >= Duration::from_millis(3));
+        assert!(wall >= Duration::from_millis(5));
     }
 }

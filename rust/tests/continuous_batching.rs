@@ -6,7 +6,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use polyspec::coordinator::api::{Method, Request, Response};
-use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher, QueueEntry};
 use polyspec::coordinator::kv::{KvConfig, KvManager};
 use polyspec::coordinator::metrics::Metrics;
 use polyspec::coordinator::scheduler::{run_batch, BatchEvent};
@@ -73,7 +73,7 @@ fn interactive_request_overtakes_long_batch_request() {
     let mut out: Vec<anyhow::Result<Response>> = Vec::new();
     run_batch(
         &chain,
-        vec![(long, Instant::now())],
+        vec![QueueEntry::fresh(long, Instant::now())],
         Some(&batcher),
         4,
         &kv,
@@ -129,14 +129,15 @@ fn deltas_concatenate_to_response() {
     kv.lock().unwrap().admit(5, 20).unwrap();
     let mut streamed: Vec<i32> = Vec::new();
     let mut out: Vec<anyhow::Result<Response>> = Vec::new();
-    run_batch(&chain, vec![(req, Instant::now())], None, 1, &kv, &metrics, |ev| match ev {
+    let batch = vec![QueueEntry::fresh(req, Instant::now())];
+    run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| match ev {
         BatchEvent::Delta { tokens, .. } => streamed.extend_from_slice(tokens),
         BatchEvent::Done { response, .. } => out.push(response),
     });
     let resp = out[0].as_ref().unwrap();
     assert_eq!(streamed, resp.tokens, "deltas must reassemble the response");
     assert_eq!(resp.tokens.len(), 40);
-    assert!(resp.ttft <= resp.queue_time + resp.service_time);
+    assert!(resp.ttft.expect("first token committed") <= resp.queue_time + resp.service_time);
     // KV tracked the live length and grew past the admitted reservation.
     assert!(kv.lock().unwrap().peak_blocks() > 2, "live-length growth not tracked");
 }
@@ -175,10 +176,13 @@ fn starved_batch_request_admitted_under_interactive_load() {
     assert_eq!(kv.lock().unwrap().active_seqs(), 0);
 }
 
-/// A saturated KV pool fails the growing request instead of silently
-/// overcommitting, and still releases its allocation.
+/// A pool smaller than one lone request's live footprint is genuine
+/// capacity overflow: no preemption can help (there is nothing to evict
+/// and the footprint exceeds the whole pool), so the request fails cleanly
+/// and releases its allocation. Pool pressure with *other* work to evict
+/// preempts instead — see `tests/preemption.rs`.
 #[test]
-fn kv_exhaustion_mid_decode_fails_request_cleanly() {
+fn kv_pool_smaller_than_one_request_fails_cleanly() {
     let chain = mock_chain(512, 24, 13);
     // Tiny pool: 2 blocks of 16 = 32 tokens.
     let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
@@ -191,7 +195,8 @@ fn kv_exhaustion_mid_decode_fails_request_cleanly() {
     let req = mk_req(9, 100, TaskKind::Qa);
     kv.lock().unwrap().admit(9, 20).unwrap();
     let mut out: Vec<anyhow::Result<Response>> = Vec::new();
-    run_batch(&chain, vec![(req, Instant::now())], None, 1, &kv, &metrics, |ev| {
+    let batch = vec![QueueEntry::fresh(req, Instant::now())];
+    run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| {
         if let BatchEvent::Done { response, .. } = ev {
             out.push(response);
         }
@@ -200,4 +205,14 @@ fn kv_exhaustion_mid_decode_fails_request_cleanly() {
     assert!(out[0].is_err(), "overgrown request must fail, not overcommit");
     assert_eq!(kv.lock().unwrap().active_seqs(), 0, "failed request must release KV");
     assert_eq!(metrics.inflight(), 0);
+    assert_eq!(
+        metrics.requests_failed.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "the failure must be counted"
+    );
+    assert_eq!(
+        metrics.preemptions.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "nothing to evict: this is capacity overflow, not pool pressure"
+    );
 }

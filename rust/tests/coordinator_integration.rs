@@ -38,7 +38,10 @@ fn serves_all_methods_end_to_end() {
         rxs.push((method, rx));
     }
     for (method, rx) in rxs {
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(300)).expect("response");
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(300))
+            .expect("response")
+            .expect("decode");
         assert_eq!(resp.tokens.len(), 16, "{method:?}");
         assert!(resp.tokens.iter().all(|&t| (0..256).contains(&t)));
         assert!(resp.service_time.as_millis() > 0);
@@ -78,12 +81,13 @@ fn streamed_deltas_reassemble_the_final_response() {
                 done = Some(resp);
                 break;
             }
+            StreamItem::Failed(e) => panic!("decode failed: {e}"),
         }
     }
     let resp = done.expect("stream must end with Done");
     assert_eq!(streamed, resp.tokens, "deltas must reassemble the response");
     assert_eq!(resp.tokens.len(), 12);
-    assert!(resp.ttft <= resp.queue_time + resp.service_time);
+    assert!(resp.ttft.expect("first token") <= resp.queue_time + resp.service_time);
     assert!(server.quiesce(std::time::Duration::from_secs(10)));
     let metrics = server.shutdown();
     assert_eq!(metrics.ttft_latency.count(), 1);
@@ -126,7 +130,10 @@ fn concurrent_submissions_all_complete() {
         })
         .collect();
     for rx in rxs {
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(600)).expect("response");
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(600))
+            .expect("response")
+            .expect("decode");
         assert_eq!(resp.tokens.len(), 12);
     }
     let metrics = server.shutdown();

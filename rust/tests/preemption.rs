@@ -1,0 +1,262 @@
+//! Preempt-and-resume under KV saturation.
+//!
+//! The live-length admission policy deliberately overcommits the KV pool,
+//! so mid-decode `grow` calls hit a saturated pool under load. These tests
+//! pin the contract that replaced fail-on-grow: pool pressure suspends and
+//! later resumes decode tasks, and the preemption is **invisible in
+//! output** — every response's tokens are byte-identical to the same
+//! request decoded uncontended, nothing fails, and the metrics account for
+//! every suspension.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use polyspec::coordinator::api::{Method, Request, Response};
+use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher, QueueEntry};
+use polyspec::coordinator::kv::{KvConfig, KvManager};
+use polyspec::coordinator::metrics::Metrics;
+use polyspec::coordinator::router::pipeline_headroom;
+use polyspec::coordinator::scheduler::{decode, run_batch, select_victim, BatchEvent, VictimInfo};
+use polyspec::spec::mock::mock_chain;
+use polyspec::spec::types::{LanguageModel, VerifyRule};
+use polyspec::workload::tasks::TaskKind;
+
+/// Every coordinator Method crossed with every VerifyRule, with varied
+/// budgets, seeds, and scheduling classes.
+fn mixed_workload() -> Vec<Request> {
+    let methods = [
+        Method::Polybasic { draft_k: 4, mu: 4 },
+        Method::Dualistic { draft_k: 4 },
+        Method::Autoregressive,
+    ];
+    let rules = [VerifyRule::Greedy, VerifyRule::Speculative, VerifyRule::Typical { eps: 0.25 }];
+    let tasks = [TaskKind::Qa, TaskKind::Summarization, TaskKind::Math];
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for &method in &methods {
+        for &rule in &rules {
+            id += 1;
+            let mut r = Request::new(id, vec![1, 2, 3], 24 + (id as usize % 3) * 8);
+            r.method = method;
+            r.rule = rule;
+            r.task = Some(tasks[id as usize % 3]);
+            r.sampling.seed = 1000 + id;
+            r.sampling.temperature = if rule == VerifyRule::Greedy { 0.0 } else { 1.0 };
+            reqs.push(r);
+        }
+    }
+    reqs
+}
+
+/// Admit a request the way the router does: prompt + speculative headroom,
+/// through the fresh-arrival path that honors resume debt.
+fn router_admit(kv: &Arc<Mutex<KvManager>>, chain_len: usize, req: &Request) {
+    let need = req.prompt.len() + pipeline_headroom(&req.method, chain_len);
+    kv.lock().unwrap().admit_fresh(req.id, need).unwrap();
+}
+
+/// Per-request concatenation of streamed deltas.
+type Streams = std::collections::BTreeMap<u64, Vec<i32>>;
+
+fn drive(
+    chain: &[Arc<dyn LanguageModel>],
+    batch: Vec<QueueEntry>,
+    admit: Option<&DynamicBatcher>,
+    max_live: usize,
+    kv: &Arc<Mutex<KvManager>>,
+    metrics: &Arc<Metrics>,
+) -> (Vec<anyhow::Result<Response>>, Streams) {
+    let mut out = Vec::new();
+    let mut streams: Streams = Default::default();
+    run_batch(chain, batch, admit, max_live, kv, metrics, |ev| match ev {
+        BatchEvent::Delta { id, tokens } => {
+            streams.entry(id).or_default().extend_from_slice(tokens)
+        }
+        BatchEvent::Done { response, .. } => out.push(response),
+    });
+    (out, streams)
+}
+
+/// THE acceptance property: a workload that exhausts the KV pool
+/// mid-decode (previously `Err("KV pool exhausted growing seq …")`) now
+/// completes **all** requests with byte-identical tokens to an uncontended
+/// run, with at least one preemption and zero request failures.
+#[test]
+fn prop_saturated_pool_preempts_and_completes_byte_identically() {
+    let chain = mock_chain(512, 24, 77);
+    let reqs = mixed_workload();
+
+    // Uncontended reference: each request decoded alone through the same
+    // Method dispatch the scheduler uses.
+    let expected: Vec<Vec<i32>> =
+        reqs.iter().map(|r| decode(&chain, r).unwrap().tokens).collect();
+
+    // Deliberately tiny pool: all nine live-length admissions fit (the
+    // router's overcommit), but their growth demand is several times the
+    // pool — growth MUST saturate, and no single request exceeds the pool,
+    // so every saturation is resolvable by eviction.
+    let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
+        block_size: 4,
+        total_blocks: 26,
+        bytes_per_token: 4,
+    })));
+    let metrics = Arc::new(Metrics::default());
+    let now = Instant::now();
+    let batch: Vec<QueueEntry> = reqs
+        .iter()
+        .map(|r| {
+            router_admit(&kv, chain.len(), r);
+            QueueEntry::fresh(r.clone(), now)
+        })
+        .collect();
+
+    let (out, streams) = drive(&chain, batch, None, reqs.len(), &kv, &metrics);
+
+    assert_eq!(out.len(), reqs.len());
+    let mut by_id: std::collections::BTreeMap<u64, Response> = Default::default();
+    for r in out {
+        let resp = r.expect("pool pressure must never fail a request");
+        by_id.insert(resp.id, resp);
+    }
+    for (req, want) in reqs.iter().zip(&expected) {
+        let resp = &by_id[&req.id];
+        assert_eq!(
+            &resp.tokens, want,
+            "request {} ({:?} {:?}): preemption must be invisible in output",
+            req.id, req.method, req.rule
+        );
+        assert_eq!(
+            &streams[&req.id], want,
+            "request {}: streamed deltas must reassemble exactly once",
+            req.id
+        );
+    }
+
+    let preemptions = metrics.preemptions.load(std::sync::atomic::Ordering::Relaxed);
+    let resumes = metrics.resumes.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(preemptions >= 1, "the pool must have saturated at least once");
+    assert_eq!(resumes, preemptions, "every preempted request must resume exactly once");
+    let per_request: u64 = by_id.values().map(|r| r.preemptions as u64).sum();
+    assert_eq!(
+        per_request, preemptions,
+        "per-response preemption counts must account for every eviction"
+    );
+    assert_eq!(kv.lock().unwrap().resume_debt(), 0, "all resume debt must settle");
+    assert!(
+        metrics.wasted_recompute_tokens.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "resumes re-score their prefix; the gauge must show it"
+    );
+    assert_eq!(metrics.requests_failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(
+        metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+        reqs.len() as u64
+    );
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(metrics.inflight(), 0);
+}
+
+/// Same property through the shared admission queue: victims re-enter via
+/// `DynamicBatcher::push_front_resumed` and are re-admitted between steps,
+/// with queued (not-yet-live) requests' reservations adding pressure.
+#[test]
+fn preemption_via_batcher_resumed_lane_completes_all() {
+    let chain = mock_chain(512, 24, 91);
+    let reqs: Vec<Request> = mixed_workload().into_iter().take(6).collect();
+    let expected: Vec<Vec<i32>> =
+        reqs.iter().map(|r| decode(&chain, r).unwrap().tokens).collect();
+
+    let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
+        block_size: 4,
+        total_blocks: 24,
+        bytes_per_token: 4,
+    })));
+    let metrics = Arc::new(Metrics::default());
+    let batcher = DynamicBatcher::new(BatchPolicy {
+        max_batch: 3,
+        max_wait: std::time::Duration::ZERO,
+        ..Default::default()
+    });
+    for r in &reqs {
+        router_admit(&kv, chain.len(), r);
+        batcher.push(r.clone());
+    }
+
+    // One worker, three live slots: live tasks grow while queued requests
+    // hold reservations, so saturation resolves by preempting live work.
+    let (out, streams) = drive(&chain, Vec::new(), Some(&batcher), 3, &kv, &metrics);
+
+    assert_eq!(out.len(), reqs.len());
+    let mut by_id: std::collections::BTreeMap<u64, Response> = Default::default();
+    for r in out {
+        let resp = r.expect("pool pressure must never fail a request");
+        by_id.insert(resp.id, resp);
+    }
+    for (req, want) in reqs.iter().zip(&expected) {
+        assert_eq!(&by_id[&req.id].tokens, want, "request {} diverged", req.id);
+        assert_eq!(&streams[&req.id], want, "request {} stream diverged", req.id);
+    }
+    assert!(
+        metrics.preemptions.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "the pool must have saturated at least once"
+    );
+    assert_eq!(metrics.requests_failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert!(batcher.is_empty(), "resumed lane must drain");
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(kv.lock().unwrap().resume_debt(), 0, "all resume debt must settle");
+}
+
+/// The victim policy, end to end at the data level: batch-class before
+/// interactive, then the largest KV holding, never the empty set.
+#[test]
+fn victim_selection_class_then_cost() {
+    // Mixed classes: the batch-class task loses even when interactive
+    // tasks hold more KV.
+    let picked = select_victim([
+        VictimInfo { index: 0, interactive: true, kv_blocks: 40 },
+        VictimInfo { index: 1, interactive: false, kv_blocks: 1 },
+        VictimInfo { index: 2, interactive: true, kv_blocks: 90 },
+    ]);
+    assert_eq!(picked, Some(1), "batch class must be evicted before interactive");
+    // Homogeneous class: largest holding first.
+    let picked = select_victim([
+        VictimInfo { index: 0, interactive: false, kv_blocks: 4 },
+        VictimInfo { index: 1, interactive: false, kv_blocks: 12 },
+        VictimInfo { index: 2, interactive: false, kv_blocks: 8 },
+    ]);
+    assert_eq!(picked, Some(1), "largest holding frees the most pool");
+    assert_eq!(select_victim(Vec::<VictimInfo>::new()), None);
+}
+
+/// Zero-commit requests under the same harness: no TTFT is recorded and
+/// the response reports `None` rather than a fabricated latency.
+#[test]
+fn zero_token_request_has_no_ttft_even_under_pressure() {
+    let chain = mock_chain(512, 24, 11);
+    let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
+        block_size: 4,
+        total_blocks: 32,
+        bytes_per_token: 4,
+    })));
+    let metrics = Arc::new(Metrics::default());
+    let mut zero = Request::new(1, vec![1, 2, 3], 0);
+    zero.method = Method::Autoregressive;
+    zero.task = Some(TaskKind::Qa);
+    let mut busy = Request::new(2, vec![1, 2, 3], 32);
+    busy.method = Method::Polybasic { draft_k: 4, mu: 4 };
+    busy.task = Some(TaskKind::Qa);
+    busy.sampling.seed = 5;
+    router_admit(&kv, chain.len(), &zero);
+    router_admit(&kv, chain.len(), &busy);
+    let now = Instant::now();
+    let batch = vec![QueueEntry::fresh(zero, now), QueueEntry::fresh(busy, now)];
+    let (out, _) = drive(&chain, batch, None, 2, &kv, &metrics);
+    let mut ttfts: std::collections::BTreeMap<u64, Option<std::time::Duration>> =
+        Default::default();
+    for r in out {
+        let resp = r.unwrap();
+        ttfts.insert(resp.id, resp.ttft);
+    }
+    assert_eq!(ttfts[&1], None, "zero-commit request must report no TTFT");
+    assert!(ttfts[&2].is_some(), "the committing request still gets one");
+    assert_eq!(metrics.ttft_latency.count(), 1, "only real first tokens enter the histogram");
+}

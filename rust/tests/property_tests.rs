@@ -99,8 +99,8 @@ fn prop_batcher_no_loss_no_dup() {
         b.close();
         let mut popped = std::collections::BTreeSet::new();
         while let Some(batch) = b.pop_batch() {
-            for (req, _) in batch {
-                assert!(popped.insert(req.id), "seed {seed}: duplicate {}", req.id);
+            for entry in batch {
+                assert!(popped.insert(entry.req.id), "seed {seed}: duplicate {}", entry.req.id);
             }
         }
         assert_eq!(pushed, popped, "seed {seed}: lost requests");
