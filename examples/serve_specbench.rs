@@ -60,8 +60,9 @@ fn main() -> anyhow::Result<()> {
     let mut failed = 0usize;
     let mut completed = 0usize;
     for (_, rx) in &receivers {
-        // The final channel carries Result<Response, String>: a decode
-        // failure arrives as a value with its reason, not a channel close.
+        // The final channel carries Result<Response, DecodeError>: a decode
+        // failure arrives as a typed value (timeout / engine lost /
+        // saturated / internal), not a channel close.
         let resp = match rx.recv_timeout(Duration::from_secs(600))? {
             Ok(resp) => resp,
             Err(e) => {

@@ -3,8 +3,63 @@
 use std::time::Duration;
 
 use crate::spec::task::ResumeState;
-use crate::spec::types::{SamplingParams, Token, VerifyRule};
+use crate::spec::types::{FaultKind, ModelFault, SamplingParams, Token, VerifyRule};
 use crate::workload::tasks::TaskKind;
+
+/// Why a decode failed, as delivered to clients. Typed (rather than a
+/// stringified `anyhow` chain) so callers can branch on the failure class:
+/// retry elsewhere on [`EngineLost`](DecodeError::EngineLost), re-submit
+/// with a longer budget on [`Timeout`](DecodeError::Timeout), shrink the
+/// request on [`Saturated`](DecodeError::Saturated).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The request ran past its deadline (`Request::deadline`) and was
+    /// cancelled at a step boundary, or an engine call hung past the host's
+    /// call deadline. Sessions and KV were released; partial output is
+    /// discarded.
+    Timeout,
+    /// The engine thread serving the chain's target died or its channel
+    /// closed; the request cannot complete on this worker.
+    EngineLost,
+    /// The KV pool is smaller than this one request's live footprint — no
+    /// eviction can ever admit it.
+    Saturated,
+    /// Any other decode failure (model errors after retries, invalid
+    /// configuration discovered at task-open time, ...).
+    Internal(String),
+}
+
+impl DecodeError {
+    /// Classify a decode-path error chain into its client-facing class.
+    /// Engine faults keep their [`FaultKind`] through `anyhow` context
+    /// chains; anything unrecognised is [`Internal`](DecodeError::Internal)
+    /// with the full chain as text.
+    pub fn classify(err: &anyhow::Error) -> Self {
+        match err.downcast_ref::<ModelFault>() {
+            Some(f) => match f.kind {
+                FaultKind::Timeout => DecodeError::Timeout,
+                FaultKind::Lost => DecodeError::EngineLost,
+                FaultKind::Transient => DecodeError::Internal(format!("{err:#}")),
+            },
+            None => DecodeError::Internal(format!("{err:#}")),
+        }
+    }
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Timeout => write!(f, "decode deadline exceeded"),
+            DecodeError::EngineLost => write!(f, "engine lost"),
+            DecodeError::Saturated => {
+                write!(f, "KV pool too small for the request's live footprint")
+            }
+            DecodeError::Internal(msg) => write!(f, "decode failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Which decoding engine serves the request.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -44,6 +99,11 @@ pub struct Request {
     pub method: Method,
     /// Task tag (metrics aggregation + scheduling class).
     pub task: Option<TaskKind>,
+    /// End-to-end budget (queue + service, across preemptions). A request
+    /// still incomplete past this is cancelled at the next step boundary
+    /// with [`DecodeError::Timeout`], its KV and sessions released. `None`
+    /// (the default) never cancels.
+    pub deadline: Option<Duration>,
 }
 
 impl Request {
@@ -56,6 +116,7 @@ impl Request {
             rule: VerifyRule::Speculative,
             method: Method::default(),
             task: None,
+            deadline: None,
         }
     }
 }
@@ -84,6 +145,12 @@ pub struct Response {
     pub mean_accept: f64,
     /// Per-model forward passes, chain order.
     pub forward_passes: Vec<u64>,
+    /// Chain members dropped mid-decode by graceful degradation (a failing
+    /// or unhealthy drafter removed at a step boundary). Zero for a fully
+    /// healthy chain. Degradation never changes the committed-token
+    /// distribution — under deterministic verify rules the output is
+    /// byte-identical to a healthy run.
+    pub degraded: u32,
     pub task: Option<TaskKind>,
     pub method: Method,
 }
@@ -106,7 +173,7 @@ pub enum StreamItem {
     /// equal the concatenation of all deltas).
     Done(Response),
     /// The decode failed after zero or more deltas; carries the error.
-    Failed(String),
+    Failed(DecodeError),
 }
 
 /// A preempted request's scheduler-level baggage, carried alongside the

@@ -386,6 +386,8 @@ mod tests {
                 forward_passes: vec![0],
                 forward_time: vec![Duration::ZERO],
                 inflight: crate::spec::task::InflightState::None,
+                live_models: vec![0],
+                degraded: 0,
             },
             streamed: 0,
             ttft: None,

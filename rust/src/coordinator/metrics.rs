@@ -3,10 +3,11 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::runtime::json::Json;
+use crate::spec::types::HealthTracker;
 
 /// Log2-bucketed duration histogram from 1us to ~1hour.
 #[derive(Debug)]
@@ -101,6 +102,11 @@ pub struct Metrics {
     /// had to be rebuilt — the recompute cost preemption trades for not
     /// failing requests.
     pub wasted_recompute_tokens: AtomicU64,
+    /// Chain members dropped mid-decode by graceful degradation (each
+    /// drafter drop counts once; the request itself still completes).
+    pub chains_degraded: AtomicU64,
+    /// Requests cancelled because they ran past their deadline.
+    pub deadline_cancellations: AtomicU64,
     /// Requests currently holding a live decode task on some worker.
     inflight: AtomicU64,
     inflight_peak: AtomicU64,
@@ -109,6 +115,10 @@ pub struct Metrics {
     accept_count: AtomicU64,
     /// Per-task completion counters.
     per_task: Mutex<BTreeMap<String, u64>>,
+    /// Per-model health trackers (error/retry/timeout counters + breaker
+    /// state), registered by workers at engine-load time so snapshots show
+    /// engine-boundary health alongside serving throughput.
+    model_health: Mutex<BTreeMap<String, Arc<HealthTracker>>>,
 }
 
 impl Metrics {
@@ -158,6 +168,25 @@ impl Metrics {
     /// A request failed inside a worker (task open or decode error).
     pub fn record_failure(&self) {
         self.requests_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` chain members were dropped by graceful degradation (the request
+    /// keeps running on the surviving chain).
+    pub fn record_degradation(&self, n: u32) {
+        self.chains_degraded.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// A request was cancelled for running past its deadline.
+    pub fn record_deadline_cancel(&self) {
+        self.deadline_cancellations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Expose a model's [`HealthTracker`] in metrics snapshots. Workers
+    /// call this once per chain member at engine-load time; re-registering
+    /// the same name replaces the handle (workers share per-model trackers
+    /// only if they share the model instance).
+    pub fn register_model_health(&self, name: &str, tracker: Arc<HealthTracker>) {
+        self.model_health.lock().unwrap().insert(name.to_string(), tracker);
     }
 
     /// A decode task went live on a worker. Returns the new concurrency.
@@ -211,6 +240,10 @@ impl Metrics {
         put("resumes", Json::Num(self.resumes.load(Ordering::Relaxed) as f64));
         put("wasted_recompute_tokens",
             Json::Num(self.wasted_recompute_tokens.load(Ordering::Relaxed) as f64));
+        put("chains_degraded",
+            Json::Num(self.chains_degraded.load(Ordering::Relaxed) as f64));
+        put("deadline_cancellations",
+            Json::Num(self.deadline_cancellations.load(Ordering::Relaxed) as f64));
         put("mean_accept", Json::Num(self.mean_accept()));
         put("inflight", Json::Num(self.inflight() as f64));
         put("inflight_peak", Json::Num(self.inflight_peak() as f64));
@@ -232,6 +265,30 @@ impl Metrics {
         obj.insert(
             "per_task".into(),
             Json::Obj(per_task.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect()),
+        );
+        let model_health = self.model_health.lock().unwrap();
+        obj.insert(
+            "model_health".into(),
+            Json::Obj(
+                model_health
+                    .iter()
+                    .map(|(name, h)| {
+                        let mut m = BTreeMap::new();
+                        m.insert("errors".into(), Json::Num(h.errors() as f64));
+                        m.insert("retries".into(), Json::Num(h.retries() as f64));
+                        m.insert("timeouts".into(), Json::Num(h.timeouts() as f64));
+                        m.insert(
+                            "consecutive_failures".into(),
+                            Json::Num(h.consecutive_failures() as f64),
+                        );
+                        m.insert(
+                            "breaker".into(),
+                            Json::Str(h.breaker_state().as_str().to_string()),
+                        );
+                        (name.clone(), Json::Obj(m))
+                    })
+                    .collect(),
+            ),
         );
         Json::Obj(obj)
     }
@@ -282,6 +339,12 @@ mod tests {
         m.record_preemption();
         m.record_resume(37);
         m.record_failure();
+        m.record_degradation(2);
+        m.record_deadline_cancel();
+        let health = Arc::new(HealthTracker::default());
+        health.record_failure(crate::spec::types::FaultKind::Transient);
+        health.record_retry();
+        m.register_model_health("target", health);
         let snap = m.snapshot().to_string();
         let parsed = Json::parse(&snap).unwrap();
         assert_eq!(parsed.req("requests_completed").unwrap().as_usize(), Some(1));
@@ -292,5 +355,13 @@ mod tests {
         assert_eq!(parsed.req("resumes").unwrap().as_usize(), Some(1));
         assert_eq!(parsed.req("wasted_recompute_tokens").unwrap().as_usize(), Some(37));
         assert_eq!(parsed.req("requests_failed").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.req("chains_degraded").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.req("deadline_cancellations").unwrap().as_usize(), Some(1));
+        let target = parsed.req("model_health").unwrap().get("target").unwrap();
+        assert_eq!(target.get("errors").unwrap().as_usize(), Some(1));
+        assert_eq!(target.get("retries").unwrap().as_usize(), Some(1));
+        assert_eq!(target.get("timeouts").unwrap().as_usize(), Some(0));
+        assert_eq!(target.get("consecutive_failures").unwrap().as_usize(), Some(1));
+        assert!(matches!(target.get("breaker"), Some(Json::Str(s)) if s == "closed"));
     }
 }

@@ -15,6 +15,37 @@
 //! the scheduler preempts a victim task (suspend + release + re-queue
 //! ahead of fresh same-class arrivals) and resumes it byte-identically
 //! once space frees — pool pressure delays requests, it never fails them.
+//!
+//! # Failure semantics
+//!
+//! Every fault has exactly one of three outcomes, and clients can tell
+//! them apart:
+//!
+//! * **Degrade** — a drafter (any chain member except the target) that
+//!   fails a scoring call, or whose engine health breaker is open at a
+//!   step boundary, is dropped from the chain mid-decode. The request
+//!   keeps running on the surviving chain — polybasic shrinks toward
+//!   dualistic and ultimately plain autoregressive decode on the target.
+//!   Because only the target's verification decides what commits,
+//!   degradation **preserves the output distribution**, and under
+//!   deterministic verify rules (greedy / top-1) the committed tokens are
+//!   **byte-identical** to a healthy run. The response reports the drop
+//!   count ([`Response::degraded`]); `chains_degraded` counts drops
+//!   server-wide.
+//! * **Fail** — a target failure (after the engine host's bounded
+//!   retries), a KV pool smaller than one request's footprint, or an
+//!   exceeded [`Request::deadline`](api::Request::deadline) fails the
+//!   request with a typed [`DecodeError`] (`EngineLost` / `Saturated` /
+//!   `Timeout` / `Internal`). On every failure path the task's scoring
+//!   sessions are dropped and its KV allocation released — debug
+//!   assertions in `scheduler` enforce the exactly-once release.
+//! * **Delay** — KV-pool pressure preempts and later resumes a victim
+//!   byte-identically; it is never an error.
+//!
+//! Engine-boundary hardening (deadlines on every engine round-trip,
+//! bounded retries, per-model circuit breakers) lives in
+//! [`crate::runtime::host`]; the deterministic fault-injection harness
+//! used to test these paths is [`crate::spec::chaos`].
 
 pub mod api;
 pub mod batcher;
@@ -24,6 +55,6 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use api::{Method, Request, Response, ResumeCarry, StreamItem};
+pub use api::{DecodeError, Method, Request, Response, ResumeCarry, StreamItem};
 pub use scheduler::BatchEvent;
 pub use server::{Server, ServerConfig};

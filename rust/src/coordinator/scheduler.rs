@@ -29,6 +29,17 @@
 //! client sees a pause, never a spurious failure. A grow error surfaces
 //! only when the pool is smaller than one lone request's footprint.
 //!
+//! **Deadlines and degradation.** A request with a
+//! [`deadline`](Request::deadline) is checked at every step boundary (and
+//! once more at admission): overdue requests are cancelled with
+//! [`DecodeError::Timeout`], their sessions dropped and KV released — the
+//! exact resources a normal completion returns, so cancellation can never
+//! leak pool space. Decode tasks degrade gracefully when drafters fail
+//! mid-decode (see `spec::task::DecodeTask::degraded`); the scheduler
+//! counts each dropped chain member into the degradation metric exactly
+//! once and reports the total on the [`Response`]. Failures reach clients
+//! as typed [`DecodeError`]s, never stringly-typed reasons.
+//!
 //! The scheduler owns the decode dispatch: it picks the task type for the
 //! request's [`Method`], manages KV admission lifecycles, and reports
 //! metrics. Initial batches are ordered shortest-job-first (by output
@@ -49,7 +60,7 @@ use crate::spec::task::{DecodeTask, InflightState, ResumeState};
 use crate::spec::types::{GenerationOutput, LanguageModel, Token};
 use crate::spec::PolyConfig;
 
-use super::api::{Method, Request, Response, ResumeCarry};
+use super::api::{DecodeError, Method, Request, Response, ResumeCarry};
 use super::batcher::{classify, Batch, DynamicBatcher, Priority, QueueEntry};
 use super::kv::KvManager;
 use super::metrics::Metrics;
@@ -153,8 +164,9 @@ pub enum BatchEvent<'a> {
     /// task-open time. Carries the response by value — the scheduler
     /// retains nothing per completed request, so a server worker can stay
     /// inside one `run_batch` call indefinitely under sustained load
-    /// without accumulating memory.
-    Done { id: u64, response: Result<Response> },
+    /// without accumulating memory. Failures are typed: clients branch on
+    /// the [`DecodeError`] class instead of parsing an error string.
+    Done { id: u64, response: Result<Response, DecodeError> },
 }
 
 /// A request with a live decode task on this worker.
@@ -172,7 +184,19 @@ struct Live<'m> {
     streamed: usize,
     /// Times this request has been preempted so far.
     preemptions: u32,
+    /// Chain-member drops already counted into the degradation metric, so
+    /// each drop increments the counter exactly once across step sweeps
+    /// and preemption cycles.
+    degraded_seen: u32,
     task: Box<dyn DecodeTask + 'm>,
+}
+
+impl Live<'_> {
+    /// End-to-end time this request has consumed: queue + service, summed
+    /// across preemption segments — the quantity `Request::deadline` bounds.
+    fn elapsed_total(&self) -> Duration {
+        self.queue_time + self.prior_service + self.opened.elapsed()
+    }
 }
 
 /// One preemption candidate as seen by the victim policy.
@@ -203,11 +227,13 @@ enum Opened<'m> {
     Live(Live<'m>),
     /// A resumed request the pool cannot re-admit yet; retried next pass.
     Deferred(QueueEntry),
-    Failed { id: u64, err: anyhow::Error },
+    Failed { id: u64, err: DecodeError },
 }
 
 /// Open (or re-open) one queue entry as a live task, reserving KV for
 /// resumed requests (fresh ones already hold their router reservation).
+/// A request already past its deadline is refused here — before any
+/// session opens — with its KV reservation (or resume debt) returned.
 fn open_entry<'m>(
     chain: &'m [Arc<dyn LanguageModel>],
     entry: QueueEntry,
@@ -217,10 +243,46 @@ fn open_entry<'m>(
     let QueueEntry { req, enqueued, resume } = entry;
     let opened = Instant::now();
     let headroom = pipeline_headroom(&req.method, chain.len());
+    if let Some(deadline) = req.deadline {
+        let spent = opened.duration_since(enqueued)
+            + resume.as_ref().map_or(Duration::ZERO, |c| c.queue_time + c.service_time);
+        if spent > deadline {
+            let mut kvm = kv.lock().unwrap();
+            match &resume {
+                None => {
+                    // The router admitted it, so a KV reservation exists.
+                    let released = kvm.release(req.id);
+                    debug_assert!(
+                        released.is_ok(),
+                        "KV release failed for deadline-expired request {}: every \
+                         admitted request must hold exactly one allocation ({released:?})",
+                        req.id
+                    );
+                }
+                Some(c) => {
+                    // A preempted request holds no allocation, only the
+                    // debt earmarked at suspension; hand that back.
+                    kvm.settle_resume_debt(
+                        req.prompt.len() + c.state.committed.len() + headroom,
+                    );
+                }
+            }
+            drop(kvm);
+            metrics.record_failure();
+            metrics.record_deadline_cancel();
+            return Opened::Failed { id: req.id, err: DecodeError::Timeout };
+        }
+    }
     let Some(carry) = resume else {
         return match open_task(chain, &req) {
             Ok(task) => {
                 metrics.task_started();
+                // A chain member can already be degraded away at open time
+                // (health breaker open): count it now, once.
+                let degraded_seen = task.degraded();
+                if degraded_seen > 0 {
+                    metrics.record_degradation(degraded_seen);
+                }
                 Opened::Live(Live {
                     headroom,
                     queue_time: opened.duration_since(enqueued),
@@ -230,6 +292,7 @@ fn open_entry<'m>(
                     ttft: None,
                     streamed: 0,
                     preemptions: 0,
+                    degraded_seen,
                     task,
                 })
             }
@@ -244,7 +307,7 @@ fn open_entry<'m>(
                     req.id
                 );
                 metrics.record_failure();
-                Opened::Failed { id: req.id, err }
+                Opened::Failed { id: req.id, err: DecodeError::classify(&err) }
             }
         };
     };
@@ -259,14 +322,7 @@ fn open_entry<'m>(
         if !kvm.fits(need) {
             kvm.settle_resume_debt(need);
             metrics.record_failure();
-            return Opened::Failed {
-                id: req.id,
-                err: anyhow::anyhow!(
-                    "KV pool cannot host resumed request {}: needs {need} tokens \
-                     with the whole pool free",
-                    req.id
-                ),
-            };
+            return Opened::Failed { id: req.id, err: DecodeError::Saturated };
         }
         if kvm.admit(req.id, need).is_err() {
             // Saturated right now, but possible once space frees: someone
@@ -281,10 +337,17 @@ fn open_entry<'m>(
             InflightState::None => 0,
         };
     let ResumeCarry { state, streamed, ttft, queue_time, service_time, preemptions } = carry;
+    let prior_degraded = state.degraded;
     match resume_task(chain, &req, state) {
         Ok(task) => {
             metrics.task_started();
             metrics.record_resume(wasted);
+            // Drops before suspension were already counted; only members
+            // that failed to re-open (new drops) increment the metric.
+            let degraded_seen = task.degraded();
+            if degraded_seen > prior_degraded {
+                metrics.record_degradation(degraded_seen - prior_degraded);
+            }
             Opened::Live(Live {
                 headroom,
                 queue_time: queue_time + opened.duration_since(enqueued),
@@ -294,6 +357,7 @@ fn open_entry<'m>(
                 ttft,
                 streamed,
                 preemptions,
+                degraded_seen,
                 task,
             })
         }
@@ -306,7 +370,7 @@ fn open_entry<'m>(
                 req.id
             );
             metrics.record_failure();
-            Opened::Failed { id: req.id, err }
+            Opened::Failed { id: req.id, err: DecodeError::classify(&err) }
         }
     }
 }
@@ -363,8 +427,8 @@ enum GrowOutcome {
     /// victim existed but other sequences hold pool space).
     SelfPreempted,
     /// The pool is smaller than this one request's live footprint; no
-    /// eviction can help.
-    Failed(anyhow::Error),
+    /// eviction can help (surfaced as [`DecodeError::Saturated`]).
+    Failed,
 }
 
 /// Grow `live[*i]`'s allocation to `target` tokens, evicting victims under
@@ -385,9 +449,11 @@ fn grow_with_preemption<'m>(
             let mut kvm = kv.lock().unwrap();
             (kvm.grow(id, target), kvm.fits(target), kvm.active_seqs() > 1)
         };
-        let Err(e) = grown else { return GrowOutcome::Grown };
+        if grown.is_ok() {
+            return GrowOutcome::Grown;
+        }
         if !fits {
-            return GrowOutcome::Failed(e);
+            return GrowOutcome::Failed;
         }
         let victim = {
             let kvm = kv.lock().unwrap();
@@ -416,7 +482,7 @@ fn grow_with_preemption<'m>(
                 preempt(*i, live, kv, metrics, admit, waiting);
                 return GrowOutcome::SelfPreempted;
             }
-            None => return GrowOutcome::Failed(e),
+            None => return GrowOutcome::Failed,
         }
     }
 }
@@ -498,12 +564,40 @@ pub fn run_batch(
         // ---- one sweep: one step per live task, round-robin --------------
         let mut i = 0;
         while i < live.len() {
-            let mut step_err: Option<anyhow::Error> = None;
+            // Deadline enforcement at the step boundary: an overdue request
+            // is cancelled before its next step. Dropping the task closes
+            // every scoring session; the KV allocation is released below —
+            // the same resources a normal completion returns, so a timeout
+            // can never leak pool space.
+            if live[i].req.deadline.is_some_and(|d| live[i].elapsed_total() > d) {
+                let Live { req, task, .. } = live.remove(i);
+                drop(task);
+                metrics.task_ended();
+                let released = kv.lock().unwrap().release(req.id);
+                debug_assert!(
+                    released.is_ok(),
+                    "KV release failed for deadline-cancelled request {}: every \
+                     live task must hold exactly one allocation ({released:?})",
+                    req.id
+                );
+                metrics.record_failure();
+                metrics.record_deadline_cancel();
+                on_event(BatchEvent::Done { id: req.id, response: Err(DecodeError::Timeout) });
+                continue;
+            }
+            let mut step_err: Option<DecodeError> = None;
             let mut grow_target: Option<usize> = None;
             {
                 let l = &mut live[i];
                 match l.task.step() {
                     Ok(_) => {
+                        // Chain members dropped by this step (graceful
+                        // degradation) increment the metric exactly once.
+                        let degraded = l.task.degraded();
+                        if degraded > l.degraded_seen {
+                            metrics.record_degradation(degraded - l.degraded_seen);
+                            l.degraded_seen = degraded;
+                        }
                         let committed_len = l.task.committed().len();
                         if committed_len > l.streamed {
                             if l.ttft.is_none() {
@@ -540,7 +634,7 @@ pub fn run_batch(
                             }
                         }
                     }
-                    Err(e) => step_err = Some(e),
+                    Err(e) => step_err = Some(DecodeError::classify(&e)),
                 }
             }
             if let Some(target) = grow_target {
@@ -551,7 +645,8 @@ pub fn run_batch(
                     // live[i] was suspended + re-queued; the next task
                     // shifted into slot i.
                     GrowOutcome::SelfPreempted => continue,
-                    GrowOutcome::Failed(e) => step_err = Some(e),
+                    // The pool can never host this request's footprint.
+                    GrowOutcome::Failed => step_err = Some(DecodeError::Saturated),
                 }
             }
             let finished = step_err.is_none() && live[i].task.finished();
@@ -572,7 +667,7 @@ pub fn run_batch(
                 req.id
             );
             let id = req.id;
-            let resp: Result<Response> = match step_err {
+            let resp: Result<Response, DecodeError> = match step_err {
                 Some(e) => {
                     metrics.record_failure();
                     Err(e)
@@ -598,6 +693,7 @@ pub fn run_batch(
                         preemptions,
                         mean_accept,
                         forward_passes: gen.forward_passes,
+                        degraded: gen.degraded,
                         task: req.task,
                         method: req.method,
                     })
@@ -684,7 +780,7 @@ mod tests {
             QueueEntry::fresh(req, now)
         })
         .collect();
-        let mut out: Vec<Result<Response>> = Vec::new();
+        let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
         run_batch(&chain, batch, None, 4, &kv, &metrics, |ev| {
             if let BatchEvent::Done { response, .. } = ev {
                 out.push(response);
@@ -712,7 +808,7 @@ mod tests {
         kv.lock().unwrap().admit(1, 60).unwrap();
         let gen = decode(&chain, &req).unwrap();
         let batch = vec![QueueEntry::fresh(req, Instant::now())];
-        let mut out: Vec<Result<Response>> = Vec::new();
+        let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
         run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| {
             if let BatchEvent::Done { response, .. } = ev {
                 out.push(response);
@@ -737,7 +833,7 @@ mod tests {
         let req = mk_req(1, 600, Method::Polybasic { draft_k: 3, mu: 4 });
         kv.lock().unwrap().admit(1, 30).unwrap();
         let batch = vec![QueueEntry::fresh(req, Instant::now())];
-        let mut out: Vec<Result<Response>> = Vec::new();
+        let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
         run_batch(&chain, batch, None, 2, &kv, &metrics, |ev| {
             if let BatchEvent::Done { response, .. } = ev {
                 out.push(response);
@@ -760,7 +856,7 @@ mod tests {
         let req = mk_req(1, 0, Method::Autoregressive);
         kv.lock().unwrap().admit(1, 10).unwrap();
         let batch = vec![QueueEntry::fresh(req, Instant::now())];
-        let mut out: Vec<Result<Response>> = Vec::new();
+        let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
         run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| {
             if let BatchEvent::Done { response, .. } = ev {
                 out.push(response);

@@ -7,12 +7,14 @@
 //! decode steps, committed tokens stream out per step, and a short
 //! interactive request finishes while a long batch request is still
 //! mid-decode. Clients receive either a single final
-//! `Result<Response, String>` ([`Server::submit`]) or a live [`StreamItem`]
-//! feed of per-step token deltas ([`Server::submit_stream`]); decode
-//! failures arrive as values, never as a bare channel close. KV-pool
-//! saturation preempts and resumes decodes transparently (see
-//! `coordinator::scheduler`) — clients never observe a pool-pressure
-//! failure. No Python anywhere near this path.
+//! `Result<Response, DecodeError>` ([`Server::submit`]) or a live
+//! [`StreamItem`] feed of per-step token deltas ([`Server::submit_stream`]);
+//! decode failures arrive as typed [`DecodeError`] values, never as a bare
+//! channel close. KV-pool saturation preempts and resumes decodes
+//! transparently (see `coordinator::scheduler`) — clients never observe a
+//! pool-pressure failure. Each worker registers its chain's per-model
+//! health trackers with [`Metrics`], so snapshots expose engine-boundary
+//! errors, retries, and breaker states. No Python anywhere near this path.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -22,9 +24,10 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::runtime::EngineHost;
+use crate::spec::types::LanguageModel;
 use crate::workload::tasks::TaskKind;
 
-use super::api::{Method, Request, Response, StreamItem};
+use super::api::{DecodeError, Method, Request, Response, StreamItem};
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::kv::{chain_bytes_per_token, KvConfig, KvManager};
 use super::metrics::Metrics;
@@ -57,12 +60,12 @@ impl ServerConfig {
     }
 }
 
-/// Where a request's output goes: one final `Result` (response or failure
-/// reason), or a live stream of per-step deltas ending in
+/// Where a request's output goes: one final `Result` (response or typed
+/// failure), or a live stream of per-step deltas ending in
 /// [`StreamItem::Done`] / [`StreamItem::Failed`]. Either way a decode
 /// failure reaches the client as a value — never as a bare channel close.
 enum ReplySink {
-    Final(mpsc::Sender<Result<Response, String>>),
+    Final(mpsc::Sender<Result<Response, DecodeError>>),
     Stream(mpsc::Sender<StreamItem>),
 }
 
@@ -141,6 +144,13 @@ impl Server {
                         }
                     };
                     let chain = host.chain();
+                    // Expose per-model engine health (error/retry/timeout
+                    // counters + breaker state) in metrics snapshots.
+                    for m in chain.iter() {
+                        if let Some(h) = m.health_handle() {
+                            metrics.register_model_health(m.name(), h);
+                        }
+                    }
                     // Park until work arrives, then continuously batch: the
                     // step scheduler keeps admitting from the queue between
                     // steps and returns only once it drains.
@@ -209,15 +219,15 @@ impl Server {
 
     /// Submit a generation; returns a receiver that yields the final
     /// result once the decode completes — `Ok(Response)` on success,
-    /// `Err(reason)` if the decode failed, so a failure is observable
-    /// rather than an unexplained channel close.
+    /// `Err(DecodeError)` if the decode failed, so a failure is observable
+    /// (and classifiable) rather than an unexplained channel close.
     pub fn submit(
         &self,
         prompt: Vec<crate::spec::types::Token>,
         max_new: usize,
         method: Method,
         task: Option<TaskKind>,
-    ) -> Result<mpsc::Receiver<Result<Response, String>>, RejectReason> {
+    ) -> Result<mpsc::Receiver<Result<Response, DecodeError>>, RejectReason> {
         let req = self.make_request(prompt, max_new, method, task);
         let (tx, rx) = mpsc::channel();
         self.route(req, ReplySink::Final(tx))?;
@@ -296,17 +306,14 @@ fn deliver(replies: &SinkMap, event: BatchEvent<'_>) {
         BatchEvent::Done { id, response } => {
             let sink = replies.lock().unwrap().remove(&id);
             match (sink, response) {
-                (Some(ReplySink::Final(tx)), Ok(resp)) => {
-                    let _ = tx.send(Ok(resp));
-                }
-                (Some(ReplySink::Final(tx)), Err(e)) => {
-                    let _ = tx.send(Err(e.to_string()));
+                (Some(ReplySink::Final(tx)), outcome) => {
+                    let _ = tx.send(outcome);
                 }
                 (Some(ReplySink::Stream(tx)), Ok(resp)) => {
                     let _ = tx.send(StreamItem::Done(resp));
                 }
                 (Some(ReplySink::Stream(tx)), Err(e)) => {
-                    let _ = tx.send(StreamItem::Failed(e.to_string()));
+                    let _ = tx.send(StreamItem::Failed(e));
                 }
                 (None, _) => {}
             }
@@ -337,6 +344,7 @@ mod tests {
             preemptions: 0,
             mean_accept: 0.0,
             forward_passes: vec![3],
+            degraded: 0,
             task: None,
             method: Method::Autoregressive,
         }
@@ -347,9 +355,12 @@ mod tests {
         let replies: SinkMap = Arc::new(Mutex::new(HashMap::new()));
         let (tx, rx) = mpsc::channel();
         replies.lock().unwrap().insert(7, ReplySink::Final(tx));
-        deliver(&replies, BatchEvent::Done { id: 7, response: Err(anyhow::anyhow!("boom")) });
+        deliver(
+            &replies,
+            BatchEvent::Done { id: 7, response: Err(DecodeError::Internal("boom".into())) },
+        );
         let got = rx.recv().expect("failure must be delivered, not dropped");
-        assert_eq!(got.unwrap_err(), "boom");
+        assert_eq!(got.unwrap_err(), DecodeError::Internal("boom".into()));
         assert!(replies.lock().unwrap().is_empty(), "sink must be removed");
     }
 
@@ -359,10 +370,10 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         replies.lock().unwrap().insert(8, ReplySink::Stream(tx));
         deliver(&replies, BatchEvent::Delta { id: 8, tokens: &[4, 5] });
-        deliver(&replies, BatchEvent::Done { id: 8, response: Err(anyhow::anyhow!("pool gone")) });
+        deliver(&replies, BatchEvent::Done { id: 8, response: Err(DecodeError::EngineLost) });
         assert!(matches!(rx.recv().unwrap(), StreamItem::Delta(t) if t == vec![4, 5]));
         match rx.recv().unwrap() {
-            StreamItem::Failed(msg) => assert_eq!(msg, "pool gone"),
+            StreamItem::Failed(err) => assert_eq!(err, DecodeError::EngineLost),
             other => panic!("expected Failed, got {other:?}"),
         }
     }

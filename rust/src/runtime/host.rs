@@ -19,6 +19,19 @@
 //! row re-reads never touch the channel. (The compiled HLO itself is
 //! stateless full-context; device-side KV caching is a separate artifact
 //! change tracked on the ROADMAP.)
+//!
+//! # Deadlines, retries, health
+//!
+//! Every channel round-trip is bounded by a [`CallPolicy`] deadline
+//! (`recv_timeout`) so a hung engine surfaces as a typed
+//! [`ModelFault`]`::Timeout` instead of blocking a worker thread forever.
+//! Clean engine *error replies* are retried with exponential backoff —
+//! they are safe to retry because the engine rolls its session state back
+//! before replying — but timeouts and disconnects are never retried: the
+//! engine may still be executing the call, so its state is unknown. Every
+//! outcome is recorded in a per-model [`HealthTracker`] (a
+//! consecutive-failure circuit breaker) that the decode tasks consult via
+//! [`LanguageModel::healthy`] to drop failing drafters.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -27,7 +40,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::spec::types::{LanguageModel, Logits, ModelCounters, ScoringSession, Token};
+use crate::spec::types::{
+    FaultKind, HealthTracker, LanguageModel, Logits, ModelCounters, ModelFault, ScoringSession,
+    Token,
+};
 
 use super::engine::{Client, ModelEngine};
 use super::manifest::{Manifest, ModelMeta};
@@ -44,18 +60,52 @@ enum Req {
     Shutdown,
 }
 
+/// Deadline and retry policy for engine channel round-trips.
+#[derive(Debug, Clone, Copy)]
+pub struct CallPolicy {
+    /// Per-round-trip reply deadline. A miss is a [`FaultKind::Timeout`].
+    pub deadline: Duration,
+    /// How many times a clean engine *error reply* is retried. Timeouts
+    /// and disconnects are never retried (engine state unknown).
+    pub retries: u32,
+    /// Initial retry backoff, doubled per attempt.
+    pub backoff: Duration,
+}
+
+impl Default for CallPolicy {
+    fn default() -> Self {
+        Self {
+            deadline: Duration::from_secs(30),
+            retries: 2,
+            backoff: Duration::from_millis(10),
+        }
+    }
+}
+
 /// Owns the engine thread; dropping it shuts the thread down.
 pub struct EngineHost {
     tx: mpsc::Sender<Req>,
     join: Option<std::thread::JoinHandle<()>>,
     metas: Vec<ModelMeta>,
     roles: Vec<String>,
+    policy: CallPolicy,
 }
 
 impl EngineHost {
     /// Load `roles` of `family` from the artifacts at `root` on a fresh
     /// engine thread. Role order defines model indices (target first).
     pub fn load(root: impl Into<std::path::PathBuf>, family: &str, roles: &[&str]) -> Result<Self> {
+        Self::load_with_policy(root, family, roles, CallPolicy::default())
+    }
+
+    /// [`load`](Self::load) with an explicit deadline/retry policy for
+    /// every model handle this host creates.
+    pub fn load_with_policy(
+        root: impl Into<std::path::PathBuf>,
+        family: &str,
+        roles: &[&str],
+        policy: CallPolicy,
+    ) -> Result<Self> {
         let root = root.into();
         let manifest = Manifest::load(&root)?;
         let fam = manifest.family(family)?;
@@ -72,11 +122,13 @@ impl EngineHost {
             .name(format!("engine-{family}"))
             .spawn(move || engine_thread(specs, rx, ready_tx))
             .context("spawning engine thread")?;
+        // Startup compiles/loads every engine, so it gets a much more
+        // generous deadline than a single forward.
         ready_rx
-            .recv()
-            .context("engine thread died during startup")?
+            .recv_timeout(policy.deadline.saturating_mul(10))
+            .context("engine thread died or hung during startup")?
             .context("engine startup failed")?;
-        Ok(Self { tx, join: Some(join), metas, roles: role_names })
+        Ok(Self { tx, join: Some(join), metas, roles: role_names, policy })
     }
 
     /// A `Send + Sync` handle to model `idx` (index into the role order).
@@ -87,6 +139,8 @@ impl EngineHost {
             meta: self.metas[idx].clone(),
             tx: Mutex::new(self.tx.clone()),
             counters: ModelCounters::default(),
+            policy: self.policy,
+            health: Arc::new(HealthTracker::default()),
         })
     }
 
@@ -111,7 +165,10 @@ impl EngineHost {
             .send(Req::CostProbe { model: idx, ctx_len, iters, reply })
             .ok()
             .context("engine thread gone")?;
-        rx.recv().context("engine thread gone")?
+        // The probe runs `iters + 1` forwards back to back; scale the
+        // per-call deadline accordingly.
+        rx.recv_timeout(self.policy.deadline.saturating_mul(iters.max(1) as u32 + 1))
+            .context("engine thread gone or cost probe hung")?
     }
 }
 
@@ -231,12 +288,74 @@ pub struct RemoteModel {
     meta: ModelMeta,
     tx: Mutex<mpsc::Sender<Req>>,
     counters: ModelCounters,
+    policy: CallPolicy,
+    health: Arc<HealthTracker>,
 }
 
 impl RemoteModel {
+    fn fault(&self, kind: FaultKind) -> anyhow::Error {
+        anyhow::Error::new(ModelFault { kind, model: self.meta.name.clone() })
+    }
+
     fn send(&self, req: Req) -> Result<()> {
-        let tx = self.tx.lock().expect("engine tx poisoned");
-        tx.send(req).ok().context("engine thread gone")
+        // A poisoned lock means a sibling thread panicked mid-send: treat
+        // the engine as lost rather than propagating the panic.
+        let tx = match self.tx.lock() {
+            Ok(tx) => tx,
+            Err(_) => return Err(self.fault(FaultKind::Lost).context("engine tx poisoned")),
+        };
+        tx.send(req)
+            .map_err(|_| self.fault(FaultKind::Lost).context("engine thread gone"))
+    }
+
+    /// Deadline-bounded reply wait. Timeout and disconnect both become
+    /// typed [`ModelFault`]s.
+    fn recv<T>(&self, rx: &mpsc::Receiver<T>) -> Result<T> {
+        match rx.recv_timeout(self.policy.deadline) {
+            Ok(v) => Ok(v),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(self.fault(FaultKind::Timeout)),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(self.fault(FaultKind::Lost)),
+        }
+    }
+
+    /// One engine round-trip with the full policy applied. `attempt` runs
+    /// send + recv: its outer `Result` is the transport (never retried —
+    /// after a timeout the engine may still be executing the call, so its
+    /// session state is unknown), the inner one is the engine's reply
+    /// (retried with backoff — the engine rolls back before replying, so
+    /// the call is idempotent). Outcomes feed the health tracker.
+    fn call<T>(&self, mut attempt: impl FnMut() -> Result<Result<T>>) -> Result<T> {
+        let mut backoff = self.policy.backoff;
+        let mut tries_left = self.policy.retries;
+        loop {
+            match attempt() {
+                Err(transport) => {
+                    let kind = transport
+                        .downcast_ref::<ModelFault>()
+                        .map(|f| f.kind)
+                        .unwrap_or(FaultKind::Lost);
+                    self.health.record_failure(kind);
+                    return Err(transport);
+                }
+                Ok(Ok(v)) => {
+                    self.health.record_success();
+                    return Ok(v);
+                }
+                Ok(Err(e)) => {
+                    if tries_left == 0 {
+                        self.health.record_failure(FaultKind::Transient);
+                        return Err(e.context(ModelFault {
+                            kind: FaultKind::Transient,
+                            model: self.meta.name.clone(),
+                        }));
+                    }
+                    tries_left -= 1;
+                    self.health.record_retry();
+                    std::thread::sleep(backoff);
+                    backoff = backoff.saturating_mul(2);
+                }
+            }
+        }
     }
 }
 
@@ -255,9 +374,11 @@ impl LanguageModel for RemoteModel {
 
     fn forward(&self, tokens: &[Token]) -> Result<Logits> {
         let start = Instant::now();
-        let (reply, rx) = mpsc::channel();
-        self.send(Req::Forward { model: self.idx, tokens: tokens.to_vec(), reply })?;
-        let out = rx.recv().context("engine thread gone")??;
+        let out = self.call(|| {
+            let (reply, rx) = mpsc::channel();
+            self.send(Req::Forward { model: self.idx, tokens: tokens.to_vec(), reply })?;
+            self.recv(&rx)
+        })?;
         self.counters.record(start.elapsed());
         Ok(out)
     }
@@ -275,15 +396,27 @@ impl LanguageModel for RemoteModel {
     }
 
     fn open_session(&self) -> Result<Box<dyn ScoringSession + '_>> {
-        let (reply, rx) = mpsc::channel();
-        self.send(Req::SessionOpen { model: self.idx, reply })?;
-        let id = rx.recv().context("engine thread gone")?;
+        // The open reply is infallible engine-side, so wrap it as an
+        // always-Ok inner result to reuse the policy path.
+        let id = self.call(|| {
+            let (reply, rx) = mpsc::channel();
+            self.send(Req::SessionOpen { model: self.idx, reply })?;
+            self.recv(&rx).map(Ok)
+        })?;
         Ok(Box::new(RemoteSession {
             model: self,
             id,
             tokens: Vec::new(),
             rows: Vec::new(),
         }))
+    }
+
+    fn healthy(&self) -> bool {
+        self.health.healthy()
+    }
+
+    fn health_handle(&self) -> Option<Arc<HealthTracker>> {
+        Some(self.health.clone())
     }
 }
 
@@ -317,13 +450,17 @@ impl ScoringSession for RemoteSession<'_> {
             return Ok(());
         }
         let start = Instant::now();
-        let (reply, rx) = mpsc::channel();
-        self.model.send(Req::SessionAppend {
-            session: self.id,
-            tokens: suffix.to_vec(),
-            reply,
+        // Retry-safe: the engine truncates its prefix back before sending
+        // an error reply, so a retried append re-applies cleanly.
+        let logits = self.model.call(|| {
+            let (reply, rx) = mpsc::channel();
+            self.model.send(Req::SessionAppend {
+                session: self.id,
+                tokens: suffix.to_vec(),
+                reply,
+            })?;
+            self.model.recv(&rx)
         })?;
-        let logits = rx.recv().context("engine thread gone")??;
         for t in 0..logits.seq() {
             self.rows.extend_from_slice(logits.row(t));
         }
@@ -341,9 +478,11 @@ impl ScoringSession for RemoteSession<'_> {
         if to_len == self.tokens.len() {
             return Ok(());
         }
-        let (reply, rx) = mpsc::channel();
-        self.model.send(Req::SessionRollback { session: self.id, to_len, reply })?;
-        rx.recv().context("engine thread gone")??;
+        self.model.call(|| {
+            let (reply, rx) = mpsc::channel();
+            self.model.send(Req::SessionRollback { session: self.id, to_len, reply })?;
+            self.model.recv(&rx)
+        })?;
         self.tokens.truncate(to_len);
         self.rows.truncate(to_len * self.model.meta.vocab);
         Ok(())
@@ -359,5 +498,151 @@ impl ScoringSession for RemoteSession<'_> {
 impl Drop for RemoteSession<'_> {
     fn drop(&mut self) {
         let _ = self.model.send(Req::SessionClose { session: self.id });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "fake".into(),
+            n_layers: 1,
+            d_model: 8,
+            n_heads: 1,
+            d_ff: 16,
+            vocab: 4,
+            seq_len: 32,
+            param_count: 100,
+            flops_per_forward: 1000,
+        }
+    }
+
+    fn remote(tx: mpsc::Sender<Req>, policy: CallPolicy) -> RemoteModel {
+        RemoteModel {
+            idx: 0,
+            meta: meta(),
+            tx: Mutex::new(tx),
+            counters: ModelCounters::default(),
+            policy,
+            health: Arc::new(HealthTracker::default()),
+        }
+    }
+
+    #[test]
+    fn hung_engine_call_hits_deadline() {
+        let (tx, rx) = mpsc::channel::<Req>();
+        // A fake engine that accepts requests but never replies — holding
+        // the reply senders alive so the receiver sees a hang, not a
+        // disconnect.
+        let hold = std::thread::spawn(move || {
+            let mut held = Vec::new();
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Forward { reply, .. } => held.push(reply),
+                    Req::Shutdown => break,
+                    _ => {}
+                }
+            }
+        });
+        let m = remote(
+            tx.clone(),
+            CallPolicy {
+                deadline: Duration::from_millis(25),
+                retries: 0,
+                backoff: Duration::from_millis(1),
+            },
+        );
+        let start = Instant::now();
+        let err = m.forward(&[1, 2]).unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(5), "must not block forever");
+        let fault = err.downcast_ref::<ModelFault>().expect("typed fault");
+        assert_eq!(fault.kind, FaultKind::Timeout);
+        assert_eq!(m.health.timeouts(), 1);
+        let _ = tx.send(Req::Shutdown);
+        let _ = hold.join();
+    }
+
+    #[test]
+    fn dead_engine_reports_lost() {
+        let (tx, rx) = mpsc::channel::<Req>();
+        drop(rx); // engine thread gone before the first call
+        let m = remote(tx, CallPolicy::default());
+        let err = m.forward(&[1]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ModelFault>().unwrap().kind, FaultKind::Lost);
+        assert_eq!(m.health.errors(), 1);
+    }
+
+    #[test]
+    fn transient_error_replies_are_retried() {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let engine = std::thread::spawn(move || {
+            let mut n = 0u32;
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Forward { tokens, reply, .. } => {
+                        n += 1;
+                        let _ = if n <= 2 {
+                            reply.send(Err(anyhow::anyhow!("flaky")))
+                        } else {
+                            let vocab = 4;
+                            reply.send(Ok(Logits::new(
+                                vec![0.0; tokens.len() * vocab],
+                                tokens.len(),
+                                vocab,
+                            )))
+                        };
+                    }
+                    Req::Shutdown => break,
+                    _ => {}
+                }
+            }
+        });
+        let m = remote(
+            tx.clone(),
+            CallPolicy {
+                deadline: Duration::from_secs(5),
+                retries: 2,
+                backoff: Duration::from_millis(1),
+            },
+        );
+        let out = m.forward(&[1, 2]).expect("third attempt succeeds");
+        assert_eq!(out.seq(), 2);
+        assert_eq!(m.health.retries(), 2);
+        assert_eq!(m.health.errors(), 0, "a retried success is not a failure");
+        assert!(m.healthy());
+        let _ = tx.send(Req::Shutdown);
+        let _ = engine.join();
+    }
+
+    #[test]
+    fn retries_exhausted_is_transient_failure() {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let engine = std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Forward { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("always broken")));
+                    }
+                    Req::Shutdown => break,
+                    _ => {}
+                }
+            }
+        });
+        let m = remote(
+            tx.clone(),
+            CallPolicy {
+                deadline: Duration::from_secs(5),
+                retries: 1,
+                backoff: Duration::from_millis(1),
+            },
+        );
+        let err = m.forward(&[1]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ModelFault>().unwrap().kind, FaultKind::Transient);
+        assert_eq!(m.health.retries(), 1);
+        assert_eq!(m.health.errors(), 1);
+        let _ = tx.send(Req::Shutdown);
+        let _ = engine.join();
     }
 }

@@ -7,5 +7,5 @@ pub mod json;
 pub mod manifest;
 
 pub use engine::{Client, ModelEngine};
-pub use host::{EngineHost, RemoteModel, RemoteSession};
+pub use host::{CallPolicy, EngineHost, RemoteModel, RemoteSession};
 pub use manifest::Manifest;

@@ -83,6 +83,10 @@ impl<'m> ArTask<'m> {
             matches!(state.inflight, InflightState::None),
             "autoregressive tasks carry no in-flight state"
         );
+        anyhow::ensure!(
+            state.live_models.is_empty() || state.live_models == [0],
+            "autoregressive resume state names models beyond the target"
+        );
         let mut task = Self::new(model, prompt, max_new, sampling)?;
         task.tokens = state.committed;
         task.rng = state.rng;
@@ -145,6 +149,7 @@ impl DecodeTask for ArTask<'_> {
             forward_time,
             accept_lengths: accept,
             stage_accept_lengths: vec![],
+            degraded: 0,
         }
     }
 
@@ -160,6 +165,8 @@ impl DecodeTask for ArTask<'_> {
             forward_passes,
             forward_time,
             inflight: InflightState::None,
+            live_models: vec![0],
+            degraded: 0,
         }
     }
 }

@@ -1,0 +1,311 @@
+//! Deterministic fault injection for the fault-tolerance layer.
+//!
+//! [`ChaosModel`] wraps any [`LanguageModel`] and injects failures on
+//! *scripted call indices*: the wrapper counts every fallible model call
+//! (`forward` plus every non-empty session `append`) and consults a fault
+//! script keyed by that index. Everything is deterministic — same script,
+//! same call sequence, same faults — so every fault-tolerance behavior in
+//! the serving stack is pinnable in a test.
+//!
+//! Faults are injected *before* the inner call runs, so an injected append
+//! error leaves the wrapped session unchanged (the `ScoringSession`
+//! error contract). Value-level output is never perturbed: a call that is
+//! not scripted to fail returns the inner model's bits untouched, which is
+//! what lets the fault-injection suite assert byte-identical output
+//! between faulty and fault-free runs.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::types::{
+    FaultKind, HealthConfig, HealthTracker, LanguageModel, Logits, ModelFault, ScoringSession,
+    Token,
+};
+
+/// What to inject at a scripted call index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// The call fails cleanly ([`FaultKind::Transient`]); the next call is
+    /// back to normal.
+    Fail,
+    /// The call succeeds after an added delay (exercises deadlines that
+    /// are generous enough to survive it).
+    Latency(Duration),
+    /// The call blocks for the given time and then fails with
+    /// [`FaultKind::Timeout`] — a stand-in for a deadline expiring on a
+    /// hung engine, without needing a real engine thread.
+    Hang(Duration),
+    /// The backing engine dies: this call and *every* later call against
+    /// this model fail with [`FaultKind::Lost`].
+    Lost,
+}
+
+/// Shared fault state, referenced by the model wrapper and every session
+/// it opens (sessions count against the same per-model call index).
+struct ChaosState {
+    name: String,
+    faults: BTreeMap<u64, Fault>,
+    calls: AtomicU64,
+    lost: AtomicBool,
+    health: Arc<HealthTracker>,
+}
+
+impl ChaosState {
+    /// Claim the next call index and inject its scripted fault, if any.
+    fn check(&self) -> anyhow::Result<()> {
+        let idx = self.calls.fetch_add(1, Ordering::Relaxed);
+        if self.lost.load(Ordering::Relaxed) {
+            self.health.record_failure(FaultKind::Lost);
+            return Err(self.fault(FaultKind::Lost));
+        }
+        match self.faults.get(&idx) {
+            None => {
+                self.health.record_success();
+                Ok(())
+            }
+            Some(Fault::Fail) => {
+                self.health.record_failure(FaultKind::Transient);
+                Err(self.fault(FaultKind::Transient))
+            }
+            Some(Fault::Latency(d)) => {
+                std::thread::sleep(*d);
+                self.health.record_success();
+                Ok(())
+            }
+            Some(Fault::Hang(d)) => {
+                std::thread::sleep(*d);
+                self.health.record_failure(FaultKind::Timeout);
+                Err(self.fault(FaultKind::Timeout))
+            }
+            Some(Fault::Lost) => {
+                self.lost.store(true, Ordering::Relaxed);
+                self.health.record_failure(FaultKind::Lost);
+                Err(self.fault(FaultKind::Lost))
+            }
+        }
+    }
+
+    fn fault(&self, kind: FaultKind) -> anyhow::Error {
+        anyhow::Error::new(ModelFault { kind, model: self.name.clone() })
+    }
+}
+
+/// Fault-injecting wrapper over any [`LanguageModel`]. Build with
+/// [`ChaosModel::new`], script faults with [`fault_at`](Self::fault_at).
+pub struct ChaosModel<M: LanguageModel> {
+    inner: M,
+    state: ChaosState,
+}
+
+impl<M: LanguageModel> ChaosModel<M> {
+    pub fn new(inner: M) -> Self {
+        let name = format!("chaos({})", inner.name());
+        Self {
+            inner,
+            state: ChaosState {
+                name,
+                faults: BTreeMap::new(),
+                calls: AtomicU64::new(0),
+                lost: AtomicBool::new(false),
+                health: Arc::new(HealthTracker::default()),
+            },
+        }
+    }
+
+    /// Script `fault` for the `idx`-th fallible call (0-based; counts
+    /// `forward` and non-empty session appends against this model).
+    pub fn fault_at(mut self, idx: u64, fault: Fault) -> Self {
+        self.state.faults.insert(idx, fault);
+        self
+    }
+
+    /// Replace the default health tracker config (e.g. a short cooldown
+    /// so tests can watch the breaker reopen).
+    pub fn with_health(mut self, config: HealthConfig) -> Self {
+        self.state.health = Arc::new(HealthTracker::new(config));
+        self
+    }
+
+    /// Fallible calls observed so far (next call gets this index).
+    pub fn calls_seen(&self) -> u64 {
+        self.state.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl<M: LanguageModel> LanguageModel for ChaosModel<M> {
+    fn name(&self) -> &str {
+        &self.state.name
+    }
+
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn forward(&self, tokens: &[Token]) -> anyhow::Result<Logits> {
+        self.state.check()?;
+        self.inner.forward(tokens)
+    }
+
+    fn calls(&self) -> u64 {
+        self.inner.calls()
+    }
+
+    fn total_time(&self) -> Duration {
+        self.inner.total_time()
+    }
+
+    fn reset_counters(&self) {
+        self.inner.reset_counters()
+    }
+
+    fn cost_ms(&self) -> f64 {
+        self.inner.cost_ms()
+    }
+
+    fn open_session(&self) -> anyhow::Result<Box<dyn ScoringSession + '_>> {
+        // Opening is host-side bookkeeping here; faults fire on appends.
+        let inner = self.inner.open_session()?;
+        Ok(Box::new(ChaosSession { inner, state: &self.state }))
+    }
+
+    fn healthy(&self) -> bool {
+        if self.state.lost.load(Ordering::Relaxed) {
+            return false;
+        }
+        self.state.health.healthy()
+    }
+
+    fn health_handle(&self) -> Option<Arc<HealthTracker>> {
+        Some(self.state.health.clone())
+    }
+}
+
+/// Session wrapper: injects the model's scripted faults on appends,
+/// delegates everything else untouched.
+struct ChaosSession<'m> {
+    inner: Box<dyn ScoringSession + 'm>,
+    state: &'m ChaosState,
+}
+
+impl ScoringSession for ChaosSession<'_> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn tokens(&self) -> &[Token] {
+        self.inner.tokens()
+    }
+
+    fn append(&mut self, suffix: &[Token]) -> anyhow::Result<()> {
+        if suffix.is_empty() {
+            return Ok(()); // empty append is a free no-op, not a call
+        }
+        // Fault before touching the inner session, so an injected error
+        // leaves it unchanged (append's error contract).
+        self.state.check()?;
+        self.inner.append(suffix)
+    }
+
+    fn rollback(&mut self, to_len: usize) -> anyhow::Result<()> {
+        self.inner.rollback(to_len)
+    }
+
+    fn row(&self, pos: usize) -> &[f32] {
+        self.inner.row(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::mock::MockModel;
+
+    fn mock() -> MockModel {
+        MockModel::new("m", 64, 16, 3, 0.4)
+    }
+
+    #[test]
+    fn passthrough_is_bit_identical() {
+        let clean = mock();
+        let chaotic = ChaosModel::new(mock());
+        let a = clean.forward(&[1, 2, 3]).unwrap();
+        let b = chaotic.forward(&[1, 2, 3]).unwrap();
+        for t in 0..3 {
+            assert_eq!(a.row(t), b.row(t), "row {t}");
+        }
+        assert!(chaotic.healthy());
+    }
+
+    #[test]
+    fn fault_fires_on_scripted_index_only() {
+        let m = ChaosModel::new(mock()).fault_at(1, Fault::Fail);
+        assert!(m.forward(&[1]).is_ok(), "call 0 clean");
+        let err = m.forward(&[1]).unwrap_err();
+        let fault = err.downcast_ref::<ModelFault>().expect("typed fault");
+        assert_eq!(fault.kind, FaultKind::Transient);
+        assert!(m.forward(&[1]).is_ok(), "call 2 clean again");
+        assert_eq!(m.calls_seen(), 3);
+        assert_eq!(m.health_handle().unwrap().errors(), 1);
+    }
+
+    #[test]
+    fn session_append_fault_leaves_session_unchanged() {
+        let m = ChaosModel::new(mock()).fault_at(1, Fault::Fail);
+        let mut sess = m.open_session().unwrap();
+        sess.append(&[5, 6]).unwrap(); // call 0
+        assert!(sess.append(&[7]).is_err(), "call 1 is the scripted fault");
+        assert_eq!(sess.tokens(), &[5, 6], "failed append must not apply");
+        assert_eq!(sess.len(), 2);
+        sess.append(&[7]).unwrap(); // call 2
+        let full = mock().forward(&[5, 6, 7]).unwrap();
+        for t in 0..3 {
+            assert_eq!(sess.row(t), full.row(t), "row {t}");
+        }
+        assert!(sess.append(&[]).is_ok(), "empty append never counts as a call");
+        assert_eq!(m.calls_seen(), 3);
+    }
+
+    #[test]
+    fn lost_is_permanent_and_marks_unhealthy() {
+        let m = ChaosModel::new(mock()).fault_at(0, Fault::Lost);
+        let err = m.forward(&[1]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ModelFault>().unwrap().kind, FaultKind::Lost);
+        let err = m.forward(&[1]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ModelFault>().unwrap().kind,
+            FaultKind::Lost,
+            "every later call fails too"
+        );
+        assert!(!m.healthy());
+    }
+
+    #[test]
+    fn hang_reports_timeout() {
+        let m = ChaosModel::new(mock()).fault_at(0, Fault::Hang(Duration::from_millis(5)));
+        let err = m.forward(&[1]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ModelFault>().unwrap().kind, FaultKind::Timeout);
+        assert_eq!(m.health_handle().unwrap().timeouts(), 1);
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_faults() {
+        let m = ChaosModel::new(mock())
+            .with_health(HealthConfig { failure_threshold: 2, cooldown: Duration::from_secs(60) })
+            .fault_at(0, Fault::Fail)
+            .fault_at(1, Fault::Fail);
+        let _ = m.forward(&[1]);
+        assert!(m.healthy(), "one failure: still below threshold");
+        let _ = m.forward(&[1]);
+        assert!(!m.healthy(), "streak hit threshold: breaker open");
+    }
+}

@@ -52,6 +52,18 @@ impl CsDraftConfig {
 /// CS-Drafting decode as a resumable state machine. `models[0]` is the
 /// target; the remaining entries are drafters in decreasing capability (the
 /// last one is typically a [`BigramModel`](super::ngram::BigramModel)).
+///
+/// # Graceful degradation
+///
+/// Drafters are disposable: only the target's verification commits tokens,
+/// so a drafter that fails a scoring call — or whose health breaker is open
+/// at a step boundary — is removed from the cascade (its horizontal budget
+/// with it) and the step's partial block is discarded. With every drafter
+/// gone the block is empty and each step commits exactly the bonus token:
+/// plain autoregressive decode on the target. Dropping a drafter never
+/// changes the committed-token distribution, and under deterministic verify
+/// rules the output stays byte-identical. Only a target failure fails the
+/// task.
 pub struct CsDraftTask<'m> {
     models: Vec<&'m dyn LanguageModel>,
     sessions: Vec<Box<dyn ScoringSession + 'm>>,
@@ -69,6 +81,11 @@ pub struct CsDraftTask<'m> {
     accept_lengths: Vec<u32>,
     stage_accepts: Vec<Vec<u32>>,
     meter: StepMeter,
+    /// Dispatch-chain indices of the members still alive (ascending, always
+    /// starting with 0 — the target).
+    live_models: Vec<usize>,
+    /// Length of the cascade as dispatched, before any degradation.
+    dispatch_n: usize,
 }
 
 impl<'m> CsDraftTask<'m> {
@@ -77,6 +94,24 @@ impl<'m> CsDraftTask<'m> {
         prompt: &[Token],
         cfg: CsDraftConfig,
     ) -> Result<Self> {
+        // Skip drafters whose health breaker is already open; the target is
+        // always attempted (without it there is no request).
+        let want: Vec<usize> =
+            (0..models.len()).filter(|&i| i == 0 || models[i].healthy()).collect();
+        let (task, _dropped) = Self::build(models, prompt, cfg, want)?;
+        Ok(task)
+    }
+
+    /// Open sessions for the `want` subset of the dispatch cascade,
+    /// dropping drafters whose sessions fail to open. Returns the task plus
+    /// the positions *within the original `want`* that were dropped, so
+    /// `resume` can subset saved per-model statistics to match.
+    fn build(
+        models: &'m [Arc<dyn LanguageModel>],
+        prompt: &[Token],
+        mut cfg: CsDraftConfig,
+        mut want: Vec<usize>,
+    ) -> Result<(Self, Vec<usize>)> {
         anyhow::ensure!(models.len() >= 2, "need a target and at least one drafter");
         anyhow::ensure!(
             cfg.lens.len() == models.len() - 1,
@@ -86,18 +121,52 @@ impl<'m> CsDraftTask<'m> {
         );
         anyhow::ensure!(cfg.block_len() >= 1, "empty draft block");
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-        let seq_cap = models.iter().map(|m| m.seq_len()).min().unwrap();
+        anyhow::ensure!(
+            want.first() == Some(&0)
+                && want.windows(2).all(|w| w[0] < w[1])
+                && *want.last().unwrap() < models.len(),
+            "live-model set must be ascending, in range, and contain the target"
+        );
+        let dispatch_n = models.len();
+        let dispatch_lens = cfg.lens.clone();
+        let mut dropped: Vec<usize> = Vec::new();
+        let mut sessions: Vec<Box<dyn ScoringSession + 'm>> = Vec::with_capacity(want.len());
+        'open: loop {
+            sessions.clear();
+            for (pos, &i) in want.iter().enumerate() {
+                match models[i].open_session() {
+                    Ok(s) => sessions.push(s),
+                    Err(e) if pos == 0 => return Err(e.context("opening target session")),
+                    // A drafter that cannot open a session is dropped before
+                    // the decode starts; sessions opened so far close on the
+                    // `clear` above, so nothing leaks.
+                    Err(_) => {
+                        want.remove(pos);
+                        dropped.push(pos);
+                        continue 'open;
+                    }
+                }
+            }
+            break;
+        }
+        // `dropped` holds positions in the want-vector *as it shrank*; map
+        // them back to positions in the original `want`.
+        for i in (0..dropped.len()).rev() {
+            for j in (0..i).rev() {
+                if dropped[j] <= dropped[i] {
+                    dropped[i] += 1;
+                }
+            }
+        }
+        cfg.lens = want[1..].iter().map(|&i| dispatch_lens[i - 1]).collect();
+        let seq_cap = want.iter().map(|&i| models[i].seq_len()).min().unwrap();
         anyhow::ensure!(
             prompt.len() + cfg.max_new + cfg.block_len() + 1 <= seq_cap,
             "request does not fit the context window"
         );
-        let mut sessions: Vec<Box<dyn ScoringSession + 'm>> = Vec::with_capacity(models.len());
-        for m in models {
-            sessions.push(m.open_session()?);
-        }
-        let n_drafters = models.len() - 1;
-        Ok(Self {
-            models: models.iter().map(|m| m.as_ref()).collect(),
+        let k = want.len();
+        let task = Self {
+            models: want.iter().map(|&i| models[i].as_ref()).collect(),
             sessions,
             rng: Pcg32::seeded(cfg.sampling.seed),
             cfg,
@@ -109,9 +178,12 @@ impl<'m> CsDraftTask<'m> {
             p: Vec::new(),
             frontier: Vec::new(),
             accept_lengths: Vec::new(),
-            stage_accepts: vec![Vec::new(); n_drafters],
-            meter: StepMeter::new(n_drafters + 1),
-        })
+            stage_accepts: vec![Vec::new(); k - 1],
+            meter: StepMeter::new(k),
+            live_models: want,
+            dispatch_n,
+        };
+        Ok((task, dropped))
     }
 
     /// Re-open a suspended decode from `prompt + state`; see
@@ -131,28 +203,60 @@ impl<'m> CsDraftTask<'m> {
             cfg.max_new
         );
         anyhow::ensure!(
-            state.forward_passes.len() == models.len(),
-            "resume state covers {} models, cascade has {}",
-            state.forward_passes.len(),
-            models.len()
-        );
-        anyhow::ensure!(
-            state.stage_accepts.len() == models.len() - 1,
-            "resume state covers {} drafter tiers, cascade has {}",
-            state.stage_accepts.len(),
-            models.len() - 1
-        );
-        anyhow::ensure!(
             matches!(state.inflight, InflightState::None),
             "CS-Drafting tasks carry no in-flight state"
         );
-        let mut task = Self::new(models, prompt, cfg)?;
+        // A degraded task resumes on its surviving subset; empty
+        // `live_models` (a pre-degradation state) means the full cascade.
+        let want = if state.live_models.is_empty() {
+            ResumeState::full_chain(models.len())
+        } else {
+            state.live_models.clone()
+        };
+        anyhow::ensure!(
+            state.forward_passes.len() == want.len(),
+            "resume state covers {} models, live cascade has {}",
+            state.forward_passes.len(),
+            want.len()
+        );
+        anyhow::ensure!(
+            state.stage_accepts.len() == want.len() - 1,
+            "resume state covers {} drafter tiers, live cascade has {}",
+            state.stage_accepts.len(),
+            want.len() - 1
+        );
+        let (mut task, mut dropped) = Self::build(models, prompt, cfg, want)?;
+        // Members that failed to re-open sessions shrink the saved stats in
+        // lockstep (target open failure is fatal in `build`, so every
+        // dropped position is a drafter, `p >= 1`).
+        let mut passes = state.forward_passes;
+        let mut times = state.forward_time;
+        let mut stage = state.stage_accepts;
+        dropped.sort_unstable();
+        for &p in dropped.iter().rev() {
+            passes.remove(p);
+            times.remove(p);
+            stage.remove(p - 1);
+        }
         task.ctx.extend_from_slice(&state.committed);
         task.rng = state.rng;
         task.accept_lengths = state.accept_lengths;
-        task.stage_accepts = state.stage_accepts;
-        task.meter = StepMeter::resumed(state.wall, state.forward_passes, state.forward_time);
+        task.stage_accepts = stage;
+        task.meter = StepMeter::resumed(state.wall, passes, times);
         Ok(task)
+    }
+
+    /// Remove cascade member `d` (a drafter; never the target). Its session
+    /// closes on drop, releasing any engine-side state; its horizontal
+    /// budget and tier statistics go with it.
+    fn drop_member(&mut self, d: usize) {
+        debug_assert!(d >= 1 && d < self.models.len(), "only drafters can be dropped");
+        self.models.remove(d);
+        self.sessions.remove(d);
+        self.cfg.lens.remove(d - 1);
+        self.stage_accepts.remove(d - 1);
+        self.meter.drop_model(d);
+        self.live_models.remove(d);
     }
 }
 
@@ -170,6 +274,15 @@ impl DecodeTask for CsDraftTask<'_> {
         if self.finished() {
             return Ok(StepOutcome::Finished { new_tokens: 0 });
         }
+        // Proactive degradation: drop drafters whose health breaker is open
+        // before spending a scoring call on them.
+        let mut d = self.models.len();
+        while d > 1 {
+            d -= 1;
+            if !self.models[d].healthy() {
+                self.drop_member(d);
+            }
+        }
         let before = self.committed().len();
         let Self {
             models,
@@ -186,6 +299,7 @@ impl DecodeTask for CsDraftTask<'_> {
             accept_lengths,
             stage_accepts,
             meter,
+            ..
         } = self;
         meter.begin(models);
         let remaining = cfg.max_new - (ctx.len() - *prompt_len);
@@ -194,13 +308,17 @@ impl DecodeTask for CsDraftTask<'_> {
         block.clear();
         frontier.clear();
         frontier.extend_from_slice(ctx);
+        let mut failed_member: Option<usize> = None;
         'assemble: for (d, &len) in cfg.lens.iter().enumerate() {
             let dsess = &mut sessions[d + 1];
             for _ in 0..len {
                 if block.len() >= remaining + 1 {
                     break 'assemble;
                 }
-                reconcile(&mut **dsess, frontier)?;
+                if reconcile(&mut **dsess, frontier).is_err() {
+                    failed_member = Some(d + 1);
+                    break 'assemble;
+                }
                 if q_rows.len() == block.len() {
                     q_rows.push(Vec::new());
                 }
@@ -211,10 +329,23 @@ impl DecodeTask for CsDraftTask<'_> {
                 frontier.push(tok);
             }
         }
+        if let Some(idx) = failed_member {
+            // A drafter failed mid-block: discard the partial block (nothing
+            // was committed, so the output distribution is untouched), drop
+            // the member, and report zero progress for this step.
+            meter.end(models);
+            self.drop_member(idx);
+            return Ok(StepOutcome::Progress { new_tokens: 0 });
+        }
 
         // ---- one target scoring verifies everything ----------------------
+        // With every drafter degraded away the block is empty and the bonus
+        // token below is plain autoregressive decode on the target.
         let tsess = &mut sessions[0];
-        reconcile(&mut **tsess, frontier)?;
+        if let Err(e) = reconcile(&mut **tsess, frontier) {
+            meter.end(models);
+            return Err(e);
+        }
         let base = ctx.len();
         let mut accepted = 0usize;
         let mut replacement: Option<Token> = None;
@@ -261,6 +392,7 @@ impl DecodeTask for CsDraftTask<'_> {
     }
 
     fn finish(self: Box<Self>) -> GenerationOutput {
+        let degraded = (self.dispatch_n - self.models.len()) as u32;
         let end = (self.prompt_len + self.cfg.max_new).min(self.ctx.len());
         let tokens = self.ctx[self.prompt_len..end].to_vec();
         let accept_lengths = self.accept_lengths;
@@ -273,10 +405,12 @@ impl DecodeTask for CsDraftTask<'_> {
             forward_time,
             accept_lengths,
             stage_accept_lengths,
+            degraded,
         }
     }
 
     fn suspend(self: Box<Self>) -> ResumeState {
+        let degraded = (self.dispatch_n - self.models.len()) as u32;
         let committed = self.ctx[self.prompt_len..].to_vec();
         let (wall, forward_passes, forward_time) = self.meter.into_parts();
         ResumeState {
@@ -288,7 +422,13 @@ impl DecodeTask for CsDraftTask<'_> {
             forward_passes,
             forward_time,
             inflight: InflightState::None,
+            live_models: self.live_models,
+            degraded,
         }
+    }
+
+    fn degraded(&self) -> u32 {
+        (self.dispatch_n - self.models.len()) as u32
     }
 }
 
@@ -438,6 +578,125 @@ mod tests {
         assert_eq!(out.tokens, whole.tokens, "resumed decode diverged");
         assert_eq!(out.accept_lengths, whole.accept_lengths);
         assert_eq!(out.stage_accept_lengths, whole.stage_accept_lengths);
+    }
+
+    #[test]
+    fn drafter_fault_degrades_and_stays_greedy_identical() {
+        use crate::spec::chaos::{ChaosModel, Fault};
+        let models: Vec<Arc<dyn LanguageModel>> = vec![
+            Arc::new(MockModel::new("t", 512, 24, 5, 0.0)),
+            Arc::new(
+                ChaosModel::new(MockModel::new("d1", 512, 24, 5, 0.4)).fault_at(4, Fault::Lost),
+            ),
+            Arc::new(BigramModel::new(512, 24)),
+        ];
+        let out = generate(&models, &[3, 1], &greedy(32, vec![3, 2])).unwrap();
+        let ar = autoregressive::generate(
+            models[0].as_ref(),
+            &[3, 1],
+            32,
+            &SamplingParams { temperature: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.tokens, ar.tokens, "degraded greedy decode must stay target-argmax");
+        assert_eq!(out.degraded, 1);
+        assert_eq!(out.forward_passes.len(), 2, "surviving cascade is target + bigram");
+    }
+
+    #[test]
+    fn all_drafters_dead_degrades_to_autoregressive() {
+        use crate::spec::chaos::{ChaosModel, Fault};
+        let models: Vec<Arc<dyn LanguageModel>> = vec![
+            Arc::new(MockModel::new("t", 512, 24, 5, 0.0)),
+            Arc::new(
+                ChaosModel::new(MockModel::new("d1", 512, 24, 5, 0.4)).fault_at(2, Fault::Lost),
+            ),
+            Arc::new(
+                ChaosModel::new(MockModel::new("d2", 512, 24, 5, 0.8)).fault_at(0, Fault::Lost),
+            ),
+        ];
+        let out = generate(&models, &[3, 1], &greedy(32, vec![3, 2])).unwrap();
+        let ar = autoregressive::generate(
+            models[0].as_ref(),
+            &[3, 1],
+            32,
+            &SamplingParams { temperature: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.tokens, ar.tokens);
+        assert_eq!(out.tokens.len(), 32, "request still completes in full");
+        assert_eq!(out.degraded, 2);
+        assert_eq!(out.forward_passes.len(), 1, "only the target survives");
+    }
+
+    #[test]
+    fn target_fault_fails_the_request() {
+        use crate::spec::chaos::{ChaosModel, Fault};
+        let models: Vec<Arc<dyn LanguageModel>> = vec![
+            Arc::new(
+                ChaosModel::new(MockModel::new("t", 512, 24, 5, 0.0)).fault_at(0, Fault::Lost),
+            ),
+            Arc::new(MockModel::new("d1", 512, 24, 5, 0.4)),
+            Arc::new(BigramModel::new(512, 24)),
+        ];
+        assert!(generate(&models, &[3, 1], &greedy(16, vec![3, 2])).is_err());
+    }
+
+    #[test]
+    fn degraded_task_suspends_and_resumes_on_subset() {
+        use crate::spec::chaos::{ChaosModel, Fault};
+        let models: Vec<Arc<dyn LanguageModel>> = vec![
+            Arc::new(MockModel::new("t", 512, 24, 5, 0.0)),
+            Arc::new(
+                ChaosModel::new(MockModel::new("d1", 512, 24, 5, 0.4)).fault_at(1, Fault::Lost),
+            ),
+            Arc::new(BigramModel::new(512, 24)),
+        ];
+        let cfg = greedy(32, vec![3, 2]);
+        let mut task = CsDraftTask::new(&models, &[3, 1], cfg.clone()).unwrap();
+        while task.degraded() == 0 {
+            task.step().unwrap();
+        }
+        let state = Box::new(task).suspend();
+        assert_eq!(state.live_models, vec![0, 2], "drafter d1 must be gone from the live set");
+        assert_eq!(state.degraded, 1);
+        let mut task = CsDraftTask::resume(&models, &[3, 1], cfg.clone(), state).unwrap();
+        assert_eq!(task.degraded(), 1);
+        while !task.finished() {
+            task.step().unwrap();
+        }
+        let out = Box::new(task).finish();
+        let ar =
+            autoregressive::generate(models[0].as_ref(), &[3, 1], 32, &cfg.sampling).unwrap();
+        assert_eq!(out.tokens, ar.tokens, "degraded + resumed decode must stay target-argmax");
+    }
+
+    #[test]
+    fn unhealthy_drafter_skipped_at_construction() {
+        use crate::spec::chaos::{ChaosModel, Fault};
+        let chaos =
+            ChaosModel::new(MockModel::new("d1", 512, 24, 5, 0.4)).fault_at(0, Fault::Lost);
+        let _ = chaos.forward(&[1]); // trips the lost flag
+        assert!(!chaos.healthy());
+        let models: Vec<Arc<dyn LanguageModel>> = vec![
+            Arc::new(MockModel::new("t", 512, 24, 5, 0.0)),
+            Arc::new(chaos),
+            Arc::new(BigramModel::new(512, 24)),
+        ];
+        let mut task = CsDraftTask::new(&models, &[3, 1], greedy(16, vec![3, 2])).unwrap();
+        assert_eq!(task.degraded(), 1, "unhealthy drafter is skipped at open time");
+        while !task.finished() {
+            task.step().unwrap();
+        }
+        let out = Box::new(task).finish();
+        let ar = autoregressive::generate(
+            models[0].as_ref(),
+            &[3, 1],
+            16,
+            &SamplingParams { temperature: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.tokens, ar.tokens);
     }
 
     #[test]

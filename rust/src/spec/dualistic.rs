@@ -76,11 +76,18 @@ pub(crate) fn pick(probs: &mut [f32], sampling: &SamplingParams, rule: VerifyRul
 /// Standard draft-then-verify speculative decoding as a resumable state
 /// machine: one `step` = draft up to `k` tokens, verify them with one
 /// target scoring, commit the accepted prefix (+ replacement or bonus).
+///
+/// Degrades gracefully: if the drafter errors or turns unhealthy, its
+/// session is dropped (`dsess = None`) and subsequent steps decode
+/// autoregressively on the target — only the target verifies, so the
+/// committed-token distribution (and greedy byte-identity) is unchanged.
+/// Only a target failure fails the request.
 pub struct DualisticTask<'m> {
     target: &'m dyn LanguageModel,
     draft: &'m dyn LanguageModel,
     tsess: Box<dyn ScoringSession + 'm>,
-    dsess: Box<dyn ScoringSession + 'm>,
+    /// `None` once the drafter has been dropped (graceful degradation).
+    dsess: Option<Box<dyn ScoringSession + 'm>>,
     cfg: DualisticConfig,
     rng: Pcg32,
     scratch: FilterScratch,
@@ -113,11 +120,14 @@ impl<'m> DualisticTask<'m> {
             prompt.len() + cfg.max_new + cfg.draft_k + 1 <= seq_cap,
             "request does not fit the context window"
         );
+        // A drafter that is already unhealthy — or whose session fails to
+        // open — is degradation, not an error: start target-only.
+        let dsess = if draft.healthy() { draft.open_session().ok() } else { None };
         Ok(Self {
             target,
             draft,
-            tsess: target.open_session()?,
-            dsess: draft.open_session()?,
+            tsess: target.open_session().map_err(|e| e.context("opening target session"))?,
+            dsess,
             rng: Pcg32::seeded(cfg.sampling.seed),
             cfg,
             scratch: FilterScratch::default(),
@@ -154,12 +164,27 @@ impl<'m> DualisticTask<'m> {
             matches!(state.inflight, InflightState::None),
             "dualistic tasks carry no in-flight state"
         );
+        anyhow::ensure!(
+            state.live_models.is_empty() || state.live_models[0] == 0,
+            "live chain must include the target"
+        );
         let mut task = Self::new(target, draft, prompt, cfg)?;
+        if state.live_models == [0] {
+            // The drafter was dropped before suspension: resume target-only
+            // instead of re-opening a session on a dead model.
+            task.dsess = None;
+        }
         task.ctx.extend_from_slice(&state.committed);
         task.rng = state.rng;
         task.accept_lengths = state.accept_lengths;
         task.meter = StepMeter::resumed(state.wall, state.forward_passes, state.forward_time);
         Ok(task)
+    }
+
+    /// Drop the drafter at a step boundary; the decode continues
+    /// autoregressively on the target.
+    fn drop_draft(&mut self) {
+        self.dsess = None; // Box drop closes the engine session
     }
 }
 
@@ -177,6 +202,11 @@ impl DecodeTask for DualisticTask<'_> {
         if self.finished() {
             return Ok(StepOutcome::Finished { new_tokens: 0 });
         }
+        // Proactive health check: a drafter whose breaker opened is
+        // dropped before wasting calls on it.
+        if self.dsess.is_some() && !self.draft.healthy() {
+            self.drop_draft();
+        }
         let models: [&dyn LanguageModel; 2] = [self.target, self.draft];
         self.meter.begin(&models);
         let before = self.committed().len();
@@ -184,25 +214,64 @@ impl DecodeTask for DualisticTask<'_> {
         let remaining = self.cfg.max_new - (self.ctx.len() - self.prompt_len);
         let k = self.cfg.draft_k.min(remaining);
 
+        // ---- degraded path: plain autoregressive on the target -----------
+        if self.dsess.is_none() {
+            let r = reconcile(&mut *self.tsess, &self.ctx);
+            self.meter.end(&models);
+            r?;
+            dist_row_into(
+                self.tsess.row(self.ctx.len() - 1),
+                &self.cfg.sampling,
+                &mut self.scratch,
+                &mut self.p,
+            );
+            let tok = pick(&mut self.p, &self.cfg.sampling, self.cfg.rule, &mut self.rng);
+            self.ctx.push(tok);
+            self.accept_lengths.push(1);
+            let new_tokens = self.committed().len() - before;
+            return Ok(if self.finished() {
+                StepOutcome::Finished { new_tokens }
+            } else {
+                StepOutcome::Progress { new_tokens }
+            });
+        }
+
         // ---- draft k tokens, scoring only the unscored suffix ------------
         self.frontier.clear();
         self.frontier.extend_from_slice(&self.ctx);
-        reconcile(&mut *self.dsess, &self.frontier)?;
         self.block.clear();
-        while self.q_rows.len() < k {
-            self.q_rows.push(Vec::new());
-        }
-        for (i, q) in self.q_rows.iter_mut().enumerate().take(k) {
-            dist_row_into(self.dsess.row(self.frontier.len() - 1), &self.cfg.sampling,
-                          &mut self.scratch, q);
-            let tok = pick(q, &self.cfg.sampling, self.cfg.rule, &mut self.rng);
-            self.block.push(tok);
-            self.frontier.push(tok);
-            // The last drafted token's row is only needed if drafting
-            // continues from it next round; score it lazily then.
-            if i + 1 < k {
-                self.dsess.append(&[tok])?;
+        let mut draft_failed = false;
+        if let Some(dsess) = self.dsess.as_mut() {
+            match reconcile(&mut **dsess, &self.frontier) {
+                Err(_) => draft_failed = true,
+                Ok(()) => {
+                    while self.q_rows.len() < k {
+                        self.q_rows.push(Vec::new());
+                    }
+                    for (i, q) in self.q_rows.iter_mut().enumerate().take(k) {
+                        dist_row_into(dsess.row(self.frontier.len() - 1), &self.cfg.sampling,
+                                      &mut self.scratch, q);
+                        let tok = pick(q, &self.cfg.sampling, self.cfg.rule, &mut self.rng);
+                        self.block.push(tok);
+                        self.frontier.push(tok);
+                        // The last drafted token's row is only needed if
+                        // drafting continues from it next round; score it
+                        // lazily then.
+                        if i + 1 < k && dsess.append(&[tok]).is_err() {
+                            draft_failed = true;
+                            break;
+                        }
+                    }
+                }
             }
+        }
+        if draft_failed {
+            // Drafter failure is degradation, not an error: discard the
+            // partial block (uncommitted speculation is free to drop) and
+            // continue target-only from the next step.
+            self.drop_draft();
+            self.meter.end(&models);
+            return Ok(StepOutcome::Progress { new_tokens: 0 });
         }
 
         // ---- one target scoring of the block (+ the bonus row) -----------
@@ -260,6 +329,7 @@ impl DecodeTask for DualisticTask<'_> {
         let end = (self.prompt_len + self.cfg.max_new).min(self.ctx.len());
         let tokens = self.ctx[self.prompt_len..end].to_vec();
         let accept_lengths = self.accept_lengths;
+        let degraded = if self.dsess.is_none() { 1 } else { 0 };
         let (wall, forward_passes, forward_time) = self.meter.into_parts();
         GenerationOutput {
             tokens,
@@ -268,11 +338,14 @@ impl DecodeTask for DualisticTask<'_> {
             forward_time,
             accept_lengths,
             stage_accept_lengths: vec![],
+            degraded,
         }
     }
 
     fn suspend(self: Box<Self>) -> ResumeState {
         let committed = self.ctx[self.prompt_len..].to_vec();
+        let live_models = if self.dsess.is_none() { vec![0] } else { vec![0, 1] };
+        let degraded = if self.dsess.is_none() { 1 } else { 0 };
         let (wall, forward_passes, forward_time) = self.meter.into_parts();
         ResumeState {
             committed,
@@ -283,6 +356,16 @@ impl DecodeTask for DualisticTask<'_> {
             forward_passes,
             forward_time,
             inflight: InflightState::None,
+            live_models,
+            degraded,
+        }
+    }
+
+    fn degraded(&self) -> u32 {
+        if self.dsess.is_none() {
+            1
+        } else {
+            0
         }
     }
 }
@@ -420,6 +503,60 @@ mod tests {
         assert_eq!(out.tokens, whole.tokens);
         assert_eq!(out.forward_passes, whole.forward_passes);
         assert_eq!(out.accept_lengths, whole.accept_lengths);
+    }
+
+    #[test]
+    fn drafter_fault_degrades_to_target_only_greedy_identical() {
+        use crate::spec::chaos::{ChaosModel, Fault};
+        let cfg = DualisticConfig {
+            rule: VerifyRule::Greedy,
+            sampling: SamplingParams { temperature: 0.0, ..Default::default() },
+            max_new: 40,
+            ..Default::default()
+        };
+        let (t, d) = models();
+        let clean = generate(&t, &d, &[3, 1, 4], &cfg).unwrap();
+        let (t, d) = models();
+        let d = ChaosModel::new(d).fault_at(5, Fault::Lost);
+        let out = generate(&t, &d, &[3, 1, 4], &cfg).unwrap();
+        assert_eq!(out.tokens, clean.tokens, "degradation changed greedy output");
+        assert_eq!(out.degraded, 1);
+        assert_eq!(out.tokens.len(), 40, "budget still fully committed");
+    }
+
+    #[test]
+    fn degraded_suspend_resumes_target_only() {
+        use crate::spec::chaos::{ChaosModel, Fault};
+        let cfg = DualisticConfig {
+            rule: VerifyRule::Greedy,
+            sampling: SamplingParams { temperature: 0.0, ..Default::default() },
+            max_new: 30,
+            ..Default::default()
+        };
+        let (t, d) = models();
+        let clean = generate(&t, &d, &[2, 7], &cfg).unwrap();
+        let (t, d) = models();
+        let d = ChaosModel::new(d).fault_at(0, Fault::Lost);
+        let mut task = DualisticTask::new(&t, &d, &[2, 7], cfg).unwrap();
+        task.step().unwrap(); // drafter dies here
+        assert_eq!(task.degraded(), 1);
+        let state = Box::new(task).suspend();
+        assert_eq!(state.live_models, vec![0]);
+        let mut task = DualisticTask::resume(&t, &d, &[2, 7], cfg, state).unwrap();
+        assert_eq!(task.degraded(), 1, "resume must not re-open the dead drafter");
+        while !task.finished() {
+            task.step().unwrap();
+        }
+        assert_eq!(Box::new(task).finish().tokens, clean.tokens);
+    }
+
+    #[test]
+    fn target_fault_fails_the_request() {
+        use crate::spec::chaos::{ChaosModel, Fault};
+        let cfg = DualisticConfig { max_new: 30, ..Default::default() };
+        let (t, d) = models();
+        let t = ChaosModel::new(t).fault_at(0, Fault::Lost);
+        assert!(generate(&t, &d, &[1], &cfg).is_err());
     }
 
     #[test]

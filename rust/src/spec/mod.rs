@@ -15,8 +15,11 @@
 //! * [`planner`] — theory-driven chain construction from measurements.
 //! * [`stats`]   — acceptance/latency aggregation.
 //! * [`mock`], [`ngram`] — PJRT-free models for tests and the CS cascade.
+//! * [`chaos`]   — deterministic fault injection (`ChaosModel`) for the
+//!   fault-tolerance layer's tests.
 
 pub mod autoregressive;
+pub mod chaos;
 pub mod csdraft;
 pub mod dualistic;
 pub mod mock;
@@ -31,8 +34,10 @@ pub mod theory;
 pub mod types;
 pub mod verify;
 
+pub use chaos::{ChaosModel, Fault};
 pub use polybasic::{generate as polybasic_generate, PolyConfig};
 pub use task::{DecodeTask, InflightState, ResumeState, StepOutcome};
 pub use types::{
-    GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
+    FaultKind, GenerationOutput, HealthConfig, HealthTracker, LanguageModel, ModelFault,
+    SamplingParams, ScoringSession, Token, VerifyRule,
 };

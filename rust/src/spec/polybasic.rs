@@ -128,6 +128,18 @@ impl Pipeline {
 
 /// Polybasic decode as a resumable state machine. `models[0]` is the
 /// target `M_1`, `models[n-1]` the drafter `M_n`.
+///
+/// # Graceful degradation
+///
+/// Only the target's verification determines the output distribution, so
+/// every other chain member is disposable for correctness: when a drafter
+/// errors or its health breaker opens, [`drop_member`](Self::drop_member)
+/// removes it at the step boundary and the decode continues on the shorter
+/// chain — polybasic shrinks toward dualistic and ultimately plain
+/// autoregressive (`n == 1`) instead of failing the request. In-flight
+/// speculation is discarded on a drop, which is distribution-free (those
+/// tokens were never committed) and keeps deterministic rules
+/// byte-identical to a fault-free run. Only a target failure propagates.
 pub struct PolyTask<'m> {
     models: Vec<&'m dyn LanguageModel>,
     sessions: Vec<Box<dyn ScoringSession + 'm>>,
@@ -140,6 +152,20 @@ pub struct PolyTask<'m> {
     accept_lengths: Vec<u32>,
     stage_accepts: Vec<Vec<u32>>,
     meter: StepMeter,
+    /// Dispatch-chain indices of the surviving members (`live_models[0] ==
+    /// 0` always: the target cannot be dropped).
+    live_models: Vec<usize>,
+    /// Length of the chain the task was dispatched on; `dispatch_n -
+    /// models.len()` is the degradation count.
+    dispatch_n: usize,
+}
+
+/// Why a step could not complete normally.
+enum StepError {
+    /// The target (or a fully-degraded chain) failed: the request fails.
+    Fatal(anyhow::Error),
+    /// Live-chain member `idx` (never 0) failed: drop it and continue.
+    Member { idx: usize, source: anyhow::Error },
 }
 
 impl<'m> PolyTask<'m> {
@@ -151,9 +177,82 @@ impl<'m> PolyTask<'m> {
         let n = models.len();
         anyhow::ensure!(n >= 2, "polybasic needs at least two models");
         anyhow::ensure!(cfg.thresholds.len() == n - 1, "need one threshold per verifier");
+        // A fresh task skips drafters whose breaker is already open rather
+        // than opening sessions doomed to fail on the first append.
+        let want: Vec<usize> =
+            (0..n).filter(|&i| i == 0 || models[i].healthy()).collect();
+        let (task, _dropped) = Self::build(models, prompt, cfg, want)?;
+        Ok(task)
+    }
+
+    /// Construct on the `want` subset of the dispatch chain (ascending,
+    /// starting with 0 = target). Drafters whose session fails to open are
+    /// dropped on the spot; the returned vec holds their *positions in
+    /// `want`* so `resume` can subset its saved per-model stats to match.
+    fn build(
+        models: &'m [Arc<dyn LanguageModel>],
+        prompt: &[Token],
+        mut cfg: PolyConfig,
+        mut want: Vec<usize>,
+    ) -> Result<(Self, Vec<usize>)> {
+        let dispatch_n = models.len();
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(cfg.draft_k >= 1, "draft_k must be >= 1");
-        let seq_cap = models.iter().map(|m| m.seq_len()).min().unwrap();
+        anyhow::ensure!(
+            !want.is_empty() && want[0] == 0,
+            "live chain must include the target"
+        );
+        anyhow::ensure!(
+            want.windows(2).all(|w| w[0] < w[1]) && *want.last().unwrap() < dispatch_n,
+            "live chain indices must be ascending dispatch indices"
+        );
+
+        // Open a session per surviving member. A drafter whose open fails
+        // is degradation, not an error; a target failure is fatal. Each
+        // retry restarts from scratch — dropped session boxes close their
+        // engine sessions, so nothing leaks.
+        let mut dropped: Vec<usize> = Vec::new();
+        let mut sessions: Vec<Box<dyn ScoringSession + 'm>>;
+        'open: loop {
+            sessions = Vec::with_capacity(want.len());
+            for (pos, &idx) in want.iter().enumerate() {
+                match models[idx].open_session() {
+                    Ok(s) => sessions.push(s),
+                    Err(e) if idx == 0 => {
+                        return Err(e.context("opening target session"));
+                    }
+                    Err(_) => {
+                        want.remove(pos);
+                        dropped.push(pos);
+                        continue 'open;
+                    }
+                }
+            }
+            break;
+        }
+        // `dropped` holds positions relative to the shrinking list; map to
+        // positions in the *original* want order (ascending adjustment).
+        for i in (0..dropped.len()).rev() {
+            for j in (0..i).rev() {
+                if dropped[j] <= dropped[i] {
+                    dropped[i] += 1;
+                }
+            }
+        }
+
+        let k = want.len();
+        // Per-verifier thresholds for the live chain: each surviving
+        // verifier keeps its own dispatch-chain threshold (the last live
+        // member is the pure drafter and has none).
+        let live_thresholds: Vec<usize> = want[..k.saturating_sub(1)]
+            .iter()
+            .map(|&i| cfg.thresholds[i.min(dispatch_n.saturating_sub(2))].max(1))
+            .collect();
+        cfg.thresholds = live_thresholds;
+
+        let live_refs: Vec<&'m dyn LanguageModel> =
+            want.iter().map(|&i| models[i].as_ref()).collect();
+        let seq_cap = live_refs.iter().map(|m| m.seq_len()).min().unwrap();
         anyhow::ensure!(
             prompt.len() + cfg.max_new + cfg.headroom() <= seq_cap,
             "prompt {} + max_new {} + pipeline headroom {} exceeds context {}",
@@ -162,12 +261,9 @@ impl<'m> PolyTask<'m> {
             cfg.headroom(),
             seq_cap
         );
-        let mut sessions: Vec<Box<dyn ScoringSession + 'm>> = Vec::with_capacity(n);
-        for m in models {
-            sessions.push(m.open_session()?);
-        }
-        Ok(Self {
-            models: models.iter().map(|m| m.as_ref()).collect(),
+
+        let task = Self {
+            models: live_refs,
             sessions,
             rng: Pcg32::seeded(cfg.sampling.seed),
             cfg,
@@ -175,15 +271,18 @@ impl<'m> PolyTask<'m> {
             pipe: Pipeline {
                 flat: prompt.to_vec(),
                 committed: prompt.len(),
-                queues: (0..n - 1).map(|_| VecDeque::new()).collect(),
+                queues: (0..k.saturating_sub(1)).map(|_| VecDeque::new()).collect(),
                 pool: Vec::new(),
             },
             prompt_len: prompt.len(),
             seq_cap,
             accept_lengths: Vec::new(),
-            stage_accepts: vec![Vec::new(); n - 1],
-            meter: StepMeter::new(n),
-        })
+            stage_accepts: vec![Vec::new(); k.saturating_sub(1)],
+            meter: StepMeter::new(k),
+            live_models: want,
+            dispatch_n,
+        };
+        Ok((task, dropped))
     }
 
     /// Re-open a suspended decode from `prompt + state`; see
@@ -192,42 +291,79 @@ impl<'m> PolyTask<'m> {
     /// distributions across steps, so the suspended pipeline suffix is
     /// restored wholesale — the fresh sessions re-score the whole frontier
     /// on the next `reconcile`, after which decode continues
-    /// byte-identically to an uninterrupted run.
+    /// byte-identically to an uninterrupted run. A task that degraded
+    /// before suspension resumes on its surviving subset
+    /// (`state.live_models`) of the dispatch chain.
     pub fn resume(
         models: &'m [Arc<dyn LanguageModel>],
         prompt: &[Token],
         cfg: PolyConfig,
         state: ResumeState,
     ) -> Result<Self> {
+        anyhow::ensure!(models.len() >= 2, "polybasic needs at least two models");
+        anyhow::ensure!(
+            cfg.thresholds.len() == models.len() - 1,
+            "need one threshold per verifier"
+        );
         anyhow::ensure!(
             state.committed.len() <= cfg.max_new,
             "resume state carries {} tokens for a budget of {}",
             state.committed.len(),
             cfg.max_new
         );
+        let want: Vec<usize> = if state.live_models.is_empty() {
+            (0..models.len()).collect()
+        } else {
+            state.live_models.clone()
+        };
         anyhow::ensure!(
-            state.forward_passes.len() == models.len(),
-            "resume state covers {} models, chain has {}",
+            state.forward_passes.len() == want.len(),
+            "resume state covers {} models, live chain has {}",
             state.forward_passes.len(),
-            models.len()
+            want.len()
         );
         anyhow::ensure!(
-            state.stage_accepts.len() == models.len() - 1,
-            "resume state covers {} verifier stages, chain has {}",
+            state.stage_accepts.len() == want.len().saturating_sub(1),
+            "resume state covers {} verifier stages, live chain has {}",
             state.stage_accepts.len(),
-            models.len() - 1
+            want.len().saturating_sub(1)
         );
-        let mut task = Self::new(models, prompt, cfg)?;
+        let want_len = want.len();
+        // NOTE: resume does not pre-filter unhealthy drafters — the first
+        // step's health sweep drops them through the normal path, keeping
+        // the saved per-model stats aligned. Only open *failures* force a
+        // subset here.
+        let (mut task, dropped) = Self::build(models, prompt, cfg, want)?;
+
+        let mut passes = state.forward_passes;
+        let mut times = state.forward_time;
+        let mut stage_accepts = state.stage_accepts;
+        let mut k = want_len;
+        // Mirror drop_member's index arithmetic, highest position first.
+        let mut drop_desc = dropped.clone();
+        drop_desc.sort_unstable_by(|a, b| b.cmp(a));
+        for &p in &drop_desc {
+            passes.remove(p);
+            times.remove(p);
+            stage_accepts.remove(p.min(k - 2));
+            k -= 1;
+        }
+
         task.pipe.flat.extend_from_slice(&state.committed);
         task.pipe.committed += state.committed.len();
         match state.inflight {
             InflightState::None => {}
+            InflightState::Polybasic { .. } if !dropped.is_empty() => {
+                // The chain shrank between suspend and resume: the saved
+                // speculation references queues that no longer line up.
+                // Discard it — uncommitted drafts are free to drop.
+            }
             InflightState::Polybasic { drafted, queues } => {
                 anyhow::ensure!(
-                    queues.len() == models.len() - 1,
-                    "in-flight state covers {} queues, chain has {}",
+                    queues.len() == task.sessions.len() - 1,
+                    "in-flight state covers {} queues, live chain has {}",
                     queues.len(),
-                    models.len() - 1
+                    task.sessions.len() - 1
                 );
                 anyhow::ensure!(
                     drafted.len() == queues.iter().map(|q| q.len()).sum::<usize>(),
@@ -239,9 +375,68 @@ impl<'m> PolyTask<'m> {
         }
         task.rng = state.rng;
         task.accept_lengths = state.accept_lengths;
-        task.stage_accepts = state.stage_accepts;
-        task.meter = StepMeter::resumed(state.wall, state.forward_passes, state.forward_time);
+        task.stage_accepts = stage_accepts;
+        task.meter = StepMeter::resumed(state.wall, passes, times);
         Ok(task)
+    }
+
+    /// Drop live-chain member `d` (never the target) at a step boundary:
+    /// discard all in-flight speculation, close its session, and shrink
+    /// every per-member structure in lockstep. Distribution-free — see the
+    /// type-level docs.
+    fn drop_member(&mut self, d: usize) {
+        let n = self.models.len();
+        debug_assert!(d > 0, "the target is never dropped");
+        debug_assert!(d < n && n >= 2);
+        // Uncommitted speculation is discarded wholesale: it is equivalent
+        // to never having proposed those tokens, so the committed-token
+        // distribution (and greedy byte-identity) is untouched.
+        self.pipe.flat.truncate(self.pipe.committed);
+        for j in 0..self.pipe.queues.len() {
+            self.pipe.recycle_queue(j);
+        }
+        self.models.remove(d);
+        self.sessions.remove(d); // Box drop closes the engine session
+        self.meter.drop_model(d);
+        let t = d.min(n - 2);
+        self.cfg.thresholds.remove(t);
+        self.stage_accepts.remove(t);
+        self.pipe.queues.remove(t);
+        self.live_models.remove(d);
+    }
+
+    /// One drafting burst + one verification sweep on the current live
+    /// chain (the `n == 1` case is plain autoregressive decode). Metering
+    /// brackets the body on every path, including member failures.
+    fn step_live(&mut self) -> Result<(), StepError> {
+        let Self {
+            models,
+            sessions,
+            cfg,
+            rng,
+            scratch,
+            pipe,
+            prompt_len,
+            seq_cap,
+            accept_lengths,
+            stage_accepts,
+            meter,
+            ..
+        } = self;
+        meter.begin(models);
+        let r = step_body(
+            sessions,
+            cfg,
+            rng,
+            scratch,
+            pipe,
+            *prompt_len,
+            *seq_cap,
+            accept_lengths,
+            stage_accepts,
+        );
+        meter.end(models);
+        r
     }
 }
 
@@ -259,92 +454,25 @@ impl DecodeTask for PolyTask<'_> {
         if self.finished() {
             return Ok(StepOutcome::Finished { new_tokens: 0 });
         }
+        // Proactive health sweep: drop drafters whose breaker opened (e.g.
+        // another task's calls tripped it) before spending calls on them.
+        let mut d = self.models.len();
+        while d > 1 {
+            d -= 1;
+            if !self.models[d].healthy() {
+                self.drop_member(d);
+            }
+        }
         let before = self.committed().len();
-        let Self {
-            models,
-            sessions,
-            cfg,
-            rng,
-            scratch,
-            pipe,
-            prompt_len,
-            seq_cap,
-            accept_lengths,
-            stage_accepts,
-            meter,
-        } = self;
-        meter.begin(models);
-        let n = sessions.len();
-
-        let committed = pipe.committed - *prompt_len;
-        let remaining = cfg.max_new - committed;
-        let in_flight = pipe.in_flight();
-        // Flush mode: the pipeline already holds enough tokens to finish the
-        // request (or drafting would overflow the context) — stop drafting
-        // and fire every non-empty stage regardless of thresholds.
-        let draft_room = seq_cap.saturating_sub(pipe.flat.len());
-        let flush = in_flight >= remaining || draft_room == 0;
-
-        let mut fired = false;
-
-        // ---- 1. draft with M_n into the deepest queue --------------------
-        let deepest = n - 2;
-        if !flush && pipe.queues[deepest].len() < cfg.thresholds[deepest].max(1) {
-            let want = cfg.draft_k.min(remaining.saturating_sub(in_flight)).min(draft_room);
-            if want > 0 {
-                let dsess = &mut sessions[n - 1];
-                for _ in 0..want {
-                    // Score up to the frontier (a single incremental append
-                    // in the steady state) and sample the next draft.
-                    reconcile(&mut **dsess, &pipe.flat)?;
-                    let mut q = pipe.grab();
-                    dist_row_into(dsess.row(pipe.flat.len() - 1), &cfg.sampling, scratch, &mut q);
-                    let tok = pick(&mut q, &cfg.sampling, cfg.rule, rng);
-                    pipe.queues[deepest].push_back(q);
-                    pipe.flat.push(tok);
-                }
-                fired = true;
+        match self.step_live() {
+            Ok(()) => {}
+            Err(StepError::Member { idx, source: _ }) => {
+                // A drafter failed mid-step: drop it and report zero
+                // progress; the next step continues on the shorter chain.
+                self.drop_member(idx);
             }
+            Err(StepError::Fatal(e)) => return Err(e),
         }
-
-        // ---- 2. verification sweep, deepest stage first ------------------
-        let mut budget_reached = false;
-        for j in (0..n - 1).rev() {
-            if pipe.queues[j].is_empty() {
-                continue;
-            }
-            let ready = pipe.queues[j].len() >= cfg.thresholds[j];
-            if !(ready || flush) {
-                continue;
-            }
-            let committed_now =
-                verify_stage(&mut *sessions[j], j, pipe, cfg, rng, scratch, stage_accepts)?;
-            fired = true;
-            if j == 0 {
-                accept_lengths.push(committed_now as u32);
-                if pipe.committed - *prompt_len >= cfg.max_new {
-                    budget_reached = true;
-                    break;
-                }
-            }
-        }
-
-        // ---- 3. deadlock backstop ----------------------------------------
-        if !fired && !budget_reached {
-            // Nothing met its threshold and drafting was blocked: force the
-            // deepest non-empty stage (guaranteed progress).
-            if let Some(j) = (0..n - 1).rev().find(|&j| !pipe.queues[j].is_empty()) {
-                let committed_now =
-                    verify_stage(&mut *sessions[j], j, pipe, cfg, rng, scratch, stage_accepts)?;
-                if j == 0 {
-                    accept_lengths.push(committed_now as u32);
-                }
-            } else {
-                anyhow::bail!("decode stalled: empty pipeline but no draft room");
-            }
-        }
-        meter.end(models);
-
         let new_tokens = self.committed().len() - before;
         if self.finished() {
             Ok(StepOutcome::Finished { new_tokens })
@@ -358,6 +486,7 @@ impl DecodeTask for PolyTask<'_> {
         let tokens = self.pipe.flat[self.prompt_len..end].to_vec();
         let accept_lengths = self.accept_lengths;
         let stage_accept_lengths = self.stage_accepts;
+        let degraded = (self.dispatch_n - self.models.len()) as u32;
         let (wall, forward_passes, forward_time) = self.meter.into_parts();
         GenerationOutput {
             tokens,
@@ -366,6 +495,7 @@ impl DecodeTask for PolyTask<'_> {
             forward_time,
             accept_lengths,
             stage_accept_lengths,
+            degraded,
         }
     }
 
@@ -373,6 +503,7 @@ impl DecodeTask for PolyTask<'_> {
         let committed = self.pipe.flat[self.prompt_len..self.pipe.committed].to_vec();
         let drafted = self.pipe.flat[self.pipe.committed..].to_vec();
         let queues = self.pipe.queues;
+        let degraded = (self.dispatch_n - self.models.len()) as u32;
         let (wall, forward_passes, forward_time) = self.meter.into_parts();
         ResumeState {
             committed,
@@ -387,7 +518,13 @@ impl DecodeTask for PolyTask<'_> {
             } else {
                 InflightState::Polybasic { drafted, queues }
             },
+            live_models: self.live_models,
+            degraded,
         }
+    }
+
+    fn degraded(&self) -> u32 {
+        (self.dispatch_n - self.models.len()) as u32
     }
 }
 
@@ -406,6 +543,121 @@ pub fn generate(
         task.step()?;
     }
     Ok(Box::new(task).finish())
+}
+
+/// One decode round on the live chain: a drafting burst, a threshold-gated
+/// verification sweep, and the deadlock backstop. Errors are classified by
+/// the member that raised them so the task can degrade instead of failing.
+/// Every fallible call fails *before* mutating the pipeline for its
+/// iteration, so a `Member` error always leaves the pipeline consistent.
+#[allow(clippy::too_many_arguments)]
+fn step_body(
+    sessions: &mut [Box<dyn ScoringSession + '_>],
+    cfg: &PolyConfig,
+    rng: &mut Pcg32,
+    scratch: &mut FilterScratch,
+    pipe: &mut Pipeline,
+    prompt_len: usize,
+    seq_cap: usize,
+    accept_lengths: &mut Vec<u32>,
+    stage_accepts: &mut [Vec<u32>],
+) -> Result<(), StepError> {
+    let n = sessions.len();
+    let committed = pipe.committed - prompt_len;
+    let remaining = cfg.max_new - committed;
+
+    // ---- 0. fully degraded: plain autoregressive on the target -------
+    if n == 1 {
+        reconcile(&mut *sessions[0], &pipe.flat).map_err(StepError::Fatal)?;
+        let mut p = pipe.grab();
+        dist_row_into(sessions[0].row(pipe.flat.len() - 1), &cfg.sampling, scratch, &mut p);
+        let tok = pick(&mut p, &cfg.sampling, cfg.rule, rng);
+        pipe.recycle(p);
+        pipe.flat.push(tok);
+        pipe.committed += 1;
+        accept_lengths.push(1);
+        return Ok(());
+    }
+
+    let in_flight = pipe.in_flight();
+    // Flush mode: the pipeline already holds enough tokens to finish the
+    // request (or drafting would overflow the context) — stop drafting
+    // and fire every non-empty stage regardless of thresholds.
+    let draft_room = seq_cap.saturating_sub(pipe.flat.len());
+    let flush = in_flight >= remaining || draft_room == 0;
+
+    let mut fired = false;
+
+    // ---- 1. draft with M_n into the deepest queue --------------------
+    let deepest = n - 2;
+    if !flush && pipe.queues[deepest].len() < cfg.thresholds[deepest].max(1) {
+        let want = cfg.draft_k.min(remaining.saturating_sub(in_flight)).min(draft_room);
+        if want > 0 {
+            let dsess = &mut sessions[n - 1];
+            for _ in 0..want {
+                // Score up to the frontier (a single incremental append
+                // in the steady state) and sample the next draft.
+                reconcile(&mut **dsess, &pipe.flat)
+                    .map_err(|e| StepError::Member { idx: n - 1, source: e })?;
+                let mut q = pipe.grab();
+                dist_row_into(dsess.row(pipe.flat.len() - 1), &cfg.sampling, scratch, &mut q);
+                let tok = pick(&mut q, &cfg.sampling, cfg.rule, rng);
+                pipe.queues[deepest].push_back(q);
+                pipe.flat.push(tok);
+            }
+            fired = true;
+        }
+    }
+
+    // ---- 2. verification sweep, deepest stage first ------------------
+    let mut budget_reached = false;
+    for j in (0..n - 1).rev() {
+        if pipe.queues[j].is_empty() {
+            continue;
+        }
+        let ready = pipe.queues[j].len() >= cfg.thresholds[j];
+        if !(ready || flush) {
+            continue;
+        }
+        let committed_now = verify_stage(&mut *sessions[j], j, pipe, cfg, rng, scratch, stage_accepts)
+            .map_err(|e| member_or_fatal(j, e))?;
+        fired = true;
+        if j == 0 {
+            accept_lengths.push(committed_now as u32);
+            if pipe.committed - prompt_len >= cfg.max_new {
+                budget_reached = true;
+                break;
+            }
+        }
+    }
+
+    // ---- 3. deadlock backstop ----------------------------------------
+    if !fired && !budget_reached {
+        // Nothing met its threshold and drafting was blocked: force the
+        // deepest non-empty stage (guaranteed progress).
+        if let Some(j) = (0..n - 1).rev().find(|&j| !pipe.queues[j].is_empty()) {
+            let committed_now =
+                verify_stage(&mut *sessions[j], j, pipe, cfg, rng, scratch, stage_accepts)
+                    .map_err(|e| member_or_fatal(j, e))?;
+            if j == 0 {
+                accept_lengths.push(committed_now as u32);
+            }
+        } else {
+            return Err(StepError::Fatal(anyhow::anyhow!(
+                "decode stalled: empty pipeline but no draft room"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Stage-0 (target) failures are fatal; any other stage degrades.
+fn member_or_fatal(j: usize, e: anyhow::Error) -> StepError {
+    if j == 0 {
+        StepError::Fatal(e)
+    } else {
+        StepError::Member { idx: j, source: e }
+    }
 }
 
 /// Run verifier `j` over its queue through its incremental session: sync
@@ -710,5 +962,112 @@ mod tests {
         let mut cfg2 = PolyConfig::for_chain(3, 4, 4, 8);
         cfg2.thresholds.pop();
         assert!(generate(&chain, &[1], &cfg2).is_err());
+    }
+
+    use crate::spec::chaos::{ChaosModel, Fault};
+
+    /// The mock chain with the member at `idx` replaced by a chaos-wrapped
+    /// clone (identical weights, scripted faults).
+    fn chaos_chain(
+        seed: u64,
+        idx: usize,
+        faults: &[(u64, Fault)],
+    ) -> Vec<Arc<dyn LanguageModel>> {
+        let mut chain = mock_chain(512, 24, seed);
+        let (name, noise) = [("mock-target", 0.0f32), ("mock-mid", 0.35), ("mock-draft", 0.8)][idx];
+        let mut m = ChaosModel::new(MockModel::new(name, 512, 24, seed, noise));
+        for &(at, f) in faults {
+            m = m.fault_at(at, f);
+        }
+        chain[idx] = Arc::new(m);
+        chain
+    }
+
+    #[test]
+    fn drafter_fault_degrades_and_stays_greedy_identical() {
+        let cfg = greedy_cfg(3, 48);
+        let clean = generate(&mock_chain(512, 24, 11), &[3, 1, 4], &cfg).unwrap();
+        // The drafter dies mid-decode; the task must shrink the chain and
+        // still produce the target's greedy decode byte-for-byte.
+        let faulty = chaos_chain(11, 2, &[(6, Fault::Lost)]);
+        let out = generate(&faulty, &[3, 1, 4], &cfg).unwrap();
+        assert_eq!(out.tokens, clean.tokens, "degradation changed greedy output");
+        assert_eq!(out.degraded, 1);
+        assert_eq!(out.forward_passes.len(), 2, "stats cover the surviving chain");
+    }
+
+    #[test]
+    fn all_drafters_dead_degrades_to_autoregressive() {
+        let cfg = greedy_cfg(3, 32);
+        let mut faulty = chaos_chain(11, 1, &[(2, Fault::Lost)]);
+        faulty[2] = {
+            let m = ChaosModel::new(MockModel::new("mock-draft", 512, 24, 11, 0.8))
+                .fault_at(0, Fault::Lost);
+            Arc::new(m)
+        };
+        let out = generate(&faulty, &[9, 2], &cfg).unwrap();
+        let ar =
+            autoregressive::generate(faulty[0].as_ref(), &[9, 2], 32, &cfg.sampling).unwrap();
+        assert_eq!(out.tokens, ar.tokens, "fully degraded chain must match target AR");
+        assert_eq!(out.degraded, 2);
+        assert_eq!(out.tokens.len(), 32, "budget still fully committed");
+    }
+
+    #[test]
+    fn target_fault_fails_the_request() {
+        let cfg = greedy_cfg(3, 32);
+        let faulty = chaos_chain(11, 0, &[(0, Fault::Lost)]);
+        assert!(generate(&faulty, &[1, 2], &cfg).is_err(), "target loss must fail");
+    }
+
+    #[test]
+    fn transient_drafter_fault_drops_member_once() {
+        // A single clean-error blip also drops the member (the task does
+        // not retry drafters — the engine boundary owns retries); output
+        // stays greedy-identical.
+        let cfg = greedy_cfg(3, 40);
+        let clean = generate(&mock_chain(512, 24, 13), &[7], &cfg).unwrap();
+        let faulty = chaos_chain(13, 2, &[(3, Fault::Fail)]);
+        let out = generate(&faulty, &[7], &cfg).unwrap();
+        assert_eq!(out.tokens, clean.tokens);
+        assert_eq!(out.degraded, 1);
+    }
+
+    #[test]
+    fn degraded_task_suspends_and_resumes_on_subset() {
+        let cfg = greedy_cfg(3, 40);
+        let clean = generate(&mock_chain(512, 24, 17), &[5, 5], &cfg).unwrap();
+        let faulty = chaos_chain(17, 2, &[(1, Fault::Lost)]);
+        let mut task = PolyTask::new(&faulty, &[5, 5], cfg.clone()).unwrap();
+        while task.degraded() == 0 && !task.finished() {
+            task.step().unwrap();
+        }
+        assert_eq!(task.degraded(), 1, "drafter loss must register before suspension");
+        let state = Box::new(task).suspend();
+        assert_eq!(state.live_models, vec![0, 1]);
+        let mut task = PolyTask::resume(&faulty, &[5, 5], cfg, state).unwrap();
+        while !task.finished() {
+            task.step().unwrap();
+        }
+        let out = Box::new(task).finish();
+        assert_eq!(out.tokens, clean.tokens, "degraded resume diverged from greedy");
+        assert_eq!(out.degraded, 1);
+    }
+
+    #[test]
+    fn unhealthy_drafter_skipped_at_construction() {
+        let faulty = chaos_chain(19, 2, &[(0, Fault::Lost)]);
+        // Trip the drafter's breaker before the task is even built.
+        let _ = faulty[2].forward(&[1]);
+        assert!(!faulty[2].healthy());
+        let cfg = greedy_cfg(3, 24);
+        let task = PolyTask::new(&faulty, &[4, 2], cfg.clone()).unwrap();
+        assert_eq!(task.degraded(), 1, "open-time skip counts as degradation");
+        let clean = generate(&mock_chain(512, 24, 19), &[4, 2], &cfg).unwrap();
+        let mut task = task;
+        while !task.finished() {
+            task.step().unwrap();
+        }
+        assert_eq!(Box::new(task).finish().tokens, clean.tokens);
     }
 }

@@ -91,6 +91,20 @@ pub struct ResumeState {
     pub forward_time: Vec<Duration>,
     /// Speculative work in flight at the suspension point.
     pub inflight: InflightState,
+    /// Indices into the *dispatch* chain of the members still alive when
+    /// the task was suspended (ascending, always containing 0 — the
+    /// target). A task that gracefully dropped drafters resumes on the
+    /// surviving subset instead of re-opening sessions on dead models.
+    pub live_models: Vec<usize>,
+    /// Chain members dropped by graceful degradation before suspension.
+    pub degraded: u32,
+}
+
+impl ResumeState {
+    /// `live_models` for a task that never degraded: the full chain.
+    pub fn full_chain(n_models: usize) -> Vec<usize> {
+        (0..n_models).collect()
+    }
 }
 
 /// Speculative pipeline state that outlives a step boundary. Dualistic,
@@ -140,6 +154,15 @@ pub trait DecodeTask {
     /// (the caller releases the KV allocation); call only at a step
     /// boundary, on an unfinished task.
     fn suspend(self: Box<Self>) -> ResumeState;
+
+    /// Chain members dropped so far by graceful degradation (a failing or
+    /// unhealthy drafter removed at a step boundary). Zero for tasks that
+    /// cannot degrade. Degradation never changes the committed-token
+    /// distribution — only the target verifies — so for deterministic
+    /// verify rules the output stays byte-identical.
+    fn degraded(&self) -> u32 {
+        0
+    }
 }
 
 /// Per-task forward-pass accounting over shared model counters.
@@ -204,6 +227,16 @@ impl StepMeter {
             self.time[i] += m.total_time().saturating_sub(self.base_time[i]);
         }
         self.wall += self.step_started.elapsed();
+    }
+
+    /// Remove model `idx` from the meter when graceful degradation drops a
+    /// chain member mid-decode; its accumulated totals are discarded along
+    /// with it (the surviving entries keep chain order).
+    pub fn drop_model(&mut self, idx: usize) {
+        self.base_calls.remove(idx);
+        self.base_time.remove(idx);
+        self.passes.remove(idx);
+        self.time.remove(idx);
     }
 
     /// (wall, forward_passes, forward_time), consuming the meter.

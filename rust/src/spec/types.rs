@@ -34,9 +34,186 @@
 //! host-side logits cache.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 pub type Token = i32;
+
+/// How a model call failed, as far as the caller can classify it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The call exceeded its deadline. The engine may still be executing
+    /// it, so the session state is unknown — never retried.
+    Timeout,
+    /// The backing engine is gone (thread dead, channel disconnected).
+    Lost,
+    /// The call failed but the model reported the error cleanly and its
+    /// session state is intact — safe to retry.
+    Transient,
+}
+
+/// A classified model-call failure. Carried in the `anyhow` error chain so
+/// the coordinator can map engine faults onto typed client errors without
+/// string matching.
+#[derive(Debug, Clone)]
+pub struct ModelFault {
+    pub kind: FaultKind,
+    /// Name of the model the call was against.
+    pub model: String,
+}
+
+impl std::fmt::Display for ModelFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            FaultKind::Timeout => write!(f, "model {} call timed out", self.model),
+            FaultKind::Lost => write!(f, "model {} engine lost", self.model),
+            FaultKind::Transient => write!(f, "model {} transient failure", self.model),
+        }
+    }
+}
+
+impl std::error::Error for ModelFault {}
+
+/// Circuit-breaker tuning for a [`HealthTracker`].
+#[derive(Debug, Clone, Copy)]
+pub struct HealthConfig {
+    /// Consecutive failures that open the breaker.
+    pub failure_threshold: u32,
+    /// How long an open breaker waits before granting a probe call.
+    pub cooldown: Duration,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self { failure_threshold: 3, cooldown: Duration::from_secs(5) }
+    }
+}
+
+/// Observable circuit-breaker state (for metrics snapshots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Calls flow normally.
+    Closed,
+    /// Too many consecutive failures; calls should be skipped.
+    Open,
+    /// Cooldown elapsed; one probe call is allowed through.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Per-model health: cumulative error/retry/timeout counters plus a
+/// consecutive-failure circuit breaker with cooldown-probe reopening.
+/// Shared (`Arc`) between the model wrapper that records outcomes and the
+/// metrics layer that snapshots them.
+#[derive(Debug, Default)]
+pub struct HealthTracker {
+    errors: AtomicU64,
+    retries: AtomicU64,
+    timeouts: AtomicU64,
+    consecutive: AtomicU64,
+    config: HealthConfigCell,
+    /// `Some(when)` while the breaker is open; cleared on success.
+    open_since: Mutex<Option<Instant>>,
+}
+
+/// Interior holder so `HealthTracker` can derive `Default` with a
+/// non-zero default config.
+#[derive(Debug)]
+struct HealthConfigCell(HealthConfig);
+
+impl Default for HealthConfigCell {
+    fn default() -> Self {
+        Self(HealthConfig::default())
+    }
+}
+
+impl HealthTracker {
+    pub fn new(config: HealthConfig) -> Self {
+        Self { config: HealthConfigCell(config), ..Default::default() }
+    }
+
+    /// Record a successful call: closes the breaker and clears the
+    /// consecutive-failure streak.
+    pub fn record_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        *self.open_since.lock().unwrap() = None;
+    }
+
+    /// Record a failed call (after any retries were exhausted).
+    pub fn record_failure(&self, kind: FaultKind) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        if kind == FaultKind::Timeout {
+            self.timeouts.fetch_add(1, Ordering::Relaxed);
+        }
+        let streak = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= self.config.0.failure_threshold as u64 {
+            let mut open = self.open_since.lock().unwrap();
+            if open.is_none() {
+                *open = Some(Instant::now());
+            }
+        }
+    }
+
+    /// Record one retry attempt (the eventual outcome is recorded
+    /// separately via success/failure).
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Whether callers should route work to this model right now. An open
+    /// breaker whose cooldown has elapsed grants exactly one probe call
+    /// (and re-arms the cooldown so a failed probe waits again).
+    pub fn healthy(&self) -> bool {
+        let mut open = self.open_since.lock().unwrap();
+        match *open {
+            None => true,
+            Some(when) => {
+                if when.elapsed() >= self.config.0.cooldown {
+                    // Half-open: let one probe through, re-arm the timer.
+                    *open = Some(Instant::now());
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Breaker state without side effects (does not consume the probe).
+    pub fn breaker_state(&self) -> BreakerState {
+        let open = self.open_since.lock().unwrap();
+        match *open {
+            None => BreakerState::Closed,
+            Some(when) if when.elapsed() >= self.config.0.cooldown => BreakerState::HalfOpen,
+            Some(_) => BreakerState::Open,
+        }
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
+    }
+
+    pub fn consecutive_failures(&self) -> u64 {
+        self.consecutive.load(Ordering::Relaxed)
+    }
+}
 
 /// Dense `[seq, vocab]` logits returned by one forward pass.
 #[derive(Debug, Clone)]
@@ -140,6 +317,21 @@ pub trait LanguageModel {
     /// prefix caching override this.
     fn open_session(&self) -> anyhow::Result<Box<dyn ScoringSession + '_>> {
         Ok(Box::new(StatelessSession::new(self)))
+    }
+
+    /// Whether this model should receive new work right now. Models with a
+    /// circuit breaker ([`HealthTracker`]) override this; the default says
+    /// always healthy. Decode tasks consult it at step boundaries to drop
+    /// unhealthy drafters before wasting calls on them.
+    fn healthy(&self) -> bool {
+        true
+    }
+
+    /// The model's [`HealthTracker`], if it keeps one (engine-backed and
+    /// chaos-wrapped models do). Lets the metrics layer expose breaker
+    /// state without knowing concrete model types.
+    fn health_handle(&self) -> Option<Arc<HealthTracker>> {
+        None
     }
 }
 
@@ -316,6 +508,14 @@ impl<M: LanguageModel> LanguageModel for ForceStateless<M> {
     fn cost_ms(&self) -> f64 {
         self.0.cost_ms()
     }
+
+    fn healthy(&self) -> bool {
+        self.0.healthy()
+    }
+
+    fn health_handle(&self) -> Option<Arc<HealthTracker>> {
+        self.0.health_handle()
+    }
     // `open_session` deliberately NOT overridden: the default
     // StatelessSession is the point of this wrapper.
 }
@@ -392,6 +592,9 @@ pub struct GenerationOutput {
     /// Acceptance lengths at each intermediate verifier (chain order,
     /// excluding target), for the theory layer's `L_i` estimates.
     pub stage_accept_lengths: Vec<Vec<u32>>,
+    /// How many chain members were dropped mid-decode (graceful
+    /// degradation). Zero for a fault-free run.
+    pub degraded: u32,
 }
 
 impl GenerationOutput {
@@ -510,5 +713,56 @@ mod tests {
         assert_eq!(c.total_time(), Duration::from_millis(6));
         c.reset();
         assert_eq!(c.calls(), 0);
+    }
+
+    #[test]
+    fn breaker_opens_on_consecutive_failures() {
+        let h = HealthTracker::new(HealthConfig {
+            failure_threshold: 3,
+            cooldown: Duration::from_secs(60),
+        });
+        assert!(h.healthy());
+        h.record_failure(FaultKind::Transient);
+        h.record_failure(FaultKind::Transient);
+        assert!(h.healthy(), "below threshold the breaker stays closed");
+        h.record_failure(FaultKind::Timeout);
+        assert!(!h.healthy(), "threshold reached: breaker open");
+        assert_eq!(h.breaker_state(), BreakerState::Open);
+        assert_eq!(h.errors(), 3);
+        assert_eq!(h.timeouts(), 1);
+        assert_eq!(h.consecutive_failures(), 3);
+    }
+
+    #[test]
+    fn breaker_success_resets_streak() {
+        let h = HealthTracker::new(HealthConfig {
+            failure_threshold: 2,
+            cooldown: Duration::from_secs(60),
+        });
+        h.record_failure(FaultKind::Transient);
+        h.record_success();
+        h.record_failure(FaultKind::Transient);
+        assert!(h.healthy(), "success in between must clear the streak");
+        assert_eq!(h.consecutive_failures(), 1);
+        assert_eq!(h.errors(), 2, "cumulative error count is never reset");
+    }
+
+    #[test]
+    fn breaker_cooldown_grants_single_probe() {
+        let h = HealthTracker::new(HealthConfig {
+            failure_threshold: 1,
+            cooldown: Duration::from_millis(10),
+        });
+        h.record_failure(FaultKind::Lost);
+        assert!(!h.healthy());
+        std::thread::sleep(Duration::from_millis(15));
+        assert_eq!(h.breaker_state(), BreakerState::HalfOpen);
+        assert!(h.healthy(), "cooldown elapsed: one probe allowed");
+        assert!(!h.healthy(), "probe consumed: cooldown re-armed");
+        // A successful probe closes the breaker for good.
+        h.record_success();
+        assert!(h.healthy());
+        assert!(h.healthy());
+        assert_eq!(h.breaker_state(), BreakerState::Closed);
     }
 }

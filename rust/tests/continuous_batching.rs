@@ -5,7 +5,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use polyspec::coordinator::api::{Method, Request, Response};
+use polyspec::coordinator::api::{DecodeError, Method, Request, Response};
 use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher, QueueEntry};
 use polyspec::coordinator::kv::{KvConfig, KvManager};
 use polyspec::coordinator::metrics::Metrics;
@@ -40,7 +40,7 @@ enum Ev {
 
 fn record(
     log: &mut Vec<Ev>,
-    resps: &mut Vec<anyhow::Result<Response>>,
+    resps: &mut Vec<Result<Response, DecodeError>>,
     ev: BatchEvent<'_>,
 ) {
     match ev {
@@ -70,7 +70,7 @@ fn interactive_request_overtakes_long_batch_request() {
     let batcher = DynamicBatcher::new(BatchPolicy::default());
     batcher.push(short);
     let mut log: Vec<Ev> = Vec::new();
-    let mut out: Vec<anyhow::Result<Response>> = Vec::new();
+    let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
     run_batch(
         &chain,
         vec![QueueEntry::fresh(long, Instant::now())],
@@ -128,7 +128,7 @@ fn deltas_concatenate_to_response() {
     let req = mk_req(5, 40, TaskKind::Qa);
     kv.lock().unwrap().admit(5, 20).unwrap();
     let mut streamed: Vec<i32> = Vec::new();
-    let mut out: Vec<anyhow::Result<Response>> = Vec::new();
+    let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
     let batch = vec![QueueEntry::fresh(req, Instant::now())];
     run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| match ev {
         BatchEvent::Delta { tokens, .. } => streamed.extend_from_slice(tokens),
@@ -164,7 +164,7 @@ fn starved_batch_request_admitted_under_interactive_load() {
     }
     // max_live = 1 serializes admission, so completion order == admission
     // order; the starved batch request must come first.
-    let mut out: Vec<anyhow::Result<Response>> = Vec::new();
+    let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
     run_batch(&chain, Vec::new(), Some(&batcher), 1, &kv, &metrics, |ev| {
         if let BatchEvent::Done { response, .. } = ev {
             out.push(response);
@@ -194,7 +194,7 @@ fn kv_pool_smaller_than_one_request_fails_cleanly() {
     // Needs 3 + 100 + headroom tokens live by the end — far over the pool.
     let req = mk_req(9, 100, TaskKind::Qa);
     kv.lock().unwrap().admit(9, 20).unwrap();
-    let mut out: Vec<anyhow::Result<Response>> = Vec::new();
+    let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
     let batch = vec![QueueEntry::fresh(req, Instant::now())];
     run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| {
         if let BatchEvent::Done { response, .. } = ev {

@@ -1,0 +1,280 @@
+//! Fault-tolerant serving, end to end, under the deterministic chaos
+//! harness ([`polyspec::spec::chaos`]).
+//!
+//! These tests pin the failure-semantics contract documented in
+//! `coordinator`: drafter faults **degrade** the chain without touching
+//! the output distribution (byte-identical under deterministic verify
+//! rules), target faults **fail** the request with a typed
+//! [`DecodeError`] and provably release KV, and request deadlines cancel
+//! overdue work at step boundaries — never leaking pool space.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use polyspec::coordinator::api::{DecodeError, Method, Request, Response};
+use polyspec::coordinator::batcher::QueueEntry;
+use polyspec::coordinator::kv::{KvConfig, KvManager};
+use polyspec::coordinator::metrics::Metrics;
+use polyspec::coordinator::scheduler::{decode, run_batch, BatchEvent};
+use polyspec::spec::chaos::{ChaosModel, Fault};
+use polyspec::spec::mock::{mock_chain, MockModel};
+use polyspec::spec::types::{LanguageModel, VerifyRule};
+
+/// The standard mock chain (same weights as [`mock_chain`]) with scripted
+/// faults: each `(member, call_idx, fault)` wraps chain member `member`
+/// in a [`ChaosModel`] injecting `fault` at its `call_idx`-th call.
+/// Unscripted calls pass through bit-identically, so faulty and clean
+/// chains are comparable token for token.
+fn chaos_chain(seed: u64, faults: &[(usize, u64, Fault)]) -> Vec<Arc<dyn LanguageModel>> {
+    let spec = [("mock-target", 0.0f32), ("mock-mid", 0.35), ("mock-draft", 0.8)];
+    spec.iter()
+        .enumerate()
+        .map(|(i, &(name, noise))| {
+            let inner = MockModel::new(name, 512, 24, seed, noise);
+            let scripted: Vec<(u64, Fault)> =
+                faults.iter().filter(|f| f.0 == i).map(|f| (f.1, f.2)).collect();
+            if scripted.is_empty() {
+                Arc::new(inner) as Arc<dyn LanguageModel>
+            } else {
+                let mut chaotic = ChaosModel::new(inner);
+                for (at, fault) in scripted {
+                    chaotic = chaotic.fault_at(at, fault);
+                }
+                Arc::new(chaotic) as Arc<dyn LanguageModel>
+            }
+        })
+        .collect()
+}
+
+/// A greedy (deterministic-rule) request: every commit is the argmax of
+/// the target's filtered row, so output must survive any drafter fault.
+fn greedy_req(id: u64, method: Method, max_new: usize) -> Request {
+    let mut r = Request::new(id, vec![3, 1, 4], max_new);
+    r.method = method;
+    r.rule = VerifyRule::Greedy;
+    r.sampling.temperature = 0.0;
+    r.sampling.seed = 100 + id;
+    r
+}
+
+fn kv_pool() -> Arc<Mutex<KvManager>> {
+    Arc::new(Mutex::new(KvManager::new(KvConfig::default())))
+}
+
+fn drive(
+    chain: &[Arc<dyn LanguageModel>],
+    batch: Vec<QueueEntry>,
+    kv: &Arc<Mutex<KvManager>>,
+    metrics: &Arc<Metrics>,
+) -> Vec<Result<Response, DecodeError>> {
+    let mut out = Vec::new();
+    run_batch(chain, batch, None, 8, kv, metrics, |ev| {
+        if let BatchEvent::Done { response, .. } = ev {
+            out.push(response);
+        }
+    });
+    out
+}
+
+const ALL_METHODS: [Method; 3] = [
+    Method::Autoregressive,
+    Method::Dualistic { draft_k: 4 },
+    Method::Polybasic { draft_k: 4, mu: 4 },
+];
+
+/// THE degradation property, single-shot: a drafter failing mid-decode is
+/// dropped from the chain and the decode completes with byte-identical
+/// tokens to a fault-free run, for every Method under a deterministic
+/// verify rule. Only the methods that use the faulted drafter degrade.
+#[test]
+fn prop_drafter_fault_is_byte_invisible_under_greedy() {
+    for (m, method) in ALL_METHODS.iter().enumerate() {
+        let req = greedy_req(m as u64 + 1, *method, 32);
+        let clean = decode(&mock_chain(512, 24, 55), &req).unwrap();
+        // The deepest drafter fails its third call; all other calls clean.
+        let faulty_chain = chaos_chain(55, &[(2, 2, Fault::Fail)]);
+        let faulty = decode(&faulty_chain, &req).unwrap();
+        assert_eq!(
+            faulty.tokens, clean.tokens,
+            "{}: drafter fault must be invisible in greedy output",
+            method.label()
+        );
+        match method {
+            Method::Autoregressive => {
+                assert_eq!(faulty.degraded, 0, "vanilla decode has no drafters to lose")
+            }
+            _ => assert_eq!(
+                faulty.degraded, 1,
+                "{}: the failed drafter must be counted as dropped",
+                method.label()
+            ),
+        }
+    }
+}
+
+/// Full shrink: both drafters' engines die, the polybasic chain degrades
+/// member by member down to plain autoregressive decode on the target,
+/// and the greedy output equals a vanilla decode of the target alone.
+#[test]
+fn all_drafters_lost_degrades_polybasic_to_autoregressive() {
+    let poly = greedy_req(1, Method::Polybasic { draft_k: 4, mu: 4 }, 32);
+    let vanilla = greedy_req(1, Method::Autoregressive, 32);
+    let expected = decode(&mock_chain(512, 24, 71), &vanilla).unwrap();
+    let chain = chaos_chain(71, &[(1, 0, Fault::Lost), (2, 0, Fault::Lost)]);
+    let out = decode(&chain, &poly).unwrap();
+    assert_eq!(out.tokens, expected.tokens, "fully degraded chain must match vanilla decode");
+    assert_eq!(out.degraded, 2, "both drafters were lost");
+}
+
+/// A drafter fault under a stochastic verify rule still completes the
+/// request (the committed-token *distribution* is preserved even though
+/// the sampled path may differ from a fault-free run).
+#[test]
+fn stochastic_rule_completes_under_drafter_loss() {
+    let mut req = greedy_req(1, Method::Polybasic { draft_k: 4, mu: 4 }, 32);
+    req.rule = VerifyRule::Speculative;
+    req.sampling.temperature = 1.0;
+    let chain = chaos_chain(33, &[(2, 4, Fault::Lost)]);
+    let out = decode(&chain, &req).unwrap();
+    assert_eq!(out.tokens.len(), 32, "degraded decode must still fill the budget");
+    assert!(out.degraded >= 1, "the lost drafter must be counted");
+}
+
+/// THE serving acceptance property: a drafter engine dies mid-decode
+/// under a live batch. Every Method completes with tokens byte-identical
+/// to an uncontended fault-free decode, responses report the degradation,
+/// the server-wide counter accounts for it, and no KV leaks.
+#[test]
+fn prop_run_batch_survives_drafter_loss_byte_identically() {
+    let reqs: Vec<Request> = ALL_METHODS
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| greedy_req(i as u64 + 1, m, 24 + 4 * i))
+        .collect();
+    let expected: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| decode(&mock_chain(512, 24, 91), r).unwrap().tokens)
+        .collect();
+
+    // The deepest drafter's engine dies at its sixth call — mid-decode for
+    // the batch — and every later call against it fails too.
+    let chain = chaos_chain(91, &[(2, 5, Fault::Lost)]);
+    let kv = kv_pool();
+    let metrics = Arc::new(Metrics::default());
+    let now = Instant::now();
+    let batch: Vec<QueueEntry> = reqs
+        .iter()
+        .map(|r| {
+            kv.lock().unwrap().admit(r.id, 60).unwrap();
+            QueueEntry::fresh(r.clone(), now)
+        })
+        .collect();
+
+    let out = drive(&chain, batch, &kv, &metrics);
+
+    assert_eq!(out.len(), reqs.len());
+    let mut by_id: std::collections::BTreeMap<u64, Response> = Default::default();
+    for r in out {
+        let resp = r.expect("drafter loss must never fail a request");
+        by_id.insert(resp.id, resp);
+    }
+    for (req, want) in reqs.iter().zip(&expected) {
+        let resp = &by_id[&req.id];
+        assert_eq!(
+            &resp.tokens, want,
+            "request {} ({}): degradation must be invisible in greedy output",
+            req.id,
+            req.method.label()
+        );
+        match req.method {
+            Method::Autoregressive => assert_eq!(resp.degraded, 0),
+            _ => assert!(
+                resp.degraded >= 1,
+                "request {} ({}) must report the dropped drafter",
+                req.id,
+                req.method.label()
+            ),
+        }
+    }
+    assert!(
+        metrics.chains_degraded.load(Ordering::Relaxed) >= 2,
+        "both speculative chains dropped the lost drafter"
+    );
+    assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 0);
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(metrics.inflight(), 0);
+}
+
+/// A *target* engine loss is fatal — degradation cannot help, because only
+/// the target defines the output distribution. The request fails with the
+/// typed [`DecodeError::EngineLost`] and its KV is released.
+#[test]
+fn target_loss_fails_with_engine_lost_and_releases_kv() {
+    let chain = chaos_chain(17, &[(0, 2, Fault::Lost)]);
+    let req = greedy_req(1, Method::Polybasic { draft_k: 4, mu: 4 }, 32);
+    let kv = kv_pool();
+    let metrics = Arc::new(Metrics::default());
+    kv.lock().unwrap().admit(1, 60).unwrap();
+    let out = drive(&chain, vec![QueueEntry::fresh(req, Instant::now())], &kv, &metrics);
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].as_ref().unwrap_err(), &DecodeError::EngineLost);
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "failed request must release KV");
+    assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.inflight(), 0);
+}
+
+/// A hung target call surfaces as a deadline timeout ([`FaultKind::Timeout`]
+/// at the engine boundary), classified to [`DecodeError::Timeout`].
+#[test]
+fn hung_target_call_times_out_the_request() {
+    let chain = chaos_chain(17, &[(0, 1, Fault::Hang(Duration::from_millis(2)))]);
+    let req = greedy_req(1, Method::Dualistic { draft_k: 4 }, 32);
+    let kv = kv_pool();
+    let metrics = Arc::new(Metrics::default());
+    kv.lock().unwrap().admit(1, 60).unwrap();
+    let out = drive(&chain, vec![QueueEntry::fresh(req, Instant::now())], &kv, &metrics);
+    assert_eq!(out[0].as_ref().unwrap_err(), &DecodeError::Timeout);
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "failed request must release KV");
+    assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
+}
+
+/// A request whose deadline expired while queued is refused at admission:
+/// no session ever opens, no first token is recorded, and the router's KV
+/// reservation is returned.
+#[test]
+fn deadline_expired_in_queue_is_refused_at_admission() {
+    let chain = mock_chain(512, 24, 5);
+    let mut req = greedy_req(1, Method::Autoregressive, 16);
+    req.deadline = Some(Duration::from_millis(1));
+    let kv = kv_pool();
+    let metrics = Arc::new(Metrics::default());
+    kv.lock().unwrap().admit(1, 40).unwrap();
+    let entry = QueueEntry::fresh(req, Instant::now());
+    std::thread::sleep(Duration::from_millis(5)); // let the deadline lapse in queue
+    let out = drive(&chain, vec![entry], &kv, &metrics);
+    assert_eq!(out[0].as_ref().unwrap_err(), &DecodeError::Timeout);
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "reservation must be returned");
+    assert_eq!(metrics.deadline_cancellations.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.ttft_latency.count(), 0, "no decode ever started");
+}
+
+/// A deadline exceeded *mid-decode* (here: one slow engine call pushes the
+/// request past its budget) cancels the task at the next step boundary
+/// with [`DecodeError::Timeout`], dropping its sessions and releasing KV.
+#[test]
+fn deadline_exceeded_mid_decode_cancels_and_releases_kv() {
+    let chain = chaos_chain(5, &[(0, 0, Fault::Latency(Duration::from_millis(30)))]);
+    let mut req = greedy_req(1, Method::Autoregressive, 64);
+    req.deadline = Some(Duration::from_millis(8));
+    let kv = kv_pool();
+    let metrics = Arc::new(Metrics::default());
+    kv.lock().unwrap().admit(1, 40).unwrap();
+    let out = drive(&chain, vec![QueueEntry::fresh(req, Instant::now())], &kv, &metrics);
+    assert_eq!(out[0].as_ref().unwrap_err(), &DecodeError::Timeout);
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "cancellation must release KV");
+    assert_eq!(metrics.deadline_cancellations.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.inflight(), 0);
+}

@@ -11,7 +11,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use polyspec::coordinator::api::{Method, Request, Response};
+use polyspec::coordinator::api::{DecodeError, Method, Request, Response};
 use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher, QueueEntry};
 use polyspec::coordinator::kv::{KvConfig, KvManager};
 use polyspec::coordinator::metrics::Metrics;
@@ -65,7 +65,7 @@ fn drive(
     max_live: usize,
     kv: &Arc<Mutex<KvManager>>,
     metrics: &Arc<Metrics>,
-) -> (Vec<anyhow::Result<Response>>, Streams) {
+) -> (Vec<Result<Response, DecodeError>>, Streams) {
     let mut out = Vec::new();
     let mut streams: Streams = Default::default();
     run_batch(chain, batch, admit, max_live, kv, metrics, |ev| match ev {
