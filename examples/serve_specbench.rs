@@ -1,18 +1,24 @@
 //! End-to-end serving driver (the repository's E2E validation run):
 //! start the coordinator, replay a Poisson arrival stream of SpecBench
-//! queries against the polybasic chain, and report latency/throughput —
-//! the full L3 -> runtime -> AOT-kernel stack under load.
+//! queries — or a multi-turn conversation stream whose nested prompts
+//! exercise the paged-KV radix prefix cache — against the polybasic chain,
+//! and report latency/throughput. Writes a machine-readable
+//! `BENCH_serve.json` (throughput, TTFT, prefix-hit rate, restore cost)
+//! next to the working directory for CI trend tracking.
 //!
 //!   make artifacts && cargo run --release --example serve_specbench
 //!
 //! Env: POLYSPEC_RATE (req/s, default 2), POLYSPEC_REQUESTS (default 24),
-//!      POLYSPEC_METHOD (poly|dual|vanilla), POLYSPEC_WORKERS (default 1).
+//!      POLYSPEC_METHOD (poly|dual|vanilla), POLYSPEC_WORKERS (default 1),
+//!      POLYSPEC_MULTITURN (1 = conversation stream with shared prefixes).
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use polyspec::coordinator::{Method, Server, ServerConfig};
+use polyspec::runtime::json::Json;
 use polyspec::spec::stats::Welford;
-use polyspec::workload::ArrivalStream;
+use polyspec::workload::{ArrivalStream, ConversationStream, Query};
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -22,6 +28,7 @@ fn main() -> anyhow::Result<()> {
     let rate: f64 = env_or("POLYSPEC_RATE", 2.0);
     let n_requests: usize = env_or("POLYSPEC_REQUESTS", 24);
     let workers: usize = env_or("POLYSPEC_WORKERS", 1);
+    let multiturn: usize = env_or("POLYSPEC_MULTITURN", 0);
     let method = match std::env::var("POLYSPEC_METHOD").as_deref() {
         Ok("vanilla") => Method::Autoregressive,
         Ok("dual") => Method::Dualistic { draft_k: 4 },
@@ -35,18 +42,35 @@ fn main() -> anyhow::Result<()> {
     println!("server up (context window {})", server.seq_len());
 
     let vocab = 256;
-    let arrivals: Vec<_> = ArrivalStream::new(rate, vocab, 42).take(n_requests).collect();
+    // Either independent SpecBench queries (default) or multi-turn
+    // conversations, where each follow-up's prompt extends the previous
+    // turn's transcript — the workload the radix prefix cache serves from
+    // shared blocks instead of fresh allocations.
+    let arrivals: Vec<(Duration, Query)> = if multiturn != 0 {
+        // Size transcript caps to the serving window: a follow-up prompt can
+        // reach max_prompt + 24 chunk tokens and still needs output budget
+        // plus speculative headroom inside seq_len to clear admission.
+        let max_prompt = server.seq_len().saturating_sub(96).max(48);
+        ConversationStream::new(rate, vocab, 42)
+            .with_caps(max_prompt, 4)
+            .take(n_requests)
+            .map(|a| (a.at, a.query))
+            .collect()
+    } else {
+        ArrivalStream::new(rate, vocab, 42).take(n_requests).map(|a| (a.at, a.query)).collect()
+    };
+    let prompt_tokens: usize = arrivals.iter().map(|(_, q)| q.prompt.len()).sum();
     let start = Instant::now();
     let mut receivers = Vec::new();
     let mut rejected = 0usize;
 
-    for a in arrivals {
+    for (at, query) in arrivals {
         // Open-loop load generation: honor the arrival timestamps.
-        if let Some(wait) = a.at.checked_sub(start.elapsed()) {
+        if let Some(wait) = at.checked_sub(start.elapsed()) {
             std::thread::sleep(wait);
         }
-        match server.submit(a.query.prompt.clone(), a.query.max_new, method, Some(a.query.task)) {
-            Ok(rx) => receivers.push((a.query.task, rx)),
+        match server.submit(query.prompt.clone(), query.max_new, method, Some(query.task)) {
+            Ok(rx) => receivers.push(rx),
             Err(e) => {
                 rejected += 1;
                 eprintln!("rejected: {e}");
@@ -55,11 +79,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut e2e = Welford::default();
+    let mut ttft = Welford::default();
     let mut tokens = 0usize;
     let mut mu = Welford::default();
     let mut failed = 0usize;
     let mut completed = 0usize;
-    for (_, rx) in &receivers {
+    for rx in &receivers {
         // The final channel carries Result<Response, DecodeError>: a decode
         // failure arrives as a typed value (timeout / engine lost /
         // saturated / internal), not a channel close.
@@ -73,22 +98,68 @@ fn main() -> anyhow::Result<()> {
         };
         completed += 1;
         e2e.push((resp.queue_time + resp.service_time).as_secs_f64() * 1e3);
+        if let Some(t) = resp.ttft {
+            ttft.push(t.as_secs_f64() * 1e3);
+        }
         tokens += resp.tokens.len();
         if resp.mean_accept > 0.0 {
             mu.push(resp.mean_accept);
         }
     }
     let wall = start.elapsed();
+    let throughput = tokens as f64 / wall.as_secs_f64();
 
     println!("\n== serve_specbench report ==");
     println!("requests: {completed} completed, {failed} failed, {rejected} rejected");
     println!("wall time: {:.2}s  offered rate: {rate}/s", wall.as_secs_f64());
-    println!("throughput: {:.1} tok/s  ({tokens} tokens)", tokens as f64 / wall.as_secs_f64());
+    println!("throughput: {throughput:.1} tok/s  ({tokens} tokens)");
     println!("e2e latency: mean {:.0} ms (n={})", e2e.mean(), e2e.count());
+    println!("ttft: mean {:.0} ms (n={})", ttft.mean(), ttft.count());
     println!("mean acceptance length: {:.2}", mu.mean());
     println!("KV pool utilization now: {:.1}%", server.kv_utilization() * 100.0);
 
     let metrics = server.shutdown();
-    println!("\nmetrics snapshot:\n{}", metrics.snapshot());
+    let snapshot = metrics.snapshot();
+    println!("\nmetrics snapshot:\n{snapshot}");
+
+    // Machine-readable summary for CI trend tracking. Prefix-hit rate is
+    // the fraction of offered prompt tokens the radix cache served from
+    // already-resident blocks; restore cost contrasts the swap tier's
+    // avoided recompute against what discard-path resumes re-scored.
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let hit_tokens = metrics.prefix_hit_tokens.load(ord) as f64;
+    let hit_rate = if prompt_tokens > 0 { hit_tokens / prompt_tokens as f64 } else { 0.0 };
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    let mut put = |k: &str, v: Json| {
+        report.insert(k.to_string(), v);
+    };
+    put("method", Json::Str(method.label().to_string()));
+    put("multiturn", Json::Bool(multiturn != 0));
+    put("offered_rate_per_s", Json::Num(rate));
+    put("requests_completed", Json::Num(completed as f64));
+    put("requests_failed", Json::Num(failed as f64));
+    put("requests_rejected", Json::Num(rejected as f64));
+    put("wall_s", Json::Num(wall.as_secs_f64()));
+    put("throughput_tok_s", Json::Num(throughput));
+    put("e2e_ms_mean", Json::Num(e2e.mean()));
+    put("ttft_ms_mean", Json::Num(ttft.mean()));
+    put("mean_accept", Json::Num(mu.mean()));
+    put("prompt_tokens_offered", Json::Num(prompt_tokens as f64));
+    put("prefix_hit_tokens", Json::Num(hit_tokens));
+    put("prefix_hit_rate", Json::Num(hit_rate));
+    put("cow_splits", Json::Num(metrics.cow_splits.load(ord) as f64));
+    put("swapped_blocks", Json::Num(metrics.swapped_blocks.load(ord) as f64));
+    put(
+        "restore_tokens_saved",
+        Json::Num(metrics.restore_tokens_saved.load(ord) as f64),
+    );
+    put(
+        "wasted_recompute_tokens",
+        Json::Num(metrics.wasted_recompute_tokens.load(ord) as f64),
+    );
+    put("metrics", snapshot);
+    let json = Json::Obj(report);
+    std::fs::write("BENCH_serve.json", format!("{json}\n"))?;
+    println!("\nwrote BENCH_serve.json");
     Ok(())
 }

@@ -388,6 +388,7 @@ mod tests {
                 inflight: crate::spec::task::InflightState::None,
                 live_models: vec![0],
                 degraded: 0,
+                swap: None,
             },
             streamed: 0,
             ttft: None,

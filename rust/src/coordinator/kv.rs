@@ -1,35 +1,57 @@
-//! Paged KV-cache manager.
+//! Paged KV-cache manager: block tables, prefix sharing, suspend-to-swap.
 //!
 //! The paper (§4.6) identifies multi-model KV footprint as the binding
 //! resource of polybasic serving: every chain member keeps its own cache,
-//! so capacity scales with the chain.  Our AOT substrate recomputes
-//! attention per forward (DESIGN.md §7), so the *bytes* here are an
-//! accounting model rather than live buffers — but the allocator, admission
-//! control and utilization accounting are the real thing and gate the
-//! router exactly as a vLLM-style block manager would.
+//! so capacity scales with the chain. This manager is the admission
+//! gatekeeper over a real vLLM-style paged layer
+//! ([`coordinator::paged`](super::paged)): a sequence's allocation is a
+//! **block table** — an ordered list of refcounted [`BlockId`]s from a
+//! free-list [`BlockPool`] — not a counter. Our AOT substrate recomputes
+//! attention per forward (DESIGN.md §7), so block *contents* are simulated,
+//! but allocation, sharing, eviction and swap capacity are the real
+//! mechanics and gate the router exactly as a device-resident block manager
+//! would.
 //!
-//! Under continuous batching a sequence's allocation tracks its **live
-//! length**: the router admits `prompt + speculative headroom`, and the
-//! step scheduler [`grow`](KvManager::grow)s the allocation as tokens
-//! commit ([`seq_tokens`](KvManager::seq_tokens) reports the tracked
-//! length).  Admission therefore deliberately overcommits: it reserves
-//! what a request *holds*, not its worst-case finished size, so more
-//! concurrent sequences fit.  The bill comes due when a mid-decode `grow`
-//! finds the pool saturated.  The scheduler resolves that by
-//! **preemption, not failure**: it suspends a victim task (batch-class
-//! before interactive, largest holding first — see
-//! `scheduler::select_victim`), [`release`](KvManager::release)s the
-//! victim's blocks, and re-queues it with its full decode state; the
-//! victim re-reserves `prompt + committed + headroom` through
-//! [`admit`](KvManager::admit) once space frees and resumes
-//! byte-identically.  A `grow` error therefore never surfaces to a client
-//! unless the pool is smaller than one lone request's footprint
-//! ([`fits`](KvManager::fits) is false) — genuine capacity overflow, the
-//! only case that still fails.
+//! **Prefix sharing.** Prompt prefixes are cached in a [`RadixCache`]
+//! keyed on full-block token chunks. [`admit_fresh_prefixed`]
+//! (KvManager::admit_fresh_prefixed) maps a new request's shared prefix
+//! onto cached blocks (one incref each) and allocates only the unshared
+//! suffix; a prompt that diverges *inside* a cached block — or ends
+//! mid-block and later commits past it — triggers a **copy-on-write
+//! split** (at admission, or lazily at the first [`grow`](KvManager::grow)
+//! past the shared prefix). Finished sequences re-register their full
+//! content via [`release_cached`](KvManager::release_cached), so multi-turn
+//! conversations find each prior turn's transcript already mapped. Cached
+//! blocks nobody maps are reclaimed LRU-subtree-first **on demand**: the
+//! cache is free capacity, never admission pressure.
+//!
+//! **Live-length admission, preemption, swap.** Under continuous batching
+//! an allocation tracks its live length: the router admits `prompt +
+//! speculative headroom`, the step scheduler [`grow`](KvManager::grow)s it
+//! as tokens commit, and admission deliberately overcommits. When a
+//! mid-decode grow saturates the pool the scheduler preempts a victim
+//! (see `scheduler::select_victim`); [`suspend`](KvManager::suspend)
+//! releases the victim's table, earmarks its re-admission footprint as
+//! **resume debt** that fresh admissions must leave free, and — new in the
+//! paged design — moves the footprint into a bounded [`SwapPool`] when it
+//! fits, returning a [`SwapHandle`] carried in the victim's `ResumeState`.
+//! [`restore`](KvManager::restore) later redeems the handle for a
+//! re-admission with **zero wasted recompute**; a full swap tier falls
+//! back to the discard path (resume re-scores its prefix, the PR 5
+//! behavior). A grow error still never surfaces to a client unless the
+//! pool is smaller than one lone request's footprint
+//! ([`fits`](KvManager::fits) is false).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
+
+use crate::spec::task::SwapHandle;
+use crate::spec::types::Token;
+
+use super::metrics::Metrics;
+use super::paged::{BlockId, BlockPool, RadixCache, SwapPool};
 
 /// Block-granular allocator configuration.
 #[derive(Debug, Clone, Copy)]
@@ -41,25 +63,39 @@ pub struct KvConfig {
     /// Bytes of KV per token *per chain member* (2 x layers x d_model x 4,
     /// summed over the chain), used for byte-level reporting.
     pub bytes_per_token: usize,
+    /// Blocks in the bounded suspend-to-swap tier (0 disables swap:
+    /// preemption falls back to discard-and-re-score).
+    pub swap_blocks: usize,
 }
 
 impl Default for KvConfig {
     fn default() -> Self {
-        Self { block_size: 16, total_blocks: 256, bytes_per_token: 0 }
+        Self { block_size: 16, total_blocks: 256, bytes_per_token: 0, swap_blocks: 0 }
     }
 }
 
+/// One sequence's allocation: its block table plus sharing state.
 #[derive(Debug, Clone)]
 struct SeqAlloc {
-    blocks: usize,
+    /// Physical blocks, in token order. `table[j]` backs tokens
+    /// `[j*block_size, (j+1)*block_size)`.
+    table: Vec<BlockId>,
+    /// Reserved capacity in tokens (live length + headroom).
     tokens: usize,
+    /// Tokens mapped from the prefix cache at admission.
+    shared_prefix: usize,
+    /// The tail shared block ends mid-block and has not been split yet:
+    /// the first `grow` past the shared prefix performs the CoW split.
+    cow_pending: bool,
 }
 
-/// Tracks block allocation per active sequence.
+/// Tracks block allocation per active sequence over the paged subsystem.
 #[derive(Debug)]
 pub struct KvManager {
     cfg: KvConfig,
-    free_blocks: usize,
+    pool: BlockPool,
+    radix: RadixCache,
+    swap: SwapPool,
     seqs: BTreeMap<u64, SeqAlloc>,
     /// High-water mark of allocated blocks (reporting).
     peak_blocks: usize,
@@ -72,26 +108,86 @@ pub struct KvManager {
     /// the resumed lane's queue priority, enforced at the KV altitude
     /// where the contention actually is.
     resume_debt_blocks: usize,
+    // Paged-subsystem meters (mirrored into `metrics` when attached).
+    prefix_hit_tokens: u64,
+    cow_splits: u64,
+    swapped_out_blocks: u64,
+    restore_tokens_saved: u64,
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl KvManager {
     pub fn new(cfg: KvConfig) -> Self {
         Self {
-            free_blocks: cfg.total_blocks,
+            pool: BlockPool::new(cfg.total_blocks),
+            radix: RadixCache::new(cfg.block_size),
+            swap: SwapPool::new(cfg.swap_blocks),
             cfg,
             seqs: BTreeMap::new(),
             peak_blocks: 0,
             resume_debt_blocks: 0,
+            prefix_hit_tokens: 0,
+            cow_splits: 0,
+            swapped_out_blocks: 0,
+            restore_tokens_saved: 0,
+            metrics: None,
         }
+    }
+
+    /// Mirror the paged-subsystem meters (prefix hits, CoW splits, swap
+    /// traffic) into a server-wide [`Metrics`] registry.
+    pub fn attach_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = Some(metrics);
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.cfg.block_size)
     }
 
+    /// Blocks obtainable right now: free-list blocks plus cached blocks no
+    /// sequence maps (reclaimed LRU-first on demand). The cache therefore
+    /// never costs an admission the uncached allocator would accept.
+    fn available(&self) -> usize {
+        self.pool.free_len() + self.radix.evictable(&self.pool)
+    }
+
+    /// Take `n` physical blocks, evicting unreferenced cache entries as
+    /// needed. Callers check [`available`](Self::available) first.
+    fn take_blocks(&mut self, n: usize) -> Result<Vec<BlockId>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if self.pool.free_len() == 0 && self.radix.evict_lru(&mut self.pool) == 0 {
+                for b in out {
+                    self.pool.decref(b);
+                }
+                bail!("KV pool exhausted mid-allocation (availability changed)");
+            }
+            out.push(self.pool.alloc().expect("block free after eviction"));
+        }
+        Ok(out)
+    }
+
+    fn bump_peak(&mut self) {
+        self.peak_blocks = self.peak_blocks.max(self.allocated_blocks());
+    }
+
+    fn note_prefix_hit(&mut self, tokens: usize) {
+        self.prefix_hit_tokens += tokens as u64;
+        if let Some(m) = &self.metrics {
+            m.record_prefix_hit(tokens);
+        }
+    }
+
+    fn note_cow_split(&mut self) {
+        self.cow_splits += 1;
+        if let Some(m) = &self.metrics {
+            m.record_cow_split();
+        }
+    }
+
     /// Can a sequence of `tokens` total length be admitted right now?
     pub fn can_admit(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens) <= self.free_blocks
+        self.blocks_for(tokens) <= self.available()
     }
 
     /// Could a sequence of `tokens` total length *ever* fit, i.e. with the
@@ -101,21 +197,23 @@ impl KvManager {
     }
 
     /// Reserve blocks for a new sequence (prompt + planned generation).
+    /// Count-based (no prefix sharing): the re-admission path for resumed
+    /// and swap-restored sequences, and the pre-paged API surface.
     pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<()> {
         if self.seqs.contains_key(&seq) {
             bail!("sequence {seq} already admitted");
         }
         let need = self.blocks_for(tokens);
-        if need > self.free_blocks {
+        if need > self.available() {
             bail!(
                 "KV pool exhausted: need {need} blocks, {} free of {}",
-                self.free_blocks,
+                self.available(),
                 self.cfg.total_blocks
             );
         }
-        self.free_blocks -= need;
-        self.seqs.insert(seq, SeqAlloc { blocks: need, tokens });
-        self.peak_blocks = self.peak_blocks.max(self.allocated_blocks());
+        let table = self.take_blocks(need)?;
+        self.seqs.insert(seq, SeqAlloc { table, tokens, shared_prefix: 0, cow_pending: false });
+        self.bump_peak();
         Ok(())
     }
 
@@ -127,15 +225,116 @@ impl KvManager {
     pub fn admit_fresh(&mut self, seq: u64, tokens: usize) -> Result<()> {
         let owed = self.resume_debt_blocks;
         let need = self.blocks_for(tokens);
-        if need + owed > self.free_blocks {
+        if need + owed > self.available() {
             bail!(
                 "KV pool exhausted: need {need} blocks, {} free of {} \
                  ({owed} blocks owed to preempted requests)",
-                self.free_blocks,
+                self.available(),
                 self.cfg.total_blocks
             );
         }
         self.admit(seq, tokens)
+    }
+
+    /// Prefix-aware fresh admission (the router's paged path): reserve
+    /// `tokens` of capacity for `seq`, mapping the longest cached prefix of
+    /// `prompt` onto shared blocks and allocating only the unshared
+    /// remainder. Registers the prompt's full blocks for future sharing.
+    /// Honors resume debt like [`admit_fresh`](Self::admit_fresh). Returns
+    /// the shared token count.
+    pub fn admit_fresh_prefixed(
+        &mut self,
+        seq: u64,
+        prompt: &[Token],
+        tokens: usize,
+    ) -> Result<usize> {
+        self.admit_prefixed_inner(seq, prompt, tokens, true)
+    }
+
+    /// Prefix-aware re-admission for a resumed (not swap-restored)
+    /// sequence: `content` is `prompt + committed`. Ignores resume debt —
+    /// the caller IS the debt. Returns the shared token count.
+    pub fn admit_resumed_prefixed(
+        &mut self,
+        seq: u64,
+        content: &[Token],
+        tokens: usize,
+    ) -> Result<usize> {
+        self.admit_prefixed_inner(seq, content, tokens, false)
+    }
+
+    fn admit_prefixed_inner(
+        &mut self,
+        seq: u64,
+        content: &[Token],
+        tokens: usize,
+        honor_debt: bool,
+    ) -> Result<usize> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already admitted");
+        }
+        let b = self.cfg.block_size;
+        let tokens = tokens.max(content.len());
+        let pm = self.radix.lookup(content);
+        let m = pm.tokens;
+        let mut shared = pm.blocks;
+        let mut cow_pending = false;
+        let mut split_now = false;
+        if m % b != 0 {
+            if m < content.len() {
+                // The prompt diverges *inside* the matched tail block:
+                // writing the divergent rows needs a private copy now.
+                shared.pop();
+                split_now = true;
+            } else {
+                // The whole content matched but ends mid-block: share the
+                // tail copy-on-write; the first grow past it splits.
+                cow_pending = true;
+            }
+        }
+        // Pin the shared blocks before sizing the remainder, so on-demand
+        // eviction (and the availability math) can no longer reclaim them.
+        for &blk in &shared {
+            self.pool.incref(blk);
+        }
+        let need_new = self.blocks_for(tokens) - shared.len();
+        let owed = if honor_debt { self.resume_debt_blocks } else { 0 };
+        if need_new + owed > self.available() {
+            for &blk in &shared {
+                self.pool.decref(blk);
+            }
+            bail!(
+                "KV pool exhausted: need {need_new} blocks, {} free of {} \
+                 ({owed} blocks owed to preempted requests)",
+                self.available(),
+                self.cfg.total_blocks
+            );
+        }
+        let fresh = match self.take_blocks(need_new) {
+            Ok(f) => f,
+            Err(e) => {
+                for &blk in &shared {
+                    self.pool.decref(blk);
+                }
+                return Err(e);
+            }
+        };
+        let mut table = shared;
+        table.extend(fresh);
+        if split_now {
+            self.note_cow_split();
+        }
+        if m > 0 {
+            self.note_prefix_hit(m);
+        }
+        self.seqs
+            .insert(seq, SeqAlloc { table, tokens, shared_prefix: m, cow_pending });
+        // Register the content's full blocks so later requests share them.
+        // (Cloning the small table sidesteps a seqs/pool split borrow.)
+        let snapshot = self.seqs[&seq].table.clone();
+        self.radix.register(content, &snapshot, &mut self.pool);
+        self.bump_peak();
+        Ok(m)
     }
 
     /// Record that a preempted request will need `tokens` of pool to
@@ -159,36 +358,121 @@ impl KvManager {
         self.resume_debt_blocks
     }
 
-    /// Grow an existing sequence to `tokens` total length.
+    /// Grow an existing sequence to `tokens` total length. Performs the
+    /// pending copy-on-write split on the first grow past a mid-block
+    /// shared prefix (growth implies commits beyond the prompt). On
+    /// failure the allocation is unchanged.
     pub fn grow(&mut self, seq: u64, tokens: usize) -> Result<()> {
-        let need = self.blocks_for(tokens);
-        let alloc = match self.seqs.get_mut(&seq) {
-            Some(a) => a,
-            None => bail!("sequence {seq} not admitted"),
+        let (cur_blocks, split) = {
+            let alloc = match self.seqs.get(&seq) {
+                Some(a) => a,
+                None => bail!("sequence {seq} not admitted"),
+            };
+            if tokens < alloc.tokens {
+                bail!("sequence {seq} cannot shrink via grow()");
+            }
+            // A pending CoW tail whose cache entry was meanwhile evicted
+            // (we are the only mapper) can be written in place: no split.
+            let split = alloc.cow_pending
+                && self.pool.refcount(alloc.table[alloc.shared_prefix / self.cfg.block_size]) > 1;
+            (alloc.table.len(), split)
         };
-        if tokens < alloc.tokens {
-            bail!("sequence {seq} cannot shrink via grow()");
-        }
-        let extra = need.saturating_sub(alloc.blocks);
-        if extra > self.free_blocks {
+        let extra = self.blocks_for(tokens).saturating_sub(cur_blocks);
+        if extra + usize::from(split) > self.available() {
             bail!("KV pool exhausted growing seq {seq}");
         }
-        self.free_blocks -= extra;
-        alloc.blocks += extra;
+        let mut fresh = self.take_blocks(extra + usize::from(split))?;
+        if split {
+            let copy = fresh.pop().expect("reserved the split block");
+            let old = {
+                let alloc = self.seqs.get_mut(&seq).expect("checked above");
+                let idx = alloc.shared_prefix / self.cfg.block_size;
+                let old = std::mem::replace(&mut alloc.table[idx], copy);
+                alloc.cow_pending = false;
+                old
+            };
+            self.pool.decref(old);
+            self.note_cow_split();
+        }
+        let alloc = self.seqs.get_mut(&seq).expect("checked above");
+        alloc.table.append(&mut fresh);
         alloc.tokens = tokens;
-        self.peak_blocks = self.peak_blocks.max(self.allocated_blocks());
+        alloc.cow_pending = false;
+        self.bump_peak();
         Ok(())
     }
 
-    /// Release a finished sequence.
+    /// Release a finished (or failed) sequence without caching its blocks.
     pub fn release(&mut self, seq: u64) -> Result<()> {
         match self.seqs.remove(&seq) {
             Some(a) => {
-                self.free_blocks += a.blocks;
+                for b in a.table {
+                    self.pool.decref(b);
+                }
                 Ok(())
             }
             None => bail!("sequence {seq} not admitted"),
         }
+    }
+
+    /// Release a **successfully finished** sequence, first registering its
+    /// content (`prompt + committed`) in the prefix cache so later
+    /// requests — multi-turn follow-ups above all — map the transcript's
+    /// blocks instead of re-allocating them. Cached blocks remain
+    /// allocated but are reclaimed on demand; they never block admission.
+    pub fn release_cached(&mut self, seq: u64, content: &[Token]) -> Result<()> {
+        let snapshot = match self.seqs.get(&seq) {
+            Some(a) => a.table.clone(),
+            None => bail!("sequence {seq} not admitted"),
+        };
+        self.radix.register(content, &snapshot, &mut self.pool);
+        self.release(seq)
+    }
+
+    /// Preempt `seq` in one atomic operation: release its table, earmark
+    /// `resume_need` tokens of resume debt, and — when the bounded swap
+    /// tier can hold the whole footprint — reserve swap space for
+    /// `content_tokens` tokens, returning the handle the resume path
+    /// redeems via [`restore`](Self::restore). `None` means the discard
+    /// path: the resume will re-score its prefix.
+    pub fn suspend(
+        &mut self,
+        seq: u64,
+        content_tokens: usize,
+        resume_need: usize,
+    ) -> Result<Option<SwapHandle>> {
+        self.release(seq)?;
+        self.resume_debt_blocks += self.blocks_for(resume_need);
+        let blocks = self.blocks_for(content_tokens);
+        let handle = self.swap.reserve(blocks, content_tokens);
+        if let Some(h) = &handle {
+            self.swapped_out_blocks += h.blocks as u64;
+            if let Some(m) = &self.metrics {
+                m.record_swap_out(h.blocks);
+            }
+        }
+        Ok(handle)
+    }
+
+    /// Re-admit a swapped-out sequence at `tokens` total capacity, freeing
+    /// its swap reservation and crediting the recompute the swap saved.
+    /// On failure (pool momentarily busy) the reservation is untouched —
+    /// the caller defers and retries. The caller settles the resume debt
+    /// exactly as on the discard path.
+    pub fn restore(&mut self, seq: u64, handle: &SwapHandle, tokens: usize) -> Result<()> {
+        self.admit(seq, tokens)?;
+        self.swap.free(handle);
+        self.restore_tokens_saved += handle.tokens as u64;
+        if let Some(m) = &self.metrics {
+            m.record_restore_saved(handle.tokens);
+        }
+        Ok(())
+    }
+
+    /// Drop a swap reservation without restoring (the request died:
+    /// deadline, capacity overflow, failed re-open).
+    pub fn discard_swap(&mut self, handle: &SwapHandle) {
+        self.swap.free(handle);
     }
 
     /// Tracked live length (tokens) of an admitted sequence, if any.
@@ -200,15 +484,57 @@ impl KvManager {
     /// preemption policy ranks victims by (evicting the largest holding
     /// frees the most pool).
     pub fn seq_blocks(&self, seq: u64) -> Option<usize> {
-        self.seqs.get(&seq).map(|a| a.blocks)
+        self.seqs.get(&seq).map(|a| a.table.len())
+    }
+
+    /// The sequence's physical block table (sharing-visible: two sequences
+    /// mapping the same prefix report the same leading [`BlockId`]s).
+    pub fn seq_block_ids(&self, seq: u64) -> Option<Vec<BlockId>> {
+        self.seqs.get(&seq).map(|a| a.table.clone())
+    }
+
+    /// Pool refcount of a block (sequence mappings + one per cache entry).
+    pub fn block_refcount(&self, block: BlockId) -> u32 {
+        self.pool.refcount(block)
+    }
+
+    /// Blocks held by the prefix cache (allocated but reclaimable unless
+    /// also mapped by a live sequence).
+    pub fn cached_blocks(&self) -> usize {
+        self.radix.len()
+    }
+
+    /// Swap-tier blocks currently holding suspended sequences.
+    pub fn swapped_blocks(&self) -> usize {
+        self.swap.used_blocks()
+    }
+
+    /// Cumulative prompt/content tokens served from the prefix cache.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
+    }
+
+    /// Cumulative copy-on-write block splits.
+    pub fn cow_splits(&self) -> u64 {
+        self.cow_splits
+    }
+
+    /// Cumulative blocks moved to the swap tier at preemption.
+    pub fn swapped_out_blocks(&self) -> u64 {
+        self.swapped_out_blocks
+    }
+
+    /// Cumulative recompute tokens saved by swap restores.
+    pub fn restore_tokens_saved(&self) -> u64 {
+        self.restore_tokens_saved
     }
 
     pub fn allocated_blocks(&self) -> usize {
-        self.cfg.total_blocks - self.free_blocks
+        self.cfg.total_blocks - self.pool.free_len()
     }
 
     pub fn free_blocks(&self) -> usize {
-        self.free_blocks
+        self.pool.free_len()
     }
 
     pub fn active_seqs(&self) -> usize {
@@ -219,8 +545,17 @@ impl KvManager {
         self.peak_blocks
     }
 
+    /// Fraction of the pool pinned by live sequences. Cached-but-unmapped
+    /// blocks are reclaimable on demand and count as free — matching the
+    /// admission math, so a drained server reads 0% even with a warm
+    /// prefix cache. A zero-block pool is 0% utilized, not NaN.
     pub fn utilization(&self) -> f64 {
-        self.allocated_blocks() as f64 / self.cfg.total_blocks as f64
+        if self.cfg.total_blocks == 0 {
+            return 0.0;
+        }
+        let pinned =
+            self.cfg.total_blocks - self.pool.free_len() - self.radix.evictable(&self.pool);
+        pinned as f64 / self.cfg.total_blocks as f64
     }
 
     /// Allocated KV bytes under the configured per-token cost.
@@ -239,7 +574,12 @@ mod tests {
     use super::*;
 
     fn mgr(blocks: usize) -> KvManager {
-        KvManager::new(KvConfig { block_size: 4, total_blocks: blocks, bytes_per_token: 8 })
+        KvManager::new(KvConfig {
+            block_size: 4,
+            total_blocks: blocks,
+            bytes_per_token: 8,
+            swap_blocks: 0,
+        })
     }
 
     #[test]
@@ -333,5 +673,202 @@ mod tests {
         m.settle_resume_debt(6);
         m.settle_resume_debt(6);
         assert_eq!(m.resume_debt(), 0);
+    }
+
+    #[test]
+    fn utilization_is_zero_not_nan_on_empty_pool() {
+        let m = KvManager::new(KvConfig {
+            block_size: 4,
+            total_blocks: 0,
+            bytes_per_token: 8,
+            swap_blocks: 0,
+        });
+        assert_eq!(m.utilization(), 0.0, "zero-block pool must report 0.0, not NaN");
+        assert!(!m.can_admit(1));
+        let mut m = mgr(4);
+        m.admit(1, 8).unwrap();
+        assert!((m.utilization() - 0.5).abs() < 1e-12);
+        // Cached-but-unmapped blocks are reclaimable: a drained pool with a
+        // warm cache reads 0% utilized, matching what admission sees.
+        let p: Vec<Token> = (0..8).collect();
+        m.release(1).unwrap();
+        m.admit_fresh_prefixed(2, &p, 8).unwrap();
+        m.release_cached(2, &p).unwrap();
+        assert_eq!(m.active_seqs(), 0);
+        assert!(m.cached_blocks() > 0);
+        assert_eq!(m.utilization(), 0.0, "warm cache must not read as utilization");
+    }
+
+    /// THE refcount acceptance criterion: two requests sharing a K-token
+    /// prefix consume strictly fewer than 2x the blocks of one.
+    #[test]
+    fn prefix_sharing_consumes_less_than_twice_the_blocks() {
+        let mut m = mgr(32);
+        let prompt: Vec<Token> = (0..16).collect(); // 4 full blocks
+        let one = m.admit_fresh_prefixed(1, &prompt, 24).unwrap(); // 6 blocks
+        assert_eq!(one, 0, "cold cache: nothing shared yet");
+        let solo_blocks = m.seq_blocks(1).unwrap();
+        assert_eq!(solo_blocks, 6);
+        assert_eq!(m.cached_blocks(), 4, "prompt's full blocks registered");
+
+        let shared = m.admit_fresh_prefixed(2, &prompt, 24).unwrap();
+        assert_eq!(shared, 16, "whole prompt served from cache");
+        assert_eq!(m.prefix_hit_tokens(), 16);
+        assert!(
+            m.allocated_blocks() < 2 * solo_blocks,
+            "sharing must beat 2x: {} vs {}",
+            m.allocated_blocks(),
+            2 * solo_blocks
+        );
+        // The physical tables overlap on the prompt blocks...
+        let t1 = m.seq_block_ids(1).unwrap();
+        let t2 = m.seq_block_ids(2).unwrap();
+        assert_eq!(t1[..4], t2[..4], "prompt blocks must be the same physical blocks");
+        assert_ne!(t1[4..], t2[4..], "headroom blocks are private");
+        // ...with refcounts seq1 + seq2 + cache.
+        for &b in &t1[..4] {
+            assert_eq!(m.block_refcount(b), 3);
+        }
+        // Releasing both leaves only the cache's references.
+        m.release(2).unwrap();
+        m.release(1).unwrap();
+        assert_eq!(m.active_seqs(), 0);
+        assert_eq!(m.allocated_blocks(), m.cached_blocks());
+        for &b in &t1[..4] {
+            assert_eq!(m.block_refcount(b), 1, "cache ref survives the sequences");
+        }
+    }
+
+    #[test]
+    fn divergence_inside_a_block_splits_copy_on_write_at_admission() {
+        let mut m = mgr(32);
+        let p1: Vec<Token> = (0..12).collect(); // 3 full blocks
+        m.admit_fresh_prefixed(1, &p1, 12).unwrap();
+        // Diverges at token 10, inside the third block.
+        let mut p2 = p1.clone();
+        p2[10] = 99;
+        p2[11] = 98;
+        let shared = m.admit_fresh_prefixed(2, &p2, 12).unwrap();
+        assert_eq!(shared, 10, "2 full blocks + 2 tokens into the third");
+        assert_eq!(m.cow_splits(), 1, "mid-block divergence forces a private copy");
+        let t1 = m.seq_block_ids(1).unwrap();
+        let t2 = m.seq_block_ids(2).unwrap();
+        assert_eq!(t1[..2], t2[..2]);
+        assert_ne!(t1[2], t2[2], "the divergent block must be private");
+    }
+
+    #[test]
+    fn mid_block_prefix_splits_lazily_on_first_grow() {
+        let mut m = mgr(32);
+        let p1: Vec<Token> = (0..12).collect();
+        m.admit_fresh_prefixed(1, &p1, 12).unwrap();
+        let t1 = m.seq_block_ids(1).unwrap();
+        // A shorter prompt that IS a prefix, ending mid-block: the tail
+        // block is shared copy-on-write, no split yet.
+        let p2 = p1[..10].to_vec();
+        let shared = m.admit_fresh_prefixed(2, &p2, 10).unwrap();
+        assert_eq!(shared, 10);
+        assert_eq!(m.cow_splits(), 0, "pure prefix: nothing to split at admission");
+        let t2 = m.seq_block_ids(2).unwrap();
+        assert_eq!(t1[..3], t2[..3], "tail block shared CoW");
+        assert_eq!(m.block_refcount(t1[2]), 3); // seq1 + seq2 + cache
+        // First grow past the shared prefix = first divergent write: split.
+        m.grow(2, 14).unwrap();
+        assert_eq!(m.cow_splits(), 1);
+        let t2 = m.seq_block_ids(2).unwrap();
+        assert_ne!(t1[2], t2[2], "written tail must now be private");
+        assert_eq!(m.block_refcount(t1[2]), 2, "seq2's mapping moved off");
+        assert_eq!(m.seq_tokens(2), Some(14));
+    }
+
+    #[test]
+    fn cache_is_reclaimed_on_demand_never_admission_pressure() {
+        let mut m = mgr(4);
+        let p: Vec<Token> = (0..8).collect();
+        m.admit_fresh_prefixed(1, &p, 8).unwrap(); // 2 blocks, both cached
+        m.release_cached(1, &p).unwrap();
+        assert_eq!(m.active_seqs(), 0);
+        assert_eq!(m.allocated_blocks(), 2, "cache retains the blocks");
+        assert_eq!(m.cached_blocks(), 2);
+        // A full-pool admission evicts the cache rather than failing.
+        assert!(m.can_admit(16));
+        m.admit(2, 16).unwrap();
+        assert_eq!(m.cached_blocks(), 0, "cache evicted to make room");
+        assert_eq!(m.free_blocks(), 0);
+    }
+
+    #[test]
+    fn release_cached_enables_transcript_reuse() {
+        let mut m = mgr(32);
+        let prompt: Vec<Token> = (0..8).collect();
+        m.admit(1, 12).unwrap(); // plain admission: nothing cached yet
+        m.grow(1, 16).unwrap();
+        // Finished with 8 committed tokens: register the full transcript.
+        let content: Vec<Token> = (0..16).collect();
+        m.release_cached(1, &content).unwrap();
+        assert_eq!(m.cached_blocks(), 4);
+        // A follow-up turn re-submits the transcript as its prompt prefix.
+        let mut next = content.clone();
+        next.extend([100, 101, 102, 103]);
+        let shared = m.admit_fresh_prefixed(2, &next, 24).unwrap();
+        assert_eq!(shared, 16, "the whole prior transcript is served from cache");
+        assert!(prompt.len() < shared);
+    }
+
+    #[test]
+    fn suspend_to_swap_restores_without_recompute() {
+        let mut m = KvManager::new(KvConfig {
+            block_size: 4,
+            total_blocks: 10,
+            bytes_per_token: 8,
+            swap_blocks: 6,
+        });
+        m.admit(1, 20).unwrap(); // 5 blocks
+        let h = m.suspend(1, 20, 20).unwrap().expect("swap tier has room");
+        assert_eq!(h.blocks, 5);
+        assert_eq!(h.tokens, 20);
+        assert_eq!(m.active_seqs(), 0, "pool blocks freed immediately");
+        assert_eq!(m.allocated_blocks(), 0);
+        assert_eq!(m.resume_debt(), 5, "suspend earmarks the re-admission");
+        assert_eq!(m.swapped_blocks(), 5);
+        assert_eq!(m.swapped_out_blocks(), 5);
+        // A second victim does not fit the 6-block tier: discard path.
+        m.admit(2, 20).unwrap();
+        let none = m.suspend(2, 20, 20).unwrap();
+        assert!(none.is_none(), "full swap tier falls back to discard");
+        m.settle_resume_debt(20);
+        // Restore redeems the handle: re-admitted, swap freed, recompute
+        // credited.
+        m.restore(1, &h, 20).unwrap();
+        m.settle_resume_debt(20);
+        assert_eq!(m.seq_tokens(1), Some(20));
+        assert_eq!(m.swapped_blocks(), 0);
+        assert_eq!(m.restore_tokens_saved(), 20);
+        assert_eq!(m.resume_debt(), 0);
+        m.release(1).unwrap();
+        // Discarding a dead request's handle frees the tier too.
+        m.admit(3, 8).unwrap();
+        let h3 = m.suspend(3, 8, 8).unwrap().unwrap();
+        m.settle_resume_debt(8);
+        m.discard_swap(&h3);
+        assert_eq!(m.swapped_blocks(), 0);
+    }
+
+    #[test]
+    fn failed_restore_keeps_the_swap_reservation() {
+        let mut m = KvManager::new(KvConfig {
+            block_size: 4,
+            total_blocks: 4,
+            bytes_per_token: 8,
+            swap_blocks: 8,
+        });
+        m.admit(1, 16).unwrap();
+        let h = m.suspend(1, 16, 16).unwrap().unwrap();
+        m.admit(2, 16).unwrap(); // someone else takes the whole pool
+        assert!(m.restore(1, &h, 16).is_err(), "pool busy");
+        assert_eq!(m.swapped_blocks(), 4, "reservation must survive a failed restore");
+        m.release(2).unwrap();
+        m.restore(1, &h, 16).unwrap();
+        assert_eq!(m.swapped_blocks(), 0);
     }
 }

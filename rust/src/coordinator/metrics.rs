@@ -107,6 +107,17 @@ pub struct Metrics {
     pub chains_degraded: AtomicU64,
     /// Requests cancelled because they ran past their deadline.
     pub deadline_cancellations: AtomicU64,
+    /// Prompt/content tokens served from the radix prefix cache instead of
+    /// freshly allocated (admission-time sharing, paged KV).
+    pub prefix_hit_tokens: AtomicU64,
+    /// Copy-on-write block splits: a sequence's first divergent write into
+    /// a block it shared with the prefix cache or another sequence.
+    pub cow_splits: AtomicU64,
+    /// Blocks moved to the bounded swap tier at preemption (cumulative).
+    pub swapped_blocks: AtomicU64,
+    /// Recompute tokens avoided because a preempted request restored its
+    /// KV from swap instead of re-scoring its prefix.
+    pub restore_tokens_saved: AtomicU64,
     /// Requests currently holding a live decode task on some worker.
     inflight: AtomicU64,
     inflight_peak: AtomicU64,
@@ -181,6 +192,27 @@ impl Metrics {
         self.deadline_cancellations.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `tokens` of a new sequence's content were mapped from the prefix
+    /// cache at admission.
+    pub fn record_prefix_hit(&self, tokens: usize) {
+        self.prefix_hit_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// A shared block was split copy-on-write.
+    pub fn record_cow_split(&self) {
+        self.cow_splits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A preemption victim's `blocks` moved to the swap tier.
+    pub fn record_swap_out(&self, blocks: usize) {
+        self.swapped_blocks.fetch_add(blocks as u64, Ordering::Relaxed);
+    }
+
+    /// A swap restore spared `tokens` of prefix recompute.
+    pub fn record_restore_saved(&self, tokens: usize) {
+        self.restore_tokens_saved.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
     /// Expose a model's [`HealthTracker`] in metrics snapshots. Workers
     /// call this once per chain member at engine-load time; re-registering
     /// the same name replaces the handle (workers share per-model trackers
@@ -244,6 +276,13 @@ impl Metrics {
             Json::Num(self.chains_degraded.load(Ordering::Relaxed) as f64));
         put("deadline_cancellations",
             Json::Num(self.deadline_cancellations.load(Ordering::Relaxed) as f64));
+        put("prefix_hit_tokens",
+            Json::Num(self.prefix_hit_tokens.load(Ordering::Relaxed) as f64));
+        put("cow_splits", Json::Num(self.cow_splits.load(Ordering::Relaxed) as f64));
+        put("swapped_blocks",
+            Json::Num(self.swapped_blocks.load(Ordering::Relaxed) as f64));
+        put("restore_tokens_saved",
+            Json::Num(self.restore_tokens_saved.load(Ordering::Relaxed) as f64));
         put("mean_accept", Json::Num(self.mean_accept()));
         put("inflight", Json::Num(self.inflight() as f64));
         put("inflight_peak", Json::Num(self.inflight_peak() as f64));
@@ -341,6 +380,10 @@ mod tests {
         m.record_failure();
         m.record_degradation(2);
         m.record_deadline_cancel();
+        m.record_prefix_hit(16);
+        m.record_cow_split();
+        m.record_swap_out(5);
+        m.record_restore_saved(20);
         let health = Arc::new(HealthTracker::default());
         health.record_failure(crate::spec::types::FaultKind::Transient);
         health.record_retry();
@@ -357,6 +400,10 @@ mod tests {
         assert_eq!(parsed.req("requests_failed").unwrap().as_usize(), Some(1));
         assert_eq!(parsed.req("chains_degraded").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.req("deadline_cancellations").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.req("prefix_hit_tokens").unwrap().as_usize(), Some(16));
+        assert_eq!(parsed.req("cow_splits").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.req("swapped_blocks").unwrap().as_usize(), Some(5));
+        assert_eq!(parsed.req("restore_tokens_saved").unwrap().as_usize(), Some(20));
         let target = parsed.req("model_health").unwrap().get("target").unwrap();
         assert_eq!(target.get("errors").unwrap().as_usize(), Some(1));
         assert_eq!(target.get("retries").unwrap().as_usize(), Some(1));

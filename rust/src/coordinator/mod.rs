@@ -46,11 +46,18 @@
 //! bounded retries, per-model circuit breakers) lives in
 //! [`crate::runtime::host`]; the deterministic fault-injection harness
 //! used to test these paths is [`crate::spec::chaos`].
+//!
+//! KV capacity itself is a real paged subsystem ([`paged`]): refcounted
+//! block tables, a radix prefix cache that maps shared prompt prefixes
+//! copy-on-write, and a bounded swap tier that lets preemption suspend a
+//! victim's KV instead of discarding it. [`kv`] is the policy layer over
+//! it.
 
 pub mod api;
 pub mod batcher;
 pub mod kv;
 pub mod metrics;
+pub mod paged;
 pub mod router;
 pub mod scheduler;
 pub mod server;

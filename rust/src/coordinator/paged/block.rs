@@ -1,0 +1,120 @@
+//! Refcounted free-list block allocator — the physical layer of the paged
+//! KV subsystem.
+//!
+//! A [`BlockPool`] owns a fixed set of [`BlockId`]s. Sequences hold
+//! references to blocks through their block tables; the radix prefix cache
+//! ([`super::radix`]) holds one extra reference per cached block. A block
+//! whose refcount drops to zero returns to the free list. Copy-on-write
+//! falls out of the refcounts: a block with more than one reference must
+//! not be written in place — the writer allocates a copy first (the
+//! `KvManager` enforces this at admission and first divergent grow).
+
+/// An addressable KV block (index into the pool's refcount table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BlockId(pub u32);
+
+/// Fixed-capacity refcounted block allocator.
+#[derive(Debug)]
+pub struct BlockPool {
+    refcounts: Vec<u32>,
+    /// Free stack; lowest ids pop first, so allocation order (and therefore
+    /// every block table) is deterministic for a given call sequence.
+    free: Vec<u32>,
+}
+
+impl BlockPool {
+    pub fn new(total_blocks: usize) -> Self {
+        Self {
+            refcounts: vec![0; total_blocks],
+            free: (0..total_blocks as u32).rev().collect(),
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Take one free block (refcount 1), or `None` when the pool is empty.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refcounts[id as usize], 0, "free block with live refs");
+        self.refcounts[id as usize] = 1;
+        Some(BlockId(id))
+    }
+
+    /// Add one reference (a sequence mapping the block, or the cache
+    /// retaining it).
+    pub fn incref(&mut self, b: BlockId) {
+        debug_assert!(self.refcounts[b.0 as usize] > 0, "incref on a free block");
+        self.refcounts[b.0 as usize] += 1;
+    }
+
+    /// Drop one reference; returns true when the block was freed.
+    pub fn decref(&mut self, b: BlockId) -> bool {
+        let rc = &mut self.refcounts[b.0 as usize];
+        debug_assert!(*rc > 0, "decref on a free block");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b.0);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refcounts[b.0 as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_incref_decref_cycle() {
+        let mut p = BlockPool::new(3);
+        assert_eq!(p.free_len(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.free_len(), 1);
+        assert_eq!(p.refcount(a), 1);
+        p.incref(a);
+        assert_eq!(p.refcount(a), 2);
+        assert!(!p.decref(a), "still one ref left");
+        assert!(p.decref(a), "last ref frees");
+        assert_eq!(p.free_len(), 2);
+        assert!(p.decref(b));
+        assert_eq!(p.free_len(), 3);
+    }
+
+    #[test]
+    fn exhaustion_returns_none_and_freed_blocks_recycle() {
+        let mut p = BlockPool::new(2);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        assert!(p.alloc().is_none());
+        p.decref(a);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "freed block must be reusable");
+    }
+
+    #[test]
+    fn allocation_order_is_deterministic() {
+        let ids: Vec<u32> = {
+            let mut p = BlockPool::new(4);
+            (0..4).map(|_| p.alloc().unwrap().0).collect()
+        };
+        let again: Vec<u32> = {
+            let mut p = BlockPool::new(4);
+            (0..4).map(|_| p.alloc().unwrap().0).collect()
+        };
+        assert_eq!(ids, again);
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+}

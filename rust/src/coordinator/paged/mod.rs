@@ -1,0 +1,35 @@
+//! Paged KV subsystem: refcounted block tables, a radix prefix cache, and
+//! a bounded swap tier.
+//!
+//! This module supplies the physical layer under
+//! [`KvManager`](super::kv::KvManager) (which keeps its PR 4/5 admission
+//! API so the router and scheduler migrated incrementally):
+//!
+//! * [`block`] — [`BlockPool`]: a free-list allocator of addressable
+//!   [`BlockId`]s with per-block refcounts. A sequence's allocation is a
+//!   *block table* (ordered list of `BlockId`s), not a counter; sharing
+//!   and copy-on-write are refcount operations.
+//! * [`radix`] — [`RadixCache`]: a trie over full-block token chunks
+//!   mapping prompt prefixes to cached blocks. Requests sharing a system
+//!   prompt / few-shot template / conversation transcript map the same
+//!   physical blocks (one pool ref per mapper plus one held by the cache)
+//!   instead of re-allocating them; LRU subtree eviction reclaims cached
+//!   blocks on demand, so the cache is free capacity, never pressure.
+//! * [`swap`] — [`SwapPool`]: bounded, all-or-nothing swap reservations
+//!   for preemption victims, keyed by
+//!   [`SwapHandle`](crate::spec::task::SwapHandle) carried in the victim's
+//!   `ResumeState`. Restore re-admits from swap with zero wasted
+//!   recompute; a full tier falls back to the discard path.
+//!
+//! The AOT substrate recomputes attention per forward (DESIGN.md §7), so
+//! block *contents* are simulated — but the allocator, refcounts, sharing,
+//! eviction, and swap capacity are the real vLLM-style mechanics and gate
+//! admission exactly as a device-resident block manager would.
+
+pub mod block;
+pub mod radix;
+pub mod swap;
+
+pub use block::{BlockId, BlockPool};
+pub use radix::{PrefixMatch, RadixCache};
+pub use swap::SwapPool;

@@ -1,0 +1,351 @@
+//! Block-granular radix prefix cache (mistralrs `PrefixCacheManager` /
+//! vLLM prefix-caching shape, adapted to block tables).
+//!
+//! The trie is keyed on **full block chunks** of token content: each node
+//! owns one `block_size`-token chunk and the [`BlockId`] whose (simulated)
+//! KV rows score exactly that chunk given the path above it. The cache
+//! holds one pool reference per node, so a cached block outlives the
+//! sequence that wrote it and later requests sharing the prompt prefix map
+//! it instead of re-allocating (and, in a real engine, re-scoring) it.
+//!
+//! [`lookup`](RadixCache::lookup) walks exact full-chunk matches and then
+//! tries one *partial* match inside the next chunk — the caller shares that
+//! tail block copy-on-write. [`register`](RadixCache::register) inserts a
+//! finished (or admitted) sequence's full blocks, but only blocks the
+//! sequence owns exclusively: a still-shared tail block may have been
+//! logically overwritten past the shared prefix, so attributing its cached
+//! content to a new chunk key would lie about what the rows score.
+//!
+//! Eviction is LRU at node granularity: only nodes whose block has no
+//! sequence mapping it (pool refcount 1 — the cache's own reference) are
+//! evictable, and evicting a node removes its whole subtree (a child's
+//! rows are meaningless without the prefix above them). The `KvManager`
+//! counts evictable nodes as available capacity and evicts on demand, so
+//! caching never rejects an admission the uncached allocator would accept.
+
+use std::collections::BTreeMap;
+
+use crate::spec::types::Token;
+
+use super::block::{BlockId, BlockPool};
+
+#[derive(Debug)]
+struct RadixNode {
+    /// This node's `block_size`-token content chunk (the map key, kept here
+    /// too so subtree removal can detach from the parent).
+    chunk: Vec<Token>,
+    block: BlockId,
+    parent: Option<usize>,
+    children: BTreeMap<Vec<Token>, usize>,
+    /// Logical LRU clock value of the last lookup/register touching this
+    /// node.
+    last_used: u64,
+}
+
+/// Result of a prefix lookup: the longest cached prefix and the blocks
+/// covering it (`tokens.div_ceil(block_size)` of them; the last one is a
+/// partial match when `tokens % block_size != 0`).
+#[derive(Debug)]
+pub struct PrefixMatch {
+    pub tokens: usize,
+    pub blocks: Vec<BlockId>,
+}
+
+/// Trie of cached token prefixes at block granularity.
+#[derive(Debug)]
+pub struct RadixCache {
+    block_size: usize,
+    /// Node arena; `None` slots are free for reuse.
+    nodes: Vec<Option<RadixNode>>,
+    free_slots: Vec<usize>,
+    root_children: BTreeMap<Vec<Token>, usize>,
+    clock: u64,
+    len: usize,
+}
+
+impl RadixCache {
+    pub fn new(block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        Self {
+            block_size,
+            nodes: Vec::new(),
+            free_slots: Vec::new(),
+            root_children: BTreeMap::new(),
+            clock: 0,
+            len: 0,
+        }
+    }
+
+    /// Cached nodes (== cached blocks: node ↔ block is one-to-one).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn node(&self, idx: usize) -> &RadixNode {
+        self.nodes[idx].as_ref().expect("live radix node")
+    }
+
+    fn node_mut(&mut self, idx: usize) -> &mut RadixNode {
+        self.nodes[idx].as_mut().expect("live radix node")
+    }
+
+    fn children_of(&self, cur: Option<usize>) -> &BTreeMap<Vec<Token>, usize> {
+        match cur {
+            None => &self.root_children,
+            Some(ix) => &self.node(ix).children,
+        }
+    }
+
+    /// Longest cached prefix of `tokens`: exact full-chunk descent, then at
+    /// most one partial match inside the next chunk. Touches the matched
+    /// path's LRU clocks. Does **not** change refcounts — the caller
+    /// increfs the returned blocks if it decides to share them.
+    pub fn lookup(&mut self, tokens: &[Token]) -> PrefixMatch {
+        self.clock += 1;
+        let clock = self.clock;
+        let b = self.block_size;
+        let mut blocks = Vec::new();
+        let mut i = 0usize;
+        let mut cur: Option<usize> = None;
+        loop {
+            // Exact full-chunk child?
+            let exact = if i + b <= tokens.len() {
+                self.children_of(cur).get(&tokens[i..i + b]).copied()
+            } else {
+                None
+            };
+            if let Some(child) = exact {
+                let node = self.node_mut(child);
+                node.last_used = clock;
+                blocks.push(node.block);
+                i += b;
+                cur = Some(child);
+                continue;
+            }
+            // Best partial match inside the next chunk (shared CoW tail).
+            let rest = &tokens[i..];
+            let mut best: Option<(usize, usize)> = None; // (common prefix len, node)
+            if !rest.is_empty() {
+                for (key, &child) in self.children_of(cur) {
+                    let cpl = key.iter().zip(rest).take_while(|(a, c)| a == c).count();
+                    // cpl == b would have matched exactly above (rest shorter
+                    // than b caps cpl below b here).
+                    if cpl > 0 && best.is_none_or(|(bc, _)| cpl > bc) {
+                        best = Some((cpl, child));
+                    }
+                }
+            }
+            if let Some((cpl, child)) = best {
+                let node = self.node_mut(child);
+                node.last_used = clock;
+                blocks.push(node.block);
+                i += cpl;
+            }
+            return PrefixMatch { tokens: i, blocks };
+        }
+    }
+
+    /// Insert `tokens`' full-block chunks, mapping chunk `j` to `table[j]`.
+    /// Existing nodes are reused (LRU-touched, no extra refs); a new node is
+    /// inserted only while the sequence owns `table[j]` exclusively
+    /// (refcount 1), and takes one cache reference on it. Stops at the
+    /// first chunk that neither matches nor is exclusively owned: a shared,
+    /// never-split tail block may hold rows for *different* content than
+    /// this sequence committed, and everything deeper depends on it.
+    pub fn register(&mut self, tokens: &[Token], table: &[BlockId], pool: &mut BlockPool) {
+        self.clock += 1;
+        let clock = self.clock;
+        let b = self.block_size;
+        let n_full = (tokens.len() / b).min(table.len());
+        let mut cur: Option<usize> = None;
+        for j in 0..n_full {
+            let chunk = &tokens[j * b..(j + 1) * b];
+            if let Some(&child) = self.children_of(cur).get(chunk) {
+                self.node_mut(child).last_used = clock;
+                cur = Some(child);
+                continue;
+            }
+            let blk = table[j];
+            if pool.refcount(blk) != 1 {
+                return;
+            }
+            pool.incref(blk);
+            let node = RadixNode {
+                chunk: chunk.to_vec(),
+                block: blk,
+                parent: cur,
+                children: BTreeMap::new(),
+                last_used: clock,
+            };
+            let idx = match self.free_slots.pop() {
+                Some(slot) => {
+                    self.nodes[slot] = Some(node);
+                    slot
+                }
+                None => {
+                    self.nodes.push(Some(node));
+                    self.nodes.len() - 1
+                }
+            };
+            match cur {
+                None => self.root_children.insert(chunk.to_vec(), idx),
+                Some(p) => self.node_mut(p).children.insert(chunk.to_vec(), idx),
+            };
+            self.len += 1;
+            cur = Some(idx);
+        }
+    }
+
+    /// Cached nodes no live sequence maps (pool refcount 1): blocks the
+    /// `KvManager` may reclaim on demand, counted into its `available()`.
+    pub fn evictable(&self, pool: &BlockPool) -> usize {
+        self.nodes
+            .iter()
+            .flatten()
+            .filter(|n| pool.refcount(n.block) == 1)
+            .count()
+    }
+
+    /// Evict the least-recently-used reclaimable node (and its subtree).
+    /// Returns the number of blocks actually freed — at least one when any
+    /// node was evictable, zero when nothing is reclaimable.
+    pub fn evict_lru(&mut self, pool: &mut BlockPool) -> usize {
+        let mut victim: Option<(u64, usize)> = None;
+        for (idx, n) in self.nodes.iter().enumerate() {
+            if let Some(n) = n {
+                if pool.refcount(n.block) == 1
+                    && victim.is_none_or(|(lu, _)| n.last_used < lu)
+                {
+                    victim = Some((n.last_used, idx));
+                }
+            }
+        }
+        let Some((_, idx)) = victim else { return 0 };
+        self.remove_subtree(idx, pool)
+    }
+
+    fn remove_subtree(&mut self, idx: usize, pool: &mut BlockPool) -> usize {
+        // Detach from the parent's child map first.
+        let (parent, chunk) = {
+            let n = self.node(idx);
+            (n.parent, n.chunk.clone())
+        };
+        match parent {
+            None => self.root_children.remove(&chunk),
+            Some(p) => self.node_mut(p).children.remove(&chunk),
+        };
+        let mut freed = 0usize;
+        let mut stack = vec![idx];
+        while let Some(ix) = stack.pop() {
+            let node = self.nodes[ix].take().expect("live radix node");
+            self.free_slots.push(ix);
+            self.len -= 1;
+            stack.extend(node.children.values().copied());
+            if pool.decref(node.block) {
+                freed += 1;
+            }
+        }
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Allocate `n` blocks as a sequence's table.
+    fn table(pool: &mut BlockPool, n: usize) -> Vec<BlockId> {
+        (0..n).map(|_| pool.alloc().unwrap()).collect()
+    }
+
+    #[test]
+    fn lookup_walks_full_chunks_then_partial() {
+        let mut pool = BlockPool::new(16);
+        let mut cache = RadixCache::new(4);
+        let toks: Vec<Token> = (0..12).collect();
+        let t = table(&mut pool, 3);
+        cache.register(&toks, &t, &mut pool);
+        assert_eq!(cache.len(), 3);
+        // Exact full prefix.
+        let m = cache.lookup(&toks);
+        assert_eq!(m.tokens, 12);
+        assert_eq!(m.blocks, t);
+        // Shorter query with a partial tail: 4 full + 2 into the next chunk.
+        let m = cache.lookup(&toks[..6]);
+        assert_eq!(m.tokens, 6);
+        assert_eq!(m.blocks, &t[..2]);
+        // Divergent content after one chunk: partial match stops at the
+        // divergence point.
+        let mut div = toks.clone();
+        div[5] = 99;
+        let m = cache.lookup(&div);
+        assert_eq!(m.tokens, 5, "4 exact + 1 common into the second chunk");
+        assert_eq!(m.blocks.len(), 2);
+    }
+
+    #[test]
+    fn register_skips_shared_blocks_and_reuses_nodes() {
+        let mut pool = BlockPool::new(16);
+        let mut cache = RadixCache::new(4);
+        let toks: Vec<Token> = (0..8).collect();
+        let t = table(&mut pool, 2);
+        cache.register(&toks, &t, &mut pool);
+        assert_eq!(pool.refcount(t[0]), 2, "cache holds a ref");
+        // Re-registering the same content must not double-insert or re-ref.
+        cache.register(&toks, &t, &mut pool);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(pool.refcount(t[0]), 2);
+        // A different sequence whose tail block is shared (refcount > 1)
+        // registers nothing past the shared point.
+        let shared = t[1];
+        pool.incref(shared); // simulate another sequence mapping it
+        let mut toks2 = toks.clone();
+        toks2[4] = 77; // diverges in chunk 1
+        let t2 = vec![t[0], shared];
+        cache.register(&toks2, &t2, &mut pool);
+        assert_eq!(cache.len(), 2, "divergent shared tail must not be cached");
+    }
+
+    #[test]
+    fn evict_lru_frees_cache_only_blocks_subtree_and_all() {
+        let mut pool = BlockPool::new(16);
+        let mut cache = RadixCache::new(2);
+        let a: Vec<Token> = vec![1, 2, 3, 4];
+        let b: Vec<Token> = vec![9, 9];
+        let ta = table(&mut pool, 2);
+        let tb = table(&mut pool, 1);
+        cache.register(&a, &ta, &mut pool);
+        cache.register(&b, &tb, &mut pool);
+        assert_eq!(cache.len(), 3);
+        // Sequences release: only the cache holds the blocks now.
+        for &blk in ta.iter().chain(&tb) {
+            pool.decref(blk);
+        }
+        assert_eq!(cache.evictable(&pool), 3);
+        // Touch `b` so `a`'s chain is the LRU victim; evicting the chain
+        // head removes the whole 2-node subtree.
+        cache.lookup(&b);
+        let freed = cache.evict_lru(&mut pool);
+        assert_eq!(freed, 2, "subtree eviction frees both of a's blocks");
+        assert_eq!(cache.len(), 1);
+        let m = cache.lookup(&a);
+        assert_eq!(m.tokens, 0, "evicted prefix no longer matches");
+        assert_eq!(cache.lookup(&b).tokens, 2);
+        // A block still mapped by a sequence is not evictable.
+        let tc = table(&mut pool, 1);
+        cache.register(&[5, 5], &tc, &mut pool);
+        assert_eq!(cache.evictable(&pool), 1, "seq-mapped block is pinned");
+        assert_eq!(
+            {
+                let f = cache.evict_lru(&mut pool);
+                cache.evict_lru(&mut pool) + f
+            },
+            1,
+            "only the unreferenced node frees a block"
+        );
+    }
+}

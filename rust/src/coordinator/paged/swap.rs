@@ -1,0 +1,104 @@
+//! Bounded swap tier for preempted sequences (suspend-to-swap).
+//!
+//! When the scheduler preempts a decode, the victim's KV blocks used to be
+//! discarded — the resume paid `prompt + committed + inflight` tokens of
+//! recompute. With a swap tier the `KvManager` instead moves the victim's
+//! footprint to host-side swap space: the GPU-pool blocks still free
+//! immediately (that is the point of preemption), but the sequence keeps a
+//! [`SwapHandle`](crate::spec::task::SwapHandle) and restores without
+//! re-scoring anything. Like the rest of the KV subsystem the bytes are
+//! simulated (accounting-only substrate), but capacity is real: the tier
+//! is bounded in blocks, reservation is all-or-nothing (a partially
+//! swapped prefix would still force a full re-score in a real engine),
+//! and when the tier is full preemption falls back to the PR 5 discard
+//! path.
+
+use std::collections::BTreeMap;
+
+use crate::spec::task::SwapHandle;
+
+/// Bounded accounting for swapped-out sequences.
+#[derive(Debug)]
+pub struct SwapPool {
+    total_blocks: usize,
+    used_blocks: usize,
+    next_id: u64,
+    /// Live reservations: handle id -> blocks held.
+    entries: BTreeMap<u64, usize>,
+}
+
+impl SwapPool {
+    pub fn new(total_blocks: usize) -> Self {
+        Self { total_blocks, used_blocks: 0, next_id: 0, entries: BTreeMap::new() }
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.used_blocks
+    }
+
+    /// Reserve swap space for `blocks` blocks holding `tokens` tokens of
+    /// KV. All-or-nothing: returns `None` when the tier is disabled
+    /// (zero-sized) or cannot hold the whole footprint.
+    pub fn reserve(&mut self, blocks: usize, tokens: usize) -> Option<SwapHandle> {
+        if self.total_blocks == 0 || self.used_blocks + blocks > self.total_blocks {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.used_blocks += blocks;
+        self.entries.insert(id, blocks);
+        Some(SwapHandle { id, tokens, blocks })
+    }
+
+    /// Release a reservation (restore or discard). Idempotent: freeing an
+    /// unknown/already-freed handle is a no-op returning false.
+    pub fn free(&mut self, handle: &SwapHandle) -> bool {
+        match self.entries.remove(&handle.id) {
+            Some(blocks) => {
+                self.used_blocks -= blocks;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_is_bounded_and_all_or_nothing() {
+        let mut s = SwapPool::new(4);
+        let a = s.reserve(3, 40).expect("fits");
+        assert_eq!(a.blocks, 3);
+        assert_eq!(a.tokens, 40);
+        assert_eq!(s.used_blocks(), 3);
+        assert!(s.reserve(2, 20).is_none(), "would exceed the tier");
+        let b = s.reserve(1, 4).expect("exactly fills");
+        assert!(s.free(&a));
+        assert!(!s.free(&a), "double free is a no-op");
+        assert_eq!(s.used_blocks(), 1);
+        assert!(s.free(&b));
+        assert_eq!(s.used_blocks(), 0);
+    }
+
+    #[test]
+    fn zero_sized_tier_is_disabled() {
+        let mut s = SwapPool::new(0);
+        assert!(s.reserve(0, 0).is_none(), "disabled tier never issues handles");
+    }
+
+    #[test]
+    fn handle_ids_are_unique() {
+        let mut s = SwapPool::new(8);
+        let a = s.reserve(1, 1).unwrap();
+        s.free(&a);
+        let b = s.reserve(1, 1).unwrap();
+        assert_ne!(a.id, b.id, "freed ids are not recycled");
+    }
+}

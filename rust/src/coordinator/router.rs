@@ -105,8 +105,12 @@ impl Router {
             // admission leaves room owed to preempted requests awaiting
             // re-admission (see KvManager::admit_fresh), so new arrivals
             // cannot starve a decode the scheduler already suspended.
+            // Prefix-aware: the longest cached prefix of the prompt maps
+            // onto shared blocks instead of fresh ones, so concurrent
+            // requests over a common prompt (or a conversation follow-up
+            // over its own transcript) cost only their unshared suffix.
             let mut kv = lane.kv.lock().unwrap();
-            kv.admit_fresh(req.id, req.prompt.len() + headroom)
+            kv.admit_fresh_prefixed(req.id, &req.prompt, req.prompt.len() + headroom)
                 .map_err(|_| RejectReason::KvExhausted)?;
         }
         lane.batcher.push(req);
@@ -131,6 +135,7 @@ mod tests {
                 block_size: 16,
                 total_blocks: blocks,
                 bytes_per_token: 4,
+                swap_blocks: 0,
             }))),
             seq_len,
             n_models: 3,

@@ -261,10 +261,14 @@ fn open_entry<'m>(
                 }
                 Some(c) => {
                     // A preempted request holds no allocation, only the
-                    // debt earmarked at suspension; hand that back.
+                    // debt earmarked at suspension; hand that back (plus
+                    // the swap reservation, if its KV was swapped out).
                     kvm.settle_resume_debt(
                         req.prompt.len() + c.state.committed.len() + headroom,
                     );
+                    if let Some(h) = &c.state.swap {
+                        kvm.discard_swap(h);
+                    }
                 }
             }
             drop(kvm);
@@ -273,7 +277,7 @@ fn open_entry<'m>(
             return Opened::Failed { id: req.id, err: DecodeError::Timeout };
         }
     }
-    let Some(carry) = resume else {
+    let Some(mut carry) = resume else {
         return match open_task(chain, &req) {
             Ok(task) => {
                 metrics.task_started();
@@ -314,28 +318,54 @@ fn open_entry<'m>(
 
     // A preempted request released its KV at suspension; re-reserve its
     // live footprint (prompt + committed + headroom) before reopening.
-    // The plain `admit` (not `admit_fresh`) deliberately ignores resume
-    // debt — this request IS the debt, earmarked at preemption.
+    // Re-admission deliberately ignores resume debt — this request IS the
+    // debt, earmarked at preemption. Two shapes:
+    //   - swap-restored: the victim's blocks sat in the swap tier, so
+    //     `restore` re-admits and the wasted-recompute accounting only
+    //     counts what the tier did not hold (usually nothing);
+    //   - discarded: prefix-aware re-admission (the request's own prompt
+    //     or a shared prefix may still be block-cached), but the fresh
+    //     sessions re-score the full prefix regardless, so prefix hits
+    //     never reduce the wasted accounting — only swap does.
     let need = req.prompt.len() + carry.state.committed.len() + headroom;
-    {
-        let mut kvm = kv.lock().unwrap();
-        if !kvm.fits(need) {
-            kvm.settle_resume_debt(need);
-            metrics.record_failure();
-            return Opened::Failed { id: req.id, err: DecodeError::Saturated };
-        }
-        if kvm.admit(req.id, need).is_err() {
-            // Saturated right now, but possible once space frees: someone
-            // else holds the pool (fits() just passed). Retry later.
-            return Opened::Deferred(QueueEntry { req, enqueued, resume: Some(carry) });
-        }
-        kvm.settle_resume_debt(need);
-    }
-    let wasted = need - headroom
+    let full_recompute = need - headroom
         + match &carry.state.inflight {
             InflightState::Polybasic { drafted, .. } => drafted.len(),
             InflightState::None => 0,
         };
+    let wasted;
+    {
+        let mut kvm = kv.lock().unwrap();
+        if !kvm.fits(need) {
+            kvm.settle_resume_debt(need);
+            if let Some(h) = &carry.state.swap {
+                kvm.discard_swap(h);
+            }
+            metrics.record_failure();
+            return Opened::Failed { id: req.id, err: DecodeError::Saturated };
+        }
+        match carry.state.swap.take() {
+            Some(h) => {
+                if kvm.restore(req.id, &h, need).is_err() {
+                    // Saturated right now, but possible once space frees:
+                    // someone else holds the pool (fits() just passed).
+                    // Keep the swap reservation and retry later.
+                    carry.state.swap = Some(h);
+                    return Opened::Deferred(QueueEntry { req, enqueued, resume: Some(carry) });
+                }
+                wasted = full_recompute.saturating_sub(h.tokens);
+            }
+            None => {
+                let mut content = req.prompt.clone();
+                content.extend_from_slice(&carry.state.committed);
+                if kvm.admit_resumed_prefixed(req.id, &content, need).is_err() {
+                    return Opened::Deferred(QueueEntry { req, enqueued, resume: Some(carry) });
+                }
+                wasted = full_recompute;
+            }
+        }
+        kvm.settle_resume_debt(need);
+    }
     let ResumeCarry { state, streamed, ttft, queue_time, service_time, preemptions } = carry;
     let prior_degraded = state.degraded;
     match resume_task(chain, &req, state) {
@@ -391,7 +421,7 @@ fn preempt<'m>(
     } = live.remove(v);
     metrics.task_ended();
     metrics.record_preemption();
-    let carry = ResumeCarry {
+    let mut carry = ResumeCarry {
         state: task.suspend(),
         streamed,
         ttft,
@@ -400,18 +430,29 @@ fn preempt<'m>(
         preemptions: preemptions + 1,
     };
     {
-        // Release and debt-earmark under ONE lock scope: a fresh router
-        // admission between the two would see the freed blocks with no
-        // debt and occupy exactly the space the victim needs back.
-        let mut kvm = kv.lock().unwrap();
-        let released = kvm.release(req.id);
-        debug_assert!(
-            released.is_ok(),
-            "KV release failed for preempted request {}: every live task must \
-             hold exactly one allocation ({released:?})",
-            req.id
-        );
-        kvm.add_resume_debt(req.prompt.len() + carry.state.committed.len() + headroom);
+        // Suspend atomically — release, debt-earmark, and swap-reserve
+        // under ONE lock scope: a fresh router admission between release
+        // and earmark would see the freed blocks with no debt and occupy
+        // exactly the space the victim needs back. When the bounded swap
+        // tier can hold the victim's KV content (prompt + committed +
+        // in-flight draft), the resume path restores it instead of
+        // re-scoring; a full tier degrades to the discard path.
+        let drafted = match &carry.state.inflight {
+            InflightState::Polybasic { drafted, .. } => drafted.len(),
+            InflightState::None => 0,
+        };
+        let content = req.prompt.len() + carry.state.committed.len() + drafted;
+        let resume_need = req.prompt.len() + carry.state.committed.len() + headroom;
+        let suspended = kv.lock().unwrap().suspend(req.id, content, resume_need);
+        match suspended {
+            Ok(handle) => carry.state.swap = handle,
+            Err(e) => debug_assert!(
+                false,
+                "KV suspend failed for preempted request {}: every live task must \
+                 hold exactly one allocation ({e:?})",
+                req.id
+            ),
+        }
     }
     match admit {
         Some(queue) => queue.push_front_resumed(req, carry),
@@ -659,21 +700,36 @@ pub fn run_batch(
             let Live { req, opened, queue_time, prior_service, ttft, preemptions, task, .. } =
                 live.remove(i);
             metrics.task_ended();
-            let released = kv.lock().unwrap().release(req.id);
-            debug_assert!(
-                released.is_ok(),
-                "KV release failed for request {}: every admitted request must \
-                 hold exactly one allocation ({released:?})",
-                req.id
-            );
             let id = req.id;
             let resp: Result<Response, DecodeError> = match step_err {
                 Some(e) => {
+                    let released = kv.lock().unwrap().release(req.id);
+                    debug_assert!(
+                        released.is_ok(),
+                        "KV release failed for request {}: every admitted request \
+                         must hold exactly one allocation ({released:?})",
+                        req.id
+                    );
                     metrics.record_failure();
                     Err(e)
                 }
                 None => {
                     let gen = task.finish();
+                    // Register the finished transcript (prompt + committed)
+                    // in the prefix cache on the way out, so follow-up
+                    // turns and prompt-sharing arrivals map these blocks
+                    // instead of re-allocating. Cached blocks are free
+                    // capacity: reclaimed LRU-first the moment admission
+                    // needs them.
+                    let mut content = req.prompt.clone();
+                    content.extend_from_slice(&gen.tokens);
+                    let released = kv.lock().unwrap().release_cached(req.id, &content);
+                    debug_assert!(
+                        released.is_ok(),
+                        "KV release failed for request {}: every admitted request \
+                         must hold exactly one allocation ({released:?})",
+                        req.id
+                    );
                     let service_time = prior_service + opened.elapsed();
                     let mean_accept = gen.mean_accept();
                     metrics.record_completion(

@@ -45,6 +45,9 @@ pub struct ServerConfig {
     pub batch: BatchPolicy,
     /// KV pool size in blocks of 16 tokens.
     pub kv_blocks: usize,
+    /// Suspend-to-swap tier size in blocks (0 disables swap: preemption
+    /// victims discard their KV and re-score the prefix on resume).
+    pub swap_blocks: usize,
 }
 
 impl ServerConfig {
@@ -56,6 +59,7 @@ impl ServerConfig {
             workers: 1,
             batch: BatchPolicy::default(),
             kv_blocks: 512,
+            swap_blocks: 256,
         }
     }
 }
@@ -104,7 +108,11 @@ impl Server {
             block_size: 16,
             total_blocks: cfg.kv_blocks,
             bytes_per_token: chain_bytes_per_token(&metas),
+            swap_blocks: cfg.swap_blocks,
         })));
+        // Mirror the paged-KV meters (prefix hits, CoW splits, swap
+        // traffic) into the server-wide snapshot.
+        kv.lock().unwrap().attach_metrics(metrics.clone());
 
         let mut router = Router::new(cfg.family.clone());
         router.add_lane(

@@ -167,6 +167,7 @@ impl DecodeTask for ArTask<'_> {
             inflight: InflightState::None,
             live_models: vec![0],
             degraded: 0,
+            swap: None,
         }
     }
 }

@@ -424,6 +424,7 @@ impl DecodeTask for CsDraftTask<'_> {
             inflight: InflightState::None,
             live_models: self.live_models,
             degraded,
+            swap: None,
         }
     }
 

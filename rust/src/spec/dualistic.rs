@@ -358,6 +358,7 @@ impl DecodeTask for DualisticTask<'_> {
             inflight: InflightState::None,
             live_models,
             degraded,
+            swap: None,
         }
     }
 

@@ -520,6 +520,7 @@ impl DecodeTask for PolyTask<'_> {
             },
             live_models: self.live_models,
             degraded,
+            swap: None,
         }
     }
 

@@ -58,6 +58,26 @@ impl StepOutcome {
     }
 }
 
+/// A reservation in the coordinator's bounded KV swap tier, held by a
+/// preempted decode whose blocks were swapped aside instead of discarded.
+///
+/// Plain data (id + footprint) rather than a coordinator type, so
+/// [`ResumeState`] — a `spec`-layer struct — can carry it without the spec
+/// layer depending on the coordinator. Tasks never create or consume one:
+/// `suspend()` sets [`ResumeState::swap`] to `None` and the scheduler
+/// fills it in when the KV manager accepts the swap-out; on resume the
+/// scheduler redeems it for a restore that skips the re-score entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwapHandle {
+    /// Swap-tier reservation id.
+    pub id: u64,
+    /// Tokens of KV preserved by the reservation (prompt + committed +
+    /// in-flight at suspension) — the recompute a restore saves.
+    pub tokens: usize,
+    /// Swap blocks held.
+    pub blocks: usize,
+}
+
 /// Everything a preempted decode needs to continue later, captured at a
 /// step boundary by [`DecodeTask::suspend`].
 ///
@@ -98,6 +118,11 @@ pub struct ResumeState {
     pub live_models: Vec<usize>,
     /// Chain members dropped by graceful degradation before suspension.
     pub degraded: u32,
+    /// Swap-tier reservation covering this decode's KV at suspension, when
+    /// the coordinator swapped the blocks aside instead of discarding them.
+    /// Tasks always suspend with `None`; the scheduler fills and redeems
+    /// it (see `coordinator::paged::swap`).
+    pub swap: Option<SwapHandle>,
 }
 
 impl ResumeState {

@@ -1,7 +1,10 @@
 //! Request-stream generation: SpecBench sweeps (batch-1 latency, the
-//! paper's protocol) and Poisson arrival streams for the serving example.
+//! paper's protocol), Poisson arrival streams for the serving example, and
+//! multi-turn conversation streams whose successive turns share nested
+//! prompt prefixes (the workload the paged-KV radix cache exists for).
 
 use crate::spec::rng::Pcg32;
+use crate::spec::types::Token;
 
 use super::tasks::{make_query, Query, TaskKind, ALL_TASKS};
 
@@ -58,6 +61,134 @@ impl Iterator for ArrivalStream {
     }
 }
 
+/// A timed arrival within a multi-turn conversation.
+#[derive(Debug, Clone)]
+pub struct ConvArrival {
+    pub at: std::time::Duration,
+    /// Conversation this turn belongs to.
+    pub session: u64,
+    /// 1-based turn number within the conversation.
+    pub turn: usize,
+    /// The request: its prompt embeds the conversation's full transcript
+    /// so far, so turn `k+1`'s prompt has turn `k`'s prompt as a strict
+    /// token prefix.
+    pub query: Query,
+}
+
+struct ConvState {
+    id: u64,
+    turn: usize,
+    /// Prompt + synthetic assistant reply of every turn so far. The reply
+    /// stands in for the server's actual output (unknown at generation
+    /// time); what matters for the KV layer is that turn prompts nest.
+    transcript: Vec<Token>,
+}
+
+/// Poisson arrival stream of multi-turn conversations. Each arrival either
+/// opens a new conversation (a fresh [`TaskKind::MultiTurn`] query) or
+/// continues an open one: a continuation's prompt is the whole transcript
+/// so far plus a fresh user chunk, so successive turns share strictly
+/// nested prefixes — a serving stack with a prefix cache re-maps the prior
+/// turn's blocks instead of re-allocating them. Conversations retire after
+/// [`max_turns`](Self::with_caps) turns or when the transcript reaches
+/// `max_prompt` tokens (so generated prompts stay inside a serving
+/// context window). Deterministic in the seed.
+pub struct ConversationStream {
+    rng: Pcg32,
+    rate_per_s: f64,
+    vocab: usize,
+    t: f64,
+    max_prompt: usize,
+    max_turns: usize,
+    sessions: Vec<ConvState>,
+    next_session: u64,
+}
+
+impl ConversationStream {
+    pub fn new(rate_per_s: f64, vocab: usize, seed: u64) -> Self {
+        assert!(rate_per_s > 0.0);
+        Self {
+            rng: Pcg32::seeded(seed),
+            rate_per_s,
+            vocab,
+            t: 0.0,
+            max_prompt: 96,
+            max_turns: 4,
+            sessions: Vec::new(),
+            next_session: 0,
+        }
+    }
+
+    /// Bound transcript growth: conversations retire once they hit
+    /// `max_turns` turns or a `max_prompt`-token transcript. Size
+    /// `max_prompt` below the serving context window minus one output
+    /// budget, or continuations will be rejected at the router.
+    pub fn with_caps(mut self, max_prompt: usize, max_turns: usize) -> Self {
+        self.max_prompt = max_prompt.max(1);
+        self.max_turns = max_turns.max(1);
+        self
+    }
+
+    /// Synthetic MultiTurn-flavoured tokens (ascii-text alphabet).
+    fn push_chat_tokens(&mut self, out: &mut Vec<Token>, n: usize) {
+        let lo: Token = 32;
+        let hi = 127usize.min(self.vocab - 1) as Token;
+        for _ in 0..n {
+            out.push(lo + self.rng.next_below((hi - lo + 1) as u32) as Token);
+        }
+    }
+}
+
+impl Iterator for ConversationStream {
+    type Item = ConvArrival;
+
+    fn next(&mut self) -> Option<ConvArrival> {
+        self.t += self.rng.next_exp(self.rate_per_s);
+        let at = std::time::Duration::from_secs_f64(self.t);
+        // 2-in-3 continuation bias when conversations are open: multi-turn
+        // traffic is mostly follow-ups, which is what makes prefix reuse
+        // the dominant admission path.
+        let continue_open =
+            !self.sessions.is_empty() && self.rng.next_below(3) < 2;
+        if !continue_open {
+            let id = self.next_session;
+            self.next_session += 1;
+            let query = make_query(TaskKind::MultiTurn, id, self.vocab);
+            let mut transcript = query.prompt.clone();
+            let reply_len = query.max_new;
+            self.push_chat_tokens(&mut transcript, reply_len);
+            self.sessions.push(ConvState { id, turn: 1, transcript });
+            return Some(ConvArrival { at, session: id, turn: 1, query });
+        }
+        let idx = self.rng.next_below(self.sessions.len() as u32) as usize;
+        let chunk_len = 8 + self.rng.next_below(17) as usize; // 8..=24
+        let (omin, omax) = TaskKind::MultiTurn.output_len_range();
+        let max_new = omin + self.rng.next_below((omax - omin + 1) as u32) as usize;
+        // Follow-up turn: prompt = the transcript so far + a fresh user
+        // chunk, so this prompt strictly extends the previous turn's.
+        let mut prompt = std::mem::take(&mut self.sessions[idx].transcript);
+        self.push_chat_tokens(&mut prompt, chunk_len);
+        // The stored transcript additionally carries a synthetic assistant
+        // reply, so the *next* turn nests past this whole exchange.
+        let mut transcript = prompt.clone();
+        self.push_chat_tokens(&mut transcript, max_new);
+        let s = &mut self.sessions[idx];
+        s.transcript = transcript;
+        s.turn += 1;
+        let (id, turn) = (s.id, s.turn);
+        if turn >= self.max_turns || s.transcript.len() >= self.max_prompt {
+            self.sessions.swap_remove(idx);
+        }
+        let query = Query {
+            task: TaskKind::MultiTurn,
+            prompt,
+            max_new,
+            temperature: TaskKind::MultiTurn.temperature(),
+        };
+        Some(ConvArrival { at, session: id, turn, query })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +212,51 @@ mod tests {
         // 200 arrivals at 10/s should span roughly 20s.
         let span = arrivals.last().unwrap().at.as_secs_f64();
         assert!(span > 10.0 && span < 40.0, "{span}");
+    }
+
+    #[test]
+    fn conversation_turns_share_strictly_nested_prefixes() {
+        let stream = ConversationStream::new(20.0, 256, 7).with_caps(160, 5);
+        let arrivals: Vec<_> = stream.take(120).collect();
+        let mut last: std::collections::BTreeMap<u64, (usize, Vec<i32>)> = Default::default();
+        let mut followups = 0usize;
+        for a in &arrivals {
+            assert!(a.turn >= 1 && a.turn <= 5);
+            assert!(a.query.task == TaskKind::MultiTurn);
+            if let Some((prev_turn, prev_prompt)) = last.get(&a.session) {
+                followups += 1;
+                assert_eq!(a.turn, prev_turn + 1, "turns must be sequential");
+                assert!(
+                    a.query.prompt.len() > prev_prompt.len()
+                        && a.query.prompt[..prev_prompt.len()] == prev_prompt[..],
+                    "session {}: turn {} prompt must strictly extend turn {}",
+                    a.session,
+                    a.turn,
+                    prev_turn
+                );
+            } else {
+                assert_eq!(a.turn, 1, "a session's first observed turn is turn 1");
+            }
+            last.insert(a.session, (a.turn, a.query.prompt.clone()));
+        }
+        assert!(followups > 20, "most multi-turn traffic should be follow-ups: {followups}");
+        // Transcript caps bound prompt growth (transcript < 160 when the
+        // turn was generated, plus one user chunk of at most 24 tokens).
+        for a in &arrivals {
+            assert!(a.query.prompt.len() < 160 + 24, "{}", a.query.prompt.len());
+        }
+    }
+
+    #[test]
+    fn conversation_stream_is_deterministic() {
+        let a: Vec<_> = ConversationStream::new(5.0, 256, 42).take(60).collect();
+        let b: Vec<_> = ConversationStream::new(5.0, 256, 42).take(60).collect();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.session, y.session);
+            assert_eq!(x.turn, y.turn);
+            assert_eq!(x.query.prompt, y.query.prompt);
+            assert_eq!(x.query.max_new, y.query.max_new);
+        }
     }
 }

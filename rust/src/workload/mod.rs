@@ -1,10 +1,11 @@
 //! SpecBench-style workload suite: task profiles matching the paper's six
 //! evaluation categories, a byte-level tokenizer, and request generators
-//! (fixed suites + Poisson arrival streams).
+//! (fixed suites, Poisson arrival streams, and multi-turn conversation
+//! streams with nested prompt prefixes for prefix-cache workloads).
 
 pub mod generator;
 pub mod tasks;
 pub mod tokenizer;
 
-pub use generator::{specbench_suite, task_queries, ArrivalStream};
+pub use generator::{specbench_suite, task_queries, ArrivalStream, ConvArrival, ConversationStream};
 pub use tasks::{Query, TaskKind, ALL_TASKS};

@@ -28,6 +28,7 @@ fn kv_pool() -> Arc<Mutex<KvManager>> {
         block_size: 16,
         total_blocks: 256,
         bytes_per_token: 4,
+        swap_blocks: 0,
     })))
 }
 
@@ -189,6 +190,7 @@ fn kv_pool_smaller_than_one_request_fails_cleanly() {
         block_size: 16,
         total_blocks: 2,
         bytes_per_token: 4,
+        swap_blocks: 0,
     })));
     let metrics = Arc::new(Metrics::default());
     // Needs 3 + 100 + headroom tokens live by the end — far over the pool.

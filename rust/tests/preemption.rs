@@ -6,7 +6,9 @@
 //! later resumes decode tasks, and the preemption is **invisible in
 //! output** — every response's tokens are byte-identical to the same
 //! request decoded uncontended, nothing fails, and the metrics account for
-//! every suspension.
+//! every suspension. With a swap tier configured, victims suspend to swap
+//! and restore without re-scoring — same byte-identity, strictly less
+//! wasted recompute than the discard path.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -99,6 +101,7 @@ fn prop_saturated_pool_preempts_and_completes_byte_identically() {
         block_size: 4,
         total_blocks: 26,
         bytes_per_token: 4,
+        swap_blocks: 0,
     })));
     let metrics = Arc::new(Metrics::default());
     let now = Instant::now();
@@ -169,6 +172,7 @@ fn preemption_via_batcher_resumed_lane_completes_all() {
         block_size: 4,
         total_blocks: 24,
         bytes_per_token: 4,
+        swap_blocks: 0,
     })));
     let metrics = Arc::new(Metrics::default());
     let batcher = DynamicBatcher::new(BatchPolicy {
@@ -205,6 +209,87 @@ fn preemption_via_batcher_resumed_lane_completes_all() {
     assert_eq!(kv.lock().unwrap().resume_debt(), 0, "all resume debt must settle");
 }
 
+/// Suspend-to-swap vs discard, on the same scripted saturating workload:
+/// run it once with swap disabled (the discard path — every resume
+/// re-scores its prefix) and once with a swap tier large enough for every
+/// victim. Both runs complete all requests byte-identically to the
+/// uncontended decode; the swap run restores every victim's KV from the
+/// tier, so its wasted-recompute gauge reads exactly zero — strictly fewer
+/// wasted tokens than the discard run on the same scenario.
+#[test]
+fn swap_tier_eliminates_resume_recompute_byte_identically() {
+    let chain = mock_chain(512, 24, 33);
+    let reqs = mixed_workload();
+    let expected: Vec<Vec<i32>> =
+        reqs.iter().map(|r| decode(&chain, r).unwrap().tokens).collect();
+
+    let run = |swap_blocks: usize| {
+        let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
+            block_size: 4,
+            total_blocks: 26,
+            bytes_per_token: 4,
+            swap_blocks,
+        })));
+        let metrics = Arc::new(Metrics::default());
+        kv.lock().unwrap().attach_metrics(metrics.clone());
+        let now = Instant::now();
+        let batch: Vec<QueueEntry> = reqs
+            .iter()
+            .map(|r| {
+                router_admit(&kv, chain.len(), r);
+                QueueEntry::fresh(r.clone(), now)
+            })
+            .collect();
+        let (out, _) = drive(&chain, batch, None, reqs.len(), &kv, &metrics);
+        (out, kv, metrics)
+    };
+
+    let (discard_out, _, discard_metrics) = run(0);
+    // 128 swap blocks: even all victims suspended at once (each holding
+    // prompt + committed + in-flight draft, ~11 blocks of 4) fit, so every
+    // preemption in this run must take the swap path.
+    let (swap_out, swap_kv, swap_metrics) = run(128);
+
+    for (label, out) in [("discard", discard_out), ("swap", swap_out)] {
+        let mut by_id: std::collections::BTreeMap<u64, Response> = Default::default();
+        for r in out {
+            let resp = r.expect("pool pressure must never fail a request");
+            by_id.insert(resp.id, resp);
+        }
+        for (req, want) in reqs.iter().zip(&expected) {
+            assert_eq!(
+                &by_id[&req.id].tokens, want,
+                "{label} run, request {}: swap state must be invisible in output",
+                req.id
+            );
+        }
+    }
+
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(discard_metrics.preemptions.load(ord) >= 1, "scenario must saturate");
+    assert!(swap_metrics.preemptions.load(ord) >= 1, "scenario must saturate with swap too");
+    let wasted_discard = discard_metrics.wasted_recompute_tokens.load(ord);
+    let wasted_swap = swap_metrics.wasted_recompute_tokens.load(ord);
+    assert!(wasted_discard > 0, "discard resumes re-score their prefix");
+    assert_eq!(wasted_swap, 0, "a big-enough swap tier restores every victim's KV in full");
+    assert!(wasted_swap < wasted_discard, "swap must beat discard on wasted recompute");
+    assert!(swap_metrics.swapped_blocks.load(ord) > 0, "victims must actually swap out");
+    assert!(
+        swap_metrics.restore_tokens_saved.load(ord) > 0,
+        "restores must credit the recompute they avoided"
+    );
+    assert_eq!(
+        discard_metrics.swapped_blocks.load(ord),
+        0,
+        "a zero-block tier must never accept a victim"
+    );
+    let kvm = swap_kv.lock().unwrap();
+    assert_eq!(kvm.swapped_blocks(), 0, "the swap tier must drain by completion");
+    assert_eq!(kvm.resume_debt(), 0, "all resume debt must settle");
+    assert_eq!(kvm.active_seqs(), 0, "KV leaked");
+    assert!(kvm.restore_tokens_saved() > 0, "manager-level counter mirrors the metric");
+}
+
 /// The victim policy, end to end at the data level: batch-class before
 /// interactive, then the largest KV holding, never the empty set.
 #[test]
@@ -236,6 +321,7 @@ fn zero_token_request_has_no_ttft_even_under_pressure() {
         block_size: 4,
         total_blocks: 32,
         bytes_per_token: 4,
+        swap_blocks: 0,
     })));
     let metrics = Arc::new(Metrics::default());
     let mut zero = Request::new(1, vec![1, 2, 3], 0);

@@ -4,11 +4,14 @@
 //! properties: seeded random input generation (PCG32) with many iterations
 //! per property and failure messages that include the seed for replay.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use polyspec::coordinator::api::{Method, Request};
-use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use polyspec::coordinator::batcher::{BatchPolicy, DynamicBatcher, QueueEntry};
 use polyspec::coordinator::kv::{KvConfig, KvManager};
+use polyspec::coordinator::metrics::Metrics;
+use polyspec::coordinator::router::pipeline_headroom;
 use polyspec::coordinator::scheduler;
 use polyspec::runtime::json::Json;
 use polyspec::spec::csdraft::{self, CsDraftConfig, CsDraftTask};
@@ -32,7 +35,12 @@ fn prop_kv_manager_conserves_blocks() {
         let total = 8 + rng.next_below(64) as usize;
         let block = 1 + rng.next_below(32) as usize;
         let mut mgr =
-            KvManager::new(KvConfig { block_size: block, total_blocks: total, bytes_per_token: 4 });
+            KvManager::new(KvConfig {
+                block_size: block,
+                total_blocks: total,
+                bytes_per_token: 4,
+                swap_blocks: 0,
+            });
         let mut live: Vec<(u64, usize)> = Vec::new();
         let mut next_id = 0u64;
         for _ in 0..200 {
@@ -73,6 +81,119 @@ fn prop_kv_manager_conserves_blocks() {
         }
         assert_eq!(mgr.allocated_blocks(), 0, "seed {seed}: blocks leaked at drain");
         assert_eq!(mgr.active_seqs(), 0);
+    }
+}
+
+/// Paged-KV prefix sharing is invisible in output: for every coordinator
+/// `Method` × `VerifyRule`, requests admitted through the radix-prefix
+/// path — two prompts diverging after a shared full-block prefix, plus an
+/// exact repeat of the first prompt — decode byte-identically to the same
+/// requests decoded alone through `scheduler::decode`. Sharing is real,
+/// not incidental: the pair holds strictly fewer than twice the blocks of
+/// a lone admission, the shared blocks are the *same physical ids* across
+/// all three sequences, and the refcounts prove it.
+#[test]
+fn prop_prefix_shared_decode_identical_to_uncontended() {
+    let methods = [
+        Method::Autoregressive,
+        Method::Dualistic { draft_k: 4 },
+        Method::Polybasic { draft_k: 4, mu: 4 },
+    ];
+    let mut rng = Pcg32::seeded(4096);
+    for rule in [VerifyRule::Greedy, VerifyRule::Speculative, VerifyRule::Typical { eps: 0.25 }] {
+        for &method in &methods {
+            let chain = mock_chain(512, 24, 19);
+            let headroom = pipeline_headroom(&method, chain.len());
+            // A shared prefix spanning two full 8-token blocks; per-request
+            // tails diverge inside the third block.
+            let prefix: Vec<i32> = (0..16).map(|_| rng.next_below(24) as i32).collect();
+            let mut mk = |id: u64| {
+                let mut prompt = prefix.clone();
+                for _ in 0..2 + rng.next_below(4) {
+                    prompt.push(rng.next_below(24) as i32);
+                }
+                let mut r = Request::new(id, prompt, 12 + (id as usize % 3) * 4);
+                r.method = method;
+                r.rule = rule;
+                r.sampling.seed = 7000 + id;
+                r.sampling.temperature = if rule == VerifyRule::Greedy { 0.0 } else { 1.0 };
+                r
+            };
+            let a = mk(1);
+            let b = mk(2);
+            let mut c = mk(3);
+            c.prompt = a.prompt.clone(); // exact repeat: full cached-prefix hit
+            let reqs = [a, b, c];
+            let expected: Vec<Vec<i32>> =
+                reqs.iter().map(|r| scheduler::decode(&chain, r).unwrap().tokens).collect();
+
+            // Generous pool: no preemption, so any divergence is the
+            // cache's fault alone.
+            let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
+                block_size: 8,
+                total_blocks: 64,
+                bytes_per_token: 4,
+                swap_blocks: 0,
+            })));
+            let metrics = Arc::new(Metrics::default());
+            let now = Instant::now();
+            let mut allocated_after = [0usize; 3];
+            let batch: Vec<QueueEntry> = reqs
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let mut kvm = kv.lock().unwrap();
+                    kvm.admit_fresh_prefixed(r.id, &r.prompt, r.prompt.len() + headroom)
+                        .unwrap();
+                    allocated_after[i] = kvm.allocated_blocks();
+                    drop(kvm);
+                    QueueEntry::fresh(r.clone(), now)
+                })
+                .collect();
+            {
+                let kvm = kv.lock().unwrap();
+                // The sharing criterion: two admissions sharing a prefix
+                // consume strictly fewer blocks than two lone admissions.
+                assert!(
+                    allocated_after[1] < 2 * allocated_after[0],
+                    "{method:?} {rule:?}: pair holds {} blocks, one holds {}",
+                    allocated_after[1],
+                    allocated_after[0]
+                );
+                let ta = kvm.seq_block_ids(1).unwrap();
+                let tb = kvm.seq_block_ids(2).unwrap();
+                let tc = kvm.seq_block_ids(3).unwrap();
+                assert_eq!(ta[..2], tb[..2], "prefix blocks must be physically shared");
+                assert_eq!(ta[..2], tc[..2], "the repeat must map the same physical blocks");
+                assert!(
+                    kvm.block_refcount(ta[0]) >= 3,
+                    "{method:?} {rule:?}: three sequences map the shared block, refcount {}",
+                    kvm.block_refcount(ta[0])
+                );
+                assert!(
+                    kvm.prefix_hit_tokens() >= 32,
+                    "{method:?} {rule:?}: both followers must hit the 16-token prefix, got {}",
+                    kvm.prefix_hit_tokens()
+                );
+            }
+
+            let mut got: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+            scheduler::run_batch(&chain, batch, None, reqs.len(), &kv, &metrics, |ev| {
+                if let scheduler::BatchEvent::Done { id, response } = ev {
+                    let resp = response.expect("no failures under an uncontended pool");
+                    got.insert(id, resp.tokens);
+                }
+            });
+            for (r, want) in reqs.iter().zip(&expected) {
+                assert_eq!(
+                    &got[&r.id], want,
+                    "{method:?} {rule:?} request {}: prefix sharing must be invisible in output",
+                    r.id
+                );
+            }
+            let kvm = kv.lock().unwrap();
+            assert_eq!(kvm.active_seqs(), 0, "{method:?} {rule:?}: KV leaked");
+        }
     }
 }
 
