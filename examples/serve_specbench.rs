@@ -3,8 +3,9 @@
 //! queries — or a multi-turn conversation stream whose nested prompts
 //! exercise the paged-KV radix prefix cache — against the polybasic chain,
 //! and report latency/throughput. Writes a machine-readable
-//! `BENCH_serve.json` (throughput, TTFT, prefix-hit rate, restore cost)
-//! next to the working directory for CI trend tracking.
+//! `BENCH_serve.json` (throughput, TTFT, prefix-hit rate, restore cost,
+//! coalesced engine calls per committed token) next to the working
+//! directory for CI trend tracking.
 //!
 //!   make artifacts && cargo run --release --example serve_specbench
 //!
@@ -147,6 +148,18 @@ fn main() -> anyhow::Result<()> {
     put("prompt_tokens_offered", Json::Num(prompt_tokens as f64));
     put("prefix_hit_tokens", Json::Num(hit_tokens));
     put("prefix_hit_rate", Json::Num(hit_rate));
+    // Cross-request batching: how many scheduler-coalesced engine calls
+    // served the run, how many actually carried ≥ 2 sessions, and the
+    // headline efficiency ratio — coalesced engine calls per committed
+    // token (lower is better; 0 when nothing coalesced).
+    let engine_calls = metrics.engine_calls.load(ord) as f64;
+    put("engine_calls", Json::Num(engine_calls));
+    put("batched_calls", Json::Num(metrics.batched_calls.load(ord) as f64));
+    put("batch_mean_sessions", Json::Num(metrics.batch_occupancy.mean()));
+    put(
+        "engine_calls_per_token",
+        Json::Num(engine_calls / (tokens.max(1) as f64)),
+    );
     put("cow_splits", Json::Num(metrics.cow_splits.load(ord) as f64));
     put("swapped_blocks", Json::Num(metrics.swapped_blocks.load(ord) as f64));
     put(
@@ -158,6 +171,13 @@ fn main() -> anyhow::Result<()> {
         Json::Num(metrics.wasted_recompute_tokens.load(ord) as f64),
     );
     put("metrics", snapshot);
+    println!(
+        "coalescing: {engine_calls:.0} engine calls ({:.0} batched, mean {:.2} sessions) \
+         -> {:.3} calls/token",
+        metrics.batched_calls.load(ord) as f64,
+        metrics.batch_occupancy.mean(),
+        engine_calls / (tokens.max(1) as f64),
+    );
     let json = Json::Obj(report);
     std::fs::write("BENCH_serve.json", format!("{json}\n"))?;
     println!("\nwrote BENCH_serve.json");

@@ -121,6 +121,49 @@ def export_role(family_cfg, role, out_dir):
     }
 
 
+def export_role_batched(family_cfg, role, out_dir, batch):
+    """Batched entry point: lower f(tokens [B, S]) -> (logits [B, S, V],).
+
+    This is the device-side half of the scheduler's cross-request batched
+    verification (one ``SessionAppendBatch`` per chain member per tick).
+    The rust engine currently serves batches by looping ``execute`` per
+    prefix because the single-sequence HLO above has no batch dimension;
+    this export produces the ``[B, S]`` module it would call instead.
+
+    Stub status: the lowering is a plain ``vmap`` over the full-prefix
+    forward, so each batched call still recomputes every prefix from
+    position 0 — the real win needs the KV-cached incremental HLO
+    (see ROADMAP "device-side KV-cached HLO"), at which point the batch
+    dimension rides on the cache pages rather than the token prefix.
+    Until the rust loader grows a batched ``execute`` wrapper this entry
+    is exported under a separate manifest key and left unread.
+    """
+    cfg, params = build_role_params(family_cfg, role)
+    named = [(n, a) for n, a in flatten_params(params)
+             if isinstance(a, np.ndarray) and a.dtype != object and a.ndim > 0]
+    flat_leaves = [a for _, a in named]
+    treedef_params = params
+
+    def fn(tokens, *leaves):
+        rebuilt = _rebuild(treedef_params, list(leaves))
+        # Weights are shared across the batch: vmap only the token axis.
+        return (jax.vmap(lambda t: forward(rebuilt, t, cfg))(tokens),)
+
+    token_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    leaf_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat_leaves]
+    lowered = jax.jit(fn).lower(token_spec, *leaf_specs)
+
+    fam_dir = os.path.join(out_dir, family_cfg.family)
+    os.makedirs(fam_dir, exist_ok=True)
+    hlo_rel = f"{family_cfg.family}/{role}.b{batch}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_rel), "w") as f:
+        f.write(to_hlo_text(lowered))
+    # Weights blob + args layout are identical to the unbatched export, so
+    # the entry only references them; no second params.bin is written.
+    return {"hlo": hlo_rel, "batch": batch,
+            "params_bin": f"{family_cfg.family}/{role}.params.bin"}
+
+
 def _rebuild(template, leaves):
     """Rebuild the params pytree from ``leaves`` in flatten order, keeping
     static entries (ints such as quant group sizes) from the template."""
@@ -134,12 +177,16 @@ def _rebuild(template, leaves):
     return leaves.pop(0)
 
 
-def export_family(family, out_dir, roles=None):
+def export_family(family, out_dir, roles=None, batched=0):
     fam = configs.FAMILIES[family]
     entry = {"roles": {}}
     for role in (roles or fam.roles().keys()):
         print(f"[aot] lowering {family}/{role} ...", flush=True)
         entry["roles"][role] = export_role(fam, role, out_dir)
+        if batched > 0:
+            print(f"[aot] lowering {family}/{role} [B={batched}] ...", flush=True)
+            entry["roles"][role]["batched"] = export_role_batched(
+                fam, role, out_dir, batched)
     return entry
 
 
@@ -148,6 +195,9 @@ def main():
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--families", default=",".join(configs.DEFAULT_SET),
                     help="comma list, or 'bench' / 'scale' / 'all'")
+    ap.add_argument("--batched", type=int, default=0,
+                    help="also export a [B, S] batched entry per role "
+                         "(0 = off; experimental, unread by the runtime)")
     args = ap.parse_args()
 
     sets = {"bench": configs.BENCH_SET, "scale": configs.SCALE_SET,
@@ -162,7 +212,8 @@ def main():
         with open(manifest_path) as f:
             manifest = json.load(f)
     for fam in fams:
-        manifest["families"][fam] = export_family(fam, out_dir)
+        manifest["families"][fam] = export_family(fam, out_dir,
+                                                  batched=args.batched)
     with open(manifest_path, "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"[aot] wrote {manifest_path} ({len(manifest['families'])} families)")

@@ -76,6 +76,57 @@ impl LatencyHistogram {
     }
 }
 
+/// Log2-bucketed histogram over small counts (batch occupancy: bucket i
+/// counts samples in `[2^i, 2^{i+1})` sessions — 1, 2–3, 4–7, …).
+#[derive(Debug)]
+pub struct CountHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+const COUNT_NBUCKETS: usize = 16;
+
+impl Default for CountHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: (0..COUNT_NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl CountHistogram {
+    pub fn record(&self, n: u64) {
+        let n = n.max(1);
+        let bucket = (63 - n.leading_zeros() as usize).min(COUNT_NBUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(n, Ordering::Relaxed);
+        self.max.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+}
+
 /// Whole-server metrics registry.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -118,6 +169,19 @@ pub struct Metrics {
     /// Recompute tokens avoided because a preempted request restored its
     /// KV from swap instead of re-scoring its prefix.
     pub restore_tokens_saved: AtomicU64,
+    /// Engine calls issued by the scheduler's coalescing path: one
+    /// `SessionAppendBatch` per (chain member, sweep) holding planned
+    /// appends. Unbatched in-step calls are visible only through the
+    /// models' own [`calls`](crate::spec::types::LanguageModel::calls)
+    /// counters.
+    pub engine_calls: AtomicU64,
+    /// The subset of [`engine_calls`](Self::engine_calls) that coalesced
+    /// two or more sessions — the calls cross-request batching saved.
+    pub batched_calls: AtomicU64,
+    /// Tokens appended through batched engine calls.
+    pub batched_tokens: AtomicU64,
+    /// Sessions-per-batched-call occupancy distribution.
+    pub batch_occupancy: CountHistogram,
     /// Requests currently holding a live decode task on some worker.
     inflight: AtomicU64,
     inflight_peak: AtomicU64,
@@ -213,6 +277,18 @@ impl Metrics {
         self.restore_tokens_saved.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
+    /// One coalesced engine call: `sessions` live sessions' planned
+    /// appends went out as a single `SessionAppendBatch` carrying
+    /// `tokens` tokens total.
+    pub fn record_engine_call(&self, sessions: usize, tokens: usize) {
+        self.engine_calls.fetch_add(1, Ordering::Relaxed);
+        if sessions >= 2 {
+            self.batched_calls.fetch_add(1, Ordering::Relaxed);
+        }
+        self.batched_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.batch_occupancy.record(sessions as u64);
+    }
+
     /// Expose a model's [`HealthTracker`] in metrics snapshots. Workers
     /// call this once per chain member at engine-load time; re-registering
     /// the same name replaces the handle (workers share per-model trackers
@@ -283,6 +359,27 @@ impl Metrics {
             Json::Num(self.swapped_blocks.load(Ordering::Relaxed) as f64));
         put("restore_tokens_saved",
             Json::Num(self.restore_tokens_saved.load(Ordering::Relaxed) as f64));
+        put("engine_calls", Json::Num(self.engine_calls.load(Ordering::Relaxed) as f64));
+        put("batched_calls", Json::Num(self.batched_calls.load(Ordering::Relaxed) as f64));
+        put("batched_tokens",
+            Json::Num(self.batched_tokens.load(Ordering::Relaxed) as f64));
+        {
+            let mut occ = BTreeMap::new();
+            occ.insert("calls".into(), Json::Num(self.batch_occupancy.count() as f64));
+            occ.insert("mean_sessions".into(), Json::Num(self.batch_occupancy.mean()));
+            occ.insert("max_sessions".into(), Json::Num(self.batch_occupancy.max() as f64));
+            occ.insert(
+                "log2_buckets".into(),
+                Json::Arr(
+                    self.batch_occupancy
+                        .buckets
+                        .iter()
+                        .map(|b| Json::Num(b.load(Ordering::Relaxed) as f64))
+                        .collect(),
+                ),
+            );
+            obj.insert("batch_occupancy".into(), Json::Obj(occ));
+        }
         put("mean_accept", Json::Num(self.mean_accept()));
         put("inflight", Json::Num(self.inflight() as f64));
         put("inflight_peak", Json::Num(self.inflight_peak() as f64));
@@ -384,6 +481,8 @@ mod tests {
         m.record_cow_split();
         m.record_swap_out(5);
         m.record_restore_saved(20);
+        m.record_engine_call(3, 12); // coalesced: 3 sessions in one call
+        m.record_engine_call(1, 2); // singleton batch: engine call, not "batched"
         let health = Arc::new(HealthTracker::default());
         health.record_failure(crate::spec::types::FaultKind::Transient);
         health.record_retry();
@@ -404,6 +503,17 @@ mod tests {
         assert_eq!(parsed.req("cow_splits").unwrap().as_usize(), Some(1));
         assert_eq!(parsed.req("swapped_blocks").unwrap().as_usize(), Some(5));
         assert_eq!(parsed.req("restore_tokens_saved").unwrap().as_usize(), Some(20));
+        assert_eq!(parsed.req("engine_calls").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.req("batched_calls").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.req("batched_tokens").unwrap().as_usize(), Some(14));
+        let occ = parsed.req("batch_occupancy").unwrap();
+        assert_eq!(occ.get("calls").unwrap().as_usize(), Some(2));
+        assert!((occ.get("mean_sessions").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(occ.get("max_sessions").unwrap().as_usize(), Some(3));
+        // 3 sessions -> bucket 1 ([2,4)); 1 session -> bucket 0.
+        let buckets = occ.get("log2_buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets[0].as_usize(), Some(1));
+        assert_eq!(buckets[1].as_usize(), Some(1));
         let target = parsed.req("model_health").unwrap().get("target").unwrap();
         assert_eq!(target.get("errors").unwrap().as_usize(), Some(1));
         assert_eq!(target.get("retries").unwrap().as_usize(), Some(1));

@@ -29,6 +29,32 @@
 //! client sees a pause, never a spurious failure. A grow error surfaces
 //! only when the pool is smaller than one lone request's footprint.
 //!
+//! **Cross-request batched verification (plan → submit → absorb).** With
+//! B live requests decoding against the same chain, the naive sweep costs
+//! B engine calls per member per tick. Each sweep therefore opens with a
+//! *submit* pass ([`submit_batched`]): every live task is asked to **plan**
+//! its next engine call ([`DecodeTask::plan_append`] — `Some` exactly when
+//! that call is a pure, non-empty session append on a batch-capable
+//! session); plans are grouped by chain member (matching each plan's model
+//! key against `Arc::as_ptr` of the chain entries) and each member with
+//! any plans receives **one**
+//! [`append_batch`](LanguageModel::append_batch) — one engine call, one
+//! `SessionAppendBatch` over the channel on remote engines — whose
+//! per-entry results are handed back through
+//! [`DecodeTask::absorb_append`]. An absorbed append makes the task's
+//! first in-step `reconcile` a free no-op, so the sweep's `step()` calls
+//! then run unchanged and committed output stays **byte-identical** to
+//! the unbatched dispatch (pinned per Method × VerifyRule by the property
+//! tests). Fallback is per-task and total: a task that declines to plan
+//! (mid-verify in-flight state, unhealthy drafter, non-batchable session)
+//! or a member with no batched path simply appends in-step as before; a
+//! per-entry fault inside a batch reaches only its own task, which
+//! surfaces it on its next step exactly like an in-step append failure
+//! (drafter faults degrade, target faults fail — PR 6's trichotomy is
+//! unchanged). [`SchedulerOpts::coalesce`] turns the submit pass off,
+//! which is the oracle the batched path is tested against; coalesced
+//! calls are counted by [`Metrics::record_engine_call`].
+//!
 //! **Deadlines and degradation.** A request with a
 //! [`deadline`](Request::deadline) is checked at every step boundary (and
 //! once more at admission): overdue requests are cancelled with
@@ -56,7 +82,7 @@ use anyhow::Result;
 use crate::spec::autoregressive::ArTask;
 use crate::spec::dualistic::{self, DualisticTask};
 use crate::spec::polybasic::PolyTask;
-use crate::spec::task::{DecodeTask, InflightState, ResumeState};
+use crate::spec::task::{DecodeTask, InflightState, PlannedAppend, ResumeState};
 use crate::spec::types::{GenerationOutput, LanguageModel, Token};
 use crate::spec::PolyConfig;
 
@@ -528,6 +554,73 @@ fn grow_with_preemption<'m>(
     }
 }
 
+/// Scheduler tuning knobs for [`run_batch_opts`]; [`run_batch`] runs the
+/// defaults.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerOpts {
+    /// Coalesce the live tasks' planned session appends into one batched
+    /// engine call per (chain member, sweep) — see the module docs. Off
+    /// reproduces the per-task unbatched dispatch, byte-identically: the
+    /// oracle the batched path is pinned against.
+    pub coalesce: bool,
+}
+
+impl Default for SchedulerOpts {
+    fn default() -> Self {
+        Self { coalesce: true }
+    }
+}
+
+/// The submit half of plan → submit → absorb (module docs): collect every
+/// live task's planned append, group by chain member, issue **one**
+/// [`append_batch`](LanguageModel::append_batch) per member holding any,
+/// and hand each per-entry result back through
+/// [`DecodeTask::absorb_append`]. Entry order is live order (the order
+/// the sweep steps tasks), so fault-injection scripts observe batched
+/// appends in the same sequence the unbatched dispatch would issue them.
+/// A member whose `append_batch` returns `None` has no batched path; its
+/// group's tasks silently fall back to in-step appends.
+fn submit_batched(
+    chain: &[Arc<dyn LanguageModel>],
+    live: &mut [Live<'_>],
+    metrics: &Arc<Metrics>,
+) {
+    let mut plans: Vec<(usize, PlannedAppend)> = Vec::new();
+    for (i, l) in live.iter_mut().enumerate() {
+        if let Some(p) = l.task.plan_append() {
+            plans.push((i, p));
+        }
+    }
+    if plans.is_empty() {
+        return;
+    }
+    for (m, member) in chain.iter().enumerate() {
+        let key = Arc::as_ptr(member) as *const () as usize;
+        // An aliased chain entry (same Arc twice) batches at its first slot.
+        if chain[..m].iter().any(|c| Arc::as_ptr(c) as *const () as usize == key) {
+            continue;
+        }
+        let group: Vec<usize> = (0..plans.len()).filter(|&p| plans[p].1.model_key == key).collect();
+        if group.is_empty() {
+            continue;
+        }
+        let entries: Vec<(u64, Arc<[Token]>)> =
+            group.iter().map(|&p| (plans[p].1.handle, plans[p].1.tokens.clone())).collect();
+        let Some(results) = member.append_batch(&entries) else {
+            continue;
+        };
+        let appended: usize = entries.iter().map(|(_, t)| t.len()).sum();
+        metrics.record_engine_call(entries.len(), appended);
+        let mut results = results.into_iter();
+        for &p in &group {
+            let r = results
+                .next()
+                .unwrap_or_else(|| Err(anyhow::anyhow!("batched append reply missing an entry")));
+            live[plans[p].0].task.absorb_append(r);
+        }
+    }
+}
+
 /// Continuous-batching decode of `batch` (plus anything `admit` delivers
 /// while work is in flight) on this worker.
 ///
@@ -542,13 +635,31 @@ fn grow_with_preemption<'m>(
 /// as it lands, then one [`BatchEvent::Done`] per request in **completion
 /// order** (failures surface as `Err` responses rather than silent drops).
 /// KV for every request is released exactly once per run segment.
+///
+/// Runs with [`SchedulerOpts::default`] — batched verification on; see
+/// [`run_batch_opts`] to change that.
 pub fn run_batch(
+    chain: &[Arc<dyn LanguageModel>],
+    batch: Batch,
+    admit: Option<&DynamicBatcher>,
+    max_live: usize,
+    kv: &Arc<Mutex<KvManager>>,
+    metrics: &Arc<Metrics>,
+    on_event: impl FnMut(BatchEvent<'_>),
+) {
+    run_batch_opts(chain, batch, admit, max_live, kv, metrics, SchedulerOpts::default(), on_event)
+}
+
+/// [`run_batch`] with explicit [`SchedulerOpts`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_batch_opts(
     chain: &[Arc<dyn LanguageModel>],
     mut batch: Batch,
     admit: Option<&DynamicBatcher>,
     max_live: usize,
     kv: &Arc<Mutex<KvManager>>,
     metrics: &Arc<Metrics>,
+    opts: SchedulerOpts,
     mut on_event: impl FnMut(BatchEvent<'_>),
 ) {
     let max_live = max_live.max(1);
@@ -600,6 +711,11 @@ pub fn run_batch(
             // will free. Back off briefly and retry.
             std::thread::sleep(Duration::from_micros(200));
             continue;
+        }
+
+        // ---- submit: one batched engine call per chain member ------------
+        if opts.coalesce {
+            submit_batched(chain, &mut live, metrics);
         }
 
         // ---- one sweep: one step per live task, round-robin --------------
@@ -923,5 +1039,92 @@ mod tests {
         assert_eq!(resp.ttft, None, "no first token -> no TTFT");
         assert_eq!(metrics.ttft_latency.count(), 0, "histogram must not see a fake TTFT");
         assert_eq!(kv.lock().unwrap().active_seqs(), 0);
+    }
+
+    #[test]
+    fn coalesced_sweep_issues_one_engine_call_per_tick() {
+        // B identical autoregressive requests against one target: every
+        // sweep plans B appends and submits ONE batched call, so the
+        // target observes exactly T calls (one per tick) instead of B×T —
+        // while every response stays byte-identical to the one-shot
+        // decode oracle.
+        const B: u64 = 4;
+        const T: usize = 10;
+        let chain = mock_chain(512, 24, 5);
+        let oracle = decode(&chain, &mk_req(0, T, Method::Autoregressive)).unwrap();
+        let kv = Arc::new(Mutex::new(KvManager::new(KvConfig::default())));
+        let metrics = Arc::new(Metrics::default());
+        let now = Instant::now();
+        let batch: Vec<_> = (0..B)
+            .map(|id| {
+                let req = mk_req(id, T, Method::Autoregressive);
+                kv.lock().unwrap().admit(req.id, 40).unwrap();
+                QueueEntry::fresh(req, now)
+            })
+            .collect();
+        for m in &chain {
+            m.reset_counters();
+        }
+        let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
+        run_batch(&chain, batch, None, B as usize, &kv, &metrics, |ev| {
+            if let BatchEvent::Done { response, .. } = ev {
+                out.push(response);
+            }
+        });
+        assert_eq!(out.len(), B as usize);
+        for r in &out {
+            assert_eq!(r.as_ref().unwrap().tokens, oracle.tokens, "batched decode diverged");
+        }
+        assert_eq!(chain[0].calls(), T as u64, "one engine call per (member, tick)");
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.engine_calls.load(Ordering::Relaxed), T as u64);
+        assert_eq!(metrics.batched_calls.load(Ordering::Relaxed), T as u64);
+        assert_eq!(metrics.batch_occupancy.max(), B);
+        assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    }
+
+    #[test]
+    fn unbatched_opts_reproduce_batched_output() {
+        // Mixed-method live set, coalescing on vs off: committed tokens
+        // must be byte-identical (absorbed batched rows are bit-identical
+        // to the in-step appends they replace).
+        let methods = [
+            Method::Autoregressive,
+            Method::Dualistic { draft_k: 3 },
+            Method::Polybasic { draft_k: 3, mu: 4 },
+        ];
+        let run = |coalesce: bool| -> Vec<(u64, Vec<Token>)> {
+            let chain = mock_chain(512, 24, 7);
+            let kv = Arc::new(Mutex::new(KvManager::new(KvConfig::default())));
+            let metrics = Arc::new(Metrics::default());
+            let now = Instant::now();
+            let batch: Vec<_> = methods
+                .iter()
+                .enumerate()
+                .map(|(i, &m)| {
+                    let req = mk_req(i as u64, 12, m);
+                    kv.lock().unwrap().admit(req.id, 60).unwrap();
+                    QueueEntry::fresh(req, now)
+                })
+                .collect();
+            let mut out: Vec<(u64, Vec<Token>)> = Vec::new();
+            run_batch_opts(
+                &chain,
+                batch,
+                None,
+                4,
+                &kv,
+                &metrics,
+                SchedulerOpts { coalesce },
+                |ev| {
+                    if let BatchEvent::Done { id, response } = ev {
+                        out.push((id, response.unwrap().tokens));
+                    }
+                },
+            );
+            out.sort_by_key(|&(id, _)| id);
+            out
+        };
+        assert_eq!(run(true), run(false), "coalescing changed committed output");
     }
 }

@@ -158,6 +158,26 @@ mod real {
             );
             Ok(data)
         }
+
+        /// Score a whole batch of session prefixes in one engine visit —
+        /// the device half of `SessionAppendBatch`. The compiled HLO still
+        /// has no batch dimension (a `[B, S]` entry point is tracked on
+        /// the ROADMAP next to device-side KV caching; see the batched
+        /// stub in `python/compile/aot.py`), so the stacked prefixes
+        /// execute back-to-back under **one** counters bracket: today's
+        /// win is one channel round-trip and one timed call per
+        /// (model, tick) instead of per request.
+        pub fn forward_batch(&self, prefixes: &[&[Token]]) -> Result<Vec<Logits>> {
+            let start = Instant::now();
+            let vocab = self.meta.vocab;
+            let mut out = Vec::with_capacity(prefixes.len());
+            for tokens in prefixes {
+                let data = self.execute(tokens)?;
+                out.push(Logits::new(data[..tokens.len() * vocab].to_vec(), tokens.len(), vocab));
+            }
+            self.counters.record(start.elapsed());
+            Ok(out)
+        }
     }
 
     impl LanguageModel for ModelEngine {
@@ -243,6 +263,10 @@ mod stub {
 
         pub fn role(&self) -> &str {
             &self.role
+        }
+
+        pub fn forward_batch(&self, _prefixes: &[&[Token]]) -> Result<Vec<Logits>> {
+            anyhow::bail!(DISABLED)
         }
     }
 

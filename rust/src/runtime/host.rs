@@ -20,6 +20,24 @@
 //! stateless full-context; device-side KV caching is a separate artifact
 //! change tracked on the ROADMAP.)
 //!
+//! # Batched appends (plan → submit → absorb)
+//!
+//! The step scheduler coalesces the pending suffixes of every live task
+//! that targets the same chain member into one [`SessionAppendBatch`]
+//! request per (model, tick): each task *plans* its next pure-append
+//! engine call (`DecodeTask::plan_append`), the scheduler groups the plans
+//! by model and *submits* one batched request per member
+//! ([`LanguageModel::append_batch`]), and each task *absorbs* its
+//! per-entry rows before `step()` runs — whose first reconcile is then a
+//! free no-op. The engine thread executes a batch as one stacked forward
+//! per model ([`ModelEngine::forward_batch`]) and slices each session's
+//! new rows out of the result. The reply carries per-entry `Result`s, so
+//! one poisoned session fails alone: failed entries are retried as a
+//! *subset* batch under the same [`CallPolicy`] backoff, and every entry's
+//! outcome feeds the per-model health tracker individually.
+//!
+//! [`SessionAppendBatch`]: Req::SessionAppendBatch
+//!
 //! # Deadlines, retries, health
 //!
 //! Every channel round-trip is bounded by a [`CallPolicy`] deadline
@@ -53,8 +71,16 @@ enum Req {
     CostProbe { model: usize, ctx_len: usize, iters: usize, reply: mpsc::Sender<Result<f64>> },
     SessionOpen { model: usize, reply: mpsc::Sender<u64> },
     /// Extend session `session` by `tokens`; the reply holds logits rows for
-    /// the appended suffix only.
-    SessionAppend { session: u64, tokens: Vec<Token>, reply: mpsc::Sender<Result<Logits>> },
+    /// the appended suffix only. Tokens ride in an `Arc` so retry attempts
+    /// clone a pointer, not the buffer.
+    SessionAppend { session: u64, tokens: Arc<[Token]>, reply: mpsc::Sender<Result<Logits>> },
+    /// Extend many sessions at once; executed as one stacked forward per
+    /// distinct model. The reply holds one `Result` per entry, in order —
+    /// a bad entry (unknown session, over capacity) fails alone.
+    SessionAppendBatch {
+        appends: Vec<(u64, Arc<[Token]>)>,
+        reply: mpsc::Sender<Vec<Result<Logits>>>,
+    },
     SessionRollback { session: u64, to_len: usize, reply: mpsc::Sender<Result<()>> },
     SessionClose { session: u64 },
     Shutdown,
@@ -261,6 +287,9 @@ fn engine_thread(
                 })();
                 let _ = reply.send(r);
             }
+            Req::SessionAppendBatch { appends, reply } => {
+                let _ = reply.send(run_append_batch(&engines, &mut sessions, &appends));
+            }
             Req::SessionRollback { session, to_len, reply } => {
                 let r = (|| -> Result<()> {
                     let st = sessions.get_mut(&session).context("unknown session")?;
@@ -280,6 +309,104 @@ fn engine_thread(
             Req::Shutdown => break,
         }
     }
+}
+
+/// Execute a batched append on the engine thread: extend every named
+/// session, run **one** stacked forward per distinct model in the batch,
+/// and slice each entry's new rows out of the shared result. Entries fail
+/// individually (unknown session); a model-level forward failure fails —
+/// and rolls back — every entry of that model's group, leaving other
+/// models' entries untouched.
+fn run_append_batch(
+    engines: &[ModelEngine],
+    sessions: &mut HashMap<u64, SessionState>,
+    appends: &[(u64, Arc<[Token]>)],
+) -> Vec<Result<Logits>> {
+    struct Staged {
+        model: usize,
+        session: u64,
+        from: usize,
+        len: usize,
+    }
+    let mut results: Vec<Option<Result<Logits>>> = appends.iter().map(|_| None).collect();
+    // Stage 1: extend each entry's session in batch order, remembering
+    // where its suffix starts. Two entries against the same session stack
+    // (causal rows depend only on the prefix before them, so one
+    // full-context forward scores both suffixes bit-identically to
+    // sequential solo appends).
+    let mut staged: Vec<Option<Staged>> = Vec::with_capacity(appends.len());
+    for (i, (sid, tokens)) in appends.iter().enumerate() {
+        match sessions.get_mut(sid) {
+            None => {
+                results[i] = Some(Err(anyhow::anyhow!("unknown session {sid}")));
+                staged.push(None);
+            }
+            Some(st) => {
+                let from = st.tokens.len();
+                st.tokens.extend_from_slice(tokens);
+                staged.push(Some(Staged { model: st.model, session: *sid, from, len: tokens.len() }));
+            }
+        }
+    }
+    // Stage 2: one batched forward per distinct model over the distinct
+    // sessions it touches (first-appearance order keeps this deterministic).
+    let mut order: Vec<(usize, u64)> = Vec::new();
+    for s in staged.iter().flatten() {
+        if !order.iter().any(|&(_, sid)| sid == s.session) {
+            order.push((s.model, s.session));
+        }
+    }
+    let mut distinct_models: Vec<usize> = order.iter().map(|&(m, _)| m).collect();
+    distinct_models.sort_unstable();
+    distinct_models.dedup();
+    let mut ok_rows: HashMap<u64, Logits> = HashMap::new();
+    let mut failed: HashMap<u64, String> = HashMap::new();
+    for model in distinct_models {
+        let group: Vec<u64> =
+            order.iter().filter(|&&(m, _)| m == model).map(|&(_, s)| s).collect();
+        let prefixes: Vec<&[Token]> =
+            group.iter().map(|sid| sessions[sid].tokens.as_slice()).collect();
+        match engines[model].forward_batch(&prefixes) {
+            Ok(all) => {
+                for (sid, logits) in group.iter().zip(all) {
+                    ok_rows.insert(*sid, logits);
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for sid in &group {
+                    failed.insert(*sid, msg.clone());
+                }
+            }
+        }
+    }
+    // Stage 3: roll failed sessions back to their pre-batch length (the
+    // first entry per session carries the smallest `from`), then slice
+    // each successful entry's suffix rows.
+    for s in staged.iter().flatten() {
+        if failed.contains_key(&s.session) {
+            if let Some(st) = sessions.get_mut(&s.session) {
+                if st.tokens.len() > s.from {
+                    st.tokens.truncate(s.from);
+                }
+            }
+        }
+    }
+    for (i, s) in staged.iter().enumerate() {
+        let Some(s) = s else { continue };
+        if let Some(msg) = failed.get(&s.session) {
+            results[i] = Some(Err(anyhow::anyhow!("batched forward failed: {msg}")));
+        } else {
+            let logits = &ok_rows[&s.session];
+            let vocab = logits.vocab();
+            let mut data = Vec::with_capacity(s.len * vocab);
+            for t in s.from..s.from + s.len {
+                data.extend_from_slice(logits.row(t));
+            }
+            results[i] = Some(Ok(Logits::new(data, s.len, vocab)));
+        }
+    }
+    results.into_iter().map(|r| r.expect("every batch entry resolved")).collect()
 }
 
 /// `Send + Sync` proxy to one engine on the host thread.
@@ -418,6 +545,87 @@ impl LanguageModel for RemoteModel {
     fn health_handle(&self) -> Option<Arc<HealthTracker>> {
         Some(self.health.clone())
     }
+
+    fn append_batch(&self, appends: &[(u64, Arc<[Token]>)]) -> Option<Vec<Result<Option<Logits>>>> {
+        if appends.is_empty() {
+            return Some(Vec::new());
+        }
+        let start = Instant::now();
+        let mut out: Vec<Option<Result<Option<Logits>>>> =
+            appends.iter().map(|_| None).collect();
+        let mut pending: Vec<usize> = (0..appends.len()).collect();
+        let mut backoff = self.policy.backoff;
+        let mut tries_left = self.policy.retries;
+        loop {
+            let batch: Vec<(u64, Arc<[Token]>)> =
+                pending.iter().map(|&i| appends[i].clone()).collect();
+            let round = {
+                let (reply, rx) = mpsc::channel();
+                self.send(Req::SessionAppendBatch { appends: batch, reply })
+                    .and_then(|()| self.recv(&rx))
+            };
+            let replies = match round {
+                Err(transport) => {
+                    // Transport faults are never retried (the engine may
+                    // still be executing the batch, so session state is
+                    // unknown): every still-pending entry fails with the
+                    // same typed fault.
+                    let kind = transport
+                        .downcast_ref::<ModelFault>()
+                        .map(|f| f.kind)
+                        .unwrap_or(FaultKind::Lost);
+                    for &i in &pending {
+                        self.health.record_failure(kind);
+                        out[i] = Some(Err(self.fault(kind)));
+                    }
+                    break;
+                }
+                Ok(replies) => replies,
+            };
+            // Clean error replies are retried as a *subset* batch: the
+            // engine rolled those sessions back before replying, so the
+            // retry re-applies cleanly while settled entries keep their
+            // rows. Each entry's outcome feeds the health tracker alone.
+            let mut replies = replies.into_iter();
+            let mut still = Vec::new();
+            for &slot in &pending {
+                match replies.next() {
+                    Some(Ok(logits)) => {
+                        self.health.record_success();
+                        out[slot] = Some(Ok(Some(logits)));
+                    }
+                    Some(Err(e)) => {
+                        if tries_left == 0 {
+                            self.health.record_failure(FaultKind::Transient);
+                            out[slot] = Some(Err(e.context(ModelFault {
+                                kind: FaultKind::Transient,
+                                model: self.meta.name.clone(),
+                            })));
+                        } else {
+                            still.push(slot);
+                        }
+                    }
+                    None => {
+                        // Short reply: an engine bug, treated as lost.
+                        self.health.record_failure(FaultKind::Lost);
+                        out[slot] = Some(Err(self.fault(FaultKind::Lost)));
+                    }
+                }
+            }
+            if still.is_empty() {
+                break;
+            }
+            tries_left -= 1;
+            for _ in &still {
+                self.health.record_retry();
+            }
+            std::thread::sleep(backoff);
+            backoff = backoff.saturating_mul(2);
+            pending = still;
+        }
+        self.counters.record(start.elapsed());
+        Some(out.into_iter().map(|o| o.expect("every batch entry resolved")).collect())
+    }
 }
 
 /// Host-side handle to an engine-thread scoring session. Tracks the prefix
@@ -450,20 +658,21 @@ impl ScoringSession for RemoteSession<'_> {
             return Ok(());
         }
         let start = Instant::now();
-        // Retry-safe: the engine truncates its prefix back before sending
-        // an error reply, so a retried append re-applies cleanly.
+        // One buffer allocation up front; retry attempts clone the Arc,
+        // not the tokens. Retry-safe: the engine truncates its prefix back
+        // before sending an error reply, so a retried append re-applies
+        // cleanly.
+        let tokens: Arc<[Token]> = Arc::from(suffix);
         let logits = self.model.call(|| {
             let (reply, rx) = mpsc::channel();
             self.model.send(Req::SessionAppend {
                 session: self.id,
-                tokens: suffix.to_vec(),
+                tokens: tokens.clone(),
                 reply,
             })?;
             self.model.recv(&rx)
         })?;
-        for t in 0..logits.seq() {
-            self.rows.extend_from_slice(logits.row(t));
-        }
+        self.rows.extend_from_slice(logits.data());
         self.tokens.extend_from_slice(suffix);
         self.model.counters.record(start.elapsed());
         Ok(())
@@ -492,6 +701,30 @@ impl ScoringSession for RemoteSession<'_> {
         let vocab = self.model.meta.vocab;
         assert!(pos < self.tokens.len(), "row {pos} out of range {}", self.tokens.len());
         &self.rows[pos * vocab..(pos + 1) * vocab]
+    }
+
+    fn batch_handle(&self) -> Option<u64> {
+        Some(self.id)
+    }
+
+    fn absorb_batched(&mut self, suffix: &[Token], rows: Option<Logits>) -> Result<()> {
+        if suffix.is_empty() {
+            return Ok(());
+        }
+        // The engine ships the suffix rows in the batch reply; absorb them
+        // with one bulk copy of the flat buffer.
+        let logits = rows.context("remote session needs shipped logits rows")?;
+        anyhow::ensure!(
+            logits.seq() == suffix.len() && logits.vocab() == self.model.meta.vocab,
+            "batched reply shape mismatch: got [{}, {}], want [{}, {}]",
+            logits.seq(),
+            logits.vocab(),
+            suffix.len(),
+            self.model.meta.vocab,
+        );
+        self.rows.extend_from_slice(logits.data());
+        self.tokens.extend_from_slice(suffix);
+        Ok(())
     }
 }
 

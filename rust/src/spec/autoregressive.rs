@@ -8,18 +8,28 @@
 //! `StatelessSession`). Call accounting is unchanged: one scoring call per
 //! generated token.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use anyhow::Result;
 
 use super::rng::Pcg32;
 use super::sampler::{self};
-use super::task::{DecodeTask, InflightState, ResumeState, StepMeter, StepOutcome};
+use super::task::{
+    model_key, DecodeTask, InflightState, PlannedAppend, ResumeState, StepMeter, StepOutcome,
+};
 use super::types::{
-    softmax_into, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token,
+    reconcile, softmax_into, GenerationOutput, LanguageModel, Logits, SamplingParams,
+    ScoringSession, Token,
 };
 
 /// Autoregressive decode as a resumable state machine: `step` commits
-/// exactly one token. The prompt is prefilled lazily on the first step, so
-/// constructing a task is free.
+/// exactly one token. Every step opens by reconciling the session to the
+/// canonical `prompt + committed` prefix (the whole prompt on the first
+/// step, the previously committed token afterwards), so constructing a
+/// task is free and the step's one engine call is always a pure append —
+/// which makes it plannable for the scheduler's cross-request batching
+/// (a batched pre-append turns the reconcile into a free no-op).
 pub struct ArTask<'m> {
     model: &'m dyn LanguageModel,
     session: Box<dyn ScoringSession + 'm>,
@@ -30,6 +40,11 @@ pub struct ArTask<'m> {
     probs: Vec<f32>,
     scratch: sampler::FilterScratch,
     tokens: Vec<Token>,
+    /// Canonical context (`prompt + committed`) the session reconciles to.
+    ctx: Vec<Token>,
+    /// Failure delivered by [`DecodeTask::absorb_append`], surfaced by the
+    /// next `step` exactly like an in-step append failure.
+    pending_fault: Option<anyhow::Error>,
     meter: StepMeter,
 }
 
@@ -58,6 +73,8 @@ impl<'m> ArTask<'m> {
             probs: Vec::new(),
             scratch: sampler::FilterScratch::default(),
             tokens: Vec::with_capacity(max_new),
+            ctx: prompt.to_vec(),
+            pending_fault: None,
             meter: StepMeter::new(1),
         })
     }
@@ -89,6 +106,7 @@ impl<'m> ArTask<'m> {
         );
         let mut task = Self::new(model, prompt, max_new, sampling)?;
         task.tokens = state.committed;
+        task.ctx.extend_from_slice(&task.tokens);
         task.rng = state.rng;
         task.meter = StepMeter::resumed(state.wall, state.forward_passes, state.forward_time);
         Ok(task)
@@ -108,16 +126,18 @@ impl DecodeTask for ArTask<'_> {
         if self.finished() {
             return Ok(StepOutcome::Finished { new_tokens: 0 });
         }
+        if let Some(e) = self.pending_fault.take() {
+            return Err(e);
+        }
         let models: [&dyn LanguageModel; 1] = [self.model];
         self.meter.begin(&models);
-        // Lazy prefill: the prompt — plus any tokens committed before a
-        // suspension — is scored on the first step.
-        if self.session.is_empty() {
-            self.session.append(&self.prompt)?;
-            if !self.tokens.is_empty() {
-                self.session.append(&self.tokens)?;
-            }
-        }
+        // Sync the session to the canonical prefix: the whole prompt (plus
+        // any tokens committed before a suspension) on the first step, the
+        // previously committed token afterwards. A free no-op when the
+        // scheduler's batched pre-append already landed it. The final
+        // token's own row is never read — it is pushed below but never
+        // reconciled, so it is never scored.
+        reconcile(&mut *self.session, &self.ctx)?;
         softmax_into(
             self.session.row(self.session.len() - 1),
             self.sampling.temperature,
@@ -126,15 +146,41 @@ impl DecodeTask for ArTask<'_> {
         let tok =
             sampler::sample_scratch(&mut self.probs, &self.sampling, &mut self.rng, &mut self.scratch);
         self.tokens.push(tok);
-        // The final token's own row is never read — skip scoring it.
-        if self.tokens.len() < self.max_new {
-            self.session.append(&[tok])?;
-        }
+        self.ctx.push(tok);
         self.meter.end(&models);
         if self.finished() {
             Ok(StepOutcome::Finished { new_tokens: 1 })
         } else {
             Ok(StepOutcome::Progress { new_tokens: 1 })
+        }
+    }
+
+    fn plan_append(&mut self) -> Option<PlannedAppend> {
+        if self.finished() || self.pending_fault.is_some() {
+            return None;
+        }
+        let handle = self.session.batch_handle()?;
+        let have = self.session.len();
+        // Coalescible iff the next reconcile is a pure non-empty append.
+        if have >= self.ctx.len() || self.session.tokens() != &self.ctx[..have] {
+            return None;
+        }
+        Some(PlannedAppend {
+            model_key: model_key(self.model),
+            handle,
+            tokens: Arc::from(&self.ctx[have..]),
+        })
+    }
+
+    fn absorb_append(&mut self, rows: Result<Option<Logits>>) {
+        let have = self.session.len();
+        let suffix: Vec<Token> = self.ctx[have..].to_vec();
+        match rows.and_then(|r| self.session.absorb_batched(&suffix, r)) {
+            // The batched call charged the model-level counters once for
+            // the whole batch; per-task pass accounting stays
+            // solo-equivalent via an explicit charge.
+            Ok(()) => self.meter.charge(0, Duration::ZERO),
+            Err(e) => self.pending_fault = Some(e),
         }
     }
 

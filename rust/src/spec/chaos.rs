@@ -2,7 +2,8 @@
 //!
 //! [`ChaosModel`] wraps any [`LanguageModel`] and injects failures on
 //! *scripted call indices*: the wrapper counts every fallible model call
-//! (`forward` plus every non-empty session `append`) and consults a fault
+//! (`forward` plus every non-empty session `append`; a batched append
+//! claims one index per entry, in batch order) and consults a fault
 //! script keyed by that index. Everything is deterministic — same script,
 //! same call sequence, same faults — so every fault-tolerance behavior in
 //! the serving stack is pinnable in a test.
@@ -184,6 +185,57 @@ impl<M: LanguageModel> LanguageModel for ChaosModel<M> {
     fn health_handle(&self) -> Option<Arc<HealthTracker>> {
         Some(self.state.health.clone())
     }
+
+    fn append_batch(
+        &self,
+        appends: &[(u64, Arc<[Token]>)],
+    ) -> Option<Vec<anyhow::Result<Option<Logits>>>> {
+        // Capability probe: an empty batch asks the inner model whether it
+        // has a batched path at all (backends answer `Some(vec![])` iff
+        // they do) without claiming any fault index. If the answer is
+        // `None` the scheduler falls back to per-session appends and the
+        // call indices stay aligned with an unbatched fault script.
+        self.inner.append_batch(&[])?;
+        if appends.is_empty() {
+            return Some(Vec::new());
+        }
+        // Claim one scripted call index per entry, in batch order, before
+        // the inner call runs — a faulted entry must leave its session
+        // unchanged, exactly like a faulted solo append. Each entry's
+        // success/failure feeds the health tracker individually, so one
+        // poisoned session in a batch charges one failure, not N.
+        let mut slots: Vec<Option<anyhow::Result<Option<Logits>>>> =
+            Vec::with_capacity(appends.len());
+        let mut survivors = Vec::new();
+        for entry in appends {
+            match self.state.check() {
+                Ok(()) => {
+                    slots.push(None);
+                    survivors.push(entry.clone());
+                }
+                Err(e) => slots.push(Some(Err(e))),
+            }
+        }
+        let inner = if survivors.is_empty() {
+            Vec::new()
+        } else {
+            // The probe said the inner model batches; a `None` here would
+            // be an inner-model bug and aborts the whole batch.
+            self.inner.append_batch(&survivors)?
+        };
+        let mut inner = inner.into_iter();
+        Some(
+            slots
+                .into_iter()
+                .map(|slot| match slot {
+                    Some(fault) => fault,
+                    None => inner
+                        .next()
+                        .unwrap_or_else(|| Err(anyhow::anyhow!("batched reply missing an entry"))),
+                })
+                .collect(),
+        )
+    }
 }
 
 /// Session wrapper: injects the model's scripted faults on appends,
@@ -222,6 +274,16 @@ impl ScoringSession for ChaosSession<'_> {
 
     fn row(&self, pos: usize) -> &[f32] {
         self.inner.row(pos)
+    }
+
+    fn batch_handle(&self) -> Option<u64> {
+        self.inner.batch_handle()
+    }
+
+    fn absorb_batched(&mut self, suffix: &[Token], rows: Option<Logits>) -> anyhow::Result<()> {
+        // The batched model call already claimed this session's fault
+        // index; absorbing the reply is local bookkeeping, not a call.
+        self.inner.absorb_batched(suffix, rows)
     }
 }
 
@@ -273,6 +335,29 @@ mod tests {
         }
         assert!(sess.append(&[]).is_ok(), "empty append never counts as a call");
         assert_eq!(m.calls_seen(), 3);
+    }
+
+    #[test]
+    fn batched_appends_claim_indices_in_batch_order_and_fault_one_entry() {
+        let m = ChaosModel::new(mock()).fault_at(1, Fault::Fail);
+        let mut a = m.open_session().unwrap();
+        let mut b = m.open_session().unwrap();
+        assert!(a.batch_handle().is_some(), "mock sessions advertise a batch handle");
+        let entries: Vec<(u64, Arc<[Token]>)> =
+            vec![(0, Arc::from(&[5, 6][..])), (0, Arc::from(&[5, 6][..]))];
+        let results = m.append_batch(&entries).expect("mock has a batched path");
+        assert_eq!(results.len(), 2);
+        let rows_a = results[0].as_ref().expect("entry 0 claims index 0: clean").clone();
+        a.absorb_batched(&[5, 6], rows_a).unwrap();
+        let err = results[1].as_ref().expect_err("entry 1 claims index 1: scripted fault");
+        assert_eq!(err.downcast_ref::<ModelFault>().unwrap().kind, FaultKind::Transient);
+        assert_eq!(b.len(), 0, "faulted entry leaves its session unchanged");
+        assert_eq!(m.calls_seen(), 2, "one fault index per batch entry");
+        assert_eq!(m.health_handle().unwrap().errors(), 1, "one failure charged, not N");
+        let full = mock().forward(&[5, 6]).unwrap();
+        for t in 0..2 {
+            assert_eq!(a.row(t), full.row(t), "row {t}");
+        }
     }
 
     #[test]

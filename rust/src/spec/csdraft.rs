@@ -21,15 +21,19 @@
 //! back instead of rescoring them.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::dualistic::{dist_row_into, pick};
 use super::rng::Pcg32;
 use super::sampler::FilterScratch;
-use super::task::{DecodeTask, InflightState, ResumeState, StepMeter, StepOutcome};
+use super::task::{
+    model_key, DecodeTask, InflightState, PlannedAppend, ResumeState, StepMeter, StepOutcome,
+};
 use super::types::{
-    reconcile, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
+    reconcile, GenerationOutput, LanguageModel, Logits, SamplingParams, ScoringSession, Token,
+    VerifyRule,
 };
 use super::verify::{verify_token, TokenVerdict};
 
@@ -86,6 +90,9 @@ pub struct CsDraftTask<'m> {
     live_models: Vec<usize>,
     /// Length of the cascade as dispatched, before any degradation.
     dispatch_n: usize,
+    /// Failure delivered by [`DecodeTask::absorb_append`], surfaced by the
+    /// next `step` exactly like the equivalent in-step append failure.
+    pending_fault: Option<anyhow::Error>,
 }
 
 impl<'m> CsDraftTask<'m> {
@@ -182,6 +189,7 @@ impl<'m> CsDraftTask<'m> {
             meter: StepMeter::new(k),
             live_models: want,
             dispatch_n,
+            pending_fault: None,
         };
         Ok((task, dropped))
     }
@@ -258,6 +266,16 @@ impl<'m> CsDraftTask<'m> {
         self.meter.drop_model(d);
         self.live_models.remove(d);
     }
+
+    /// Live-chain index of the session the next step reconciles first: the
+    /// first drafter with a horizontal budget, or the target once every
+    /// drafter is gone (autoregressive bonus-only decode).
+    fn next_append_member(&self) -> usize {
+        match self.cfg.lens.iter().position(|&len| len > 0) {
+            Some(d) => d + 1,
+            None => 0,
+        }
+    }
 }
 
 impl DecodeTask for CsDraftTask<'_> {
@@ -273,6 +291,17 @@ impl DecodeTask for CsDraftTask<'_> {
     fn step(&mut self) -> Result<StepOutcome> {
         if self.finished() {
             return Ok(StepOutcome::Finished { new_tokens: 0 });
+        }
+        if let Some(e) = self.pending_fault.take() {
+            // A batched pre-append failed. Same trichotomy as in-step: a
+            // drafter failure drops that member, a target failure fails
+            // the request.
+            let idx = self.next_append_member();
+            if idx >= 1 {
+                self.drop_member(idx);
+                return Ok(StepOutcome::Progress { new_tokens: 0 });
+            }
+            return Err(e);
         }
         // Proactive degradation: drop drafters whose health breaker is open
         // before spending a scoring call on them.
@@ -430,6 +459,41 @@ impl DecodeTask for CsDraftTask<'_> {
 
     fn degraded(&self) -> u32 {
         (self.dispatch_n - self.models.len()) as u32
+    }
+
+    fn plan_append(&mut self) -> Option<PlannedAppend> {
+        if self.finished() || self.pending_fault.is_some() {
+            return None;
+        }
+        if (1..self.models.len()).any(|d| !self.models[d].healthy()) {
+            return None; // the next step's health sweep reshapes the cascade
+        }
+        let idx = self.next_append_member();
+        let sess = &self.sessions[idx];
+        let handle = sess.batch_handle()?;
+        let have = sess.len();
+        // Coalescible iff the first reconcile is a pure non-empty append.
+        if have >= self.ctx.len() || sess.tokens() != &self.ctx[..have] {
+            return None;
+        }
+        Some(PlannedAppend {
+            model_key: model_key(self.models[idx]),
+            handle,
+            tokens: Arc::from(&self.ctx[have..]),
+        })
+    }
+
+    fn absorb_append(&mut self, rows: Result<Option<Logits>>) {
+        let idx = self.next_append_member();
+        let sess = &mut self.sessions[idx];
+        let have = sess.len();
+        let suffix: Vec<Token> = self.ctx[have..].to_vec();
+        match rows.and_then(|r| sess.absorb_batched(&suffix, r)) {
+            // The batch charged the model counters once; per-task pass
+            // accounting stays solo-equivalent via an explicit charge.
+            Ok(()) => self.meter.charge(idx, Duration::ZERO),
+            Err(e) => self.pending_fault = Some(e),
+        }
     }
 }
 

@@ -17,14 +17,19 @@
 //! driven to completion — the sessions change *where* rows come from, never
 //! their values.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use anyhow::Result;
 
 use super::rng::Pcg32;
 use super::sampler::{self, FilterScratch};
-use super::task::{DecodeTask, InflightState, ResumeState, StepMeter, StepOutcome};
+use super::task::{
+    model_key, DecodeTask, InflightState, PlannedAppend, ResumeState, StepMeter, StepOutcome,
+};
 use super::types::{
-    reconcile, softmax_into, GenerationOutput, LanguageModel, SamplingParams, ScoringSession,
-    Token, VerifyRule,
+    reconcile, softmax_into, GenerationOutput, LanguageModel, Logits, SamplingParams,
+    ScoringSession, Token, VerifyRule,
 };
 use super::verify::{verify_token, TokenVerdict};
 
@@ -103,6 +108,9 @@ pub struct DualisticTask<'m> {
     p: Vec<f32>,
     frontier: Vec<Token>,
     accept_lengths: Vec<u32>,
+    /// Failure delivered by [`DecodeTask::absorb_append`], surfaced by the
+    /// next `step` exactly like the equivalent in-step append failure.
+    pending_fault: Option<anyhow::Error>,
     meter: StepMeter,
 }
 
@@ -138,6 +146,7 @@ impl<'m> DualisticTask<'m> {
             p: Vec::new(),
             frontier: Vec::new(),
             accept_lengths: Vec::new(),
+            pending_fault: None,
             meter: StepMeter::new(2),
         })
     }
@@ -201,6 +210,16 @@ impl DecodeTask for DualisticTask<'_> {
     fn step(&mut self) -> Result<StepOutcome> {
         if self.finished() {
             return Ok(StepOutcome::Finished { new_tokens: 0 });
+        }
+        if let Some(e) = self.pending_fault.take() {
+            // A batched pre-append failed. Same trichotomy as in-step: a
+            // drafter failure degrades to target-only, a target failure
+            // fails the request.
+            if self.dsess.is_some() {
+                self.drop_draft();
+                return Ok(StepOutcome::Progress { new_tokens: 0 });
+            }
+            return Err(e);
         }
         // Proactive health check: a drafter whose breaker opened is
         // dropped before wasting calls on it.
@@ -367,6 +386,49 @@ impl DecodeTask for DualisticTask<'_> {
             1
         } else {
             0
+        }
+    }
+
+    fn plan_append(&mut self) -> Option<PlannedAppend> {
+        if self.finished() || self.pending_fault.is_some() {
+            return None;
+        }
+        // The next step's first engine call is the drafter's catch-up
+        // reconcile (or the target's, once degraded). Coalescible iff that
+        // reconcile is a pure non-empty append.
+        let (model, sess) = match self.dsess.as_ref() {
+            Some(dsess) => {
+                if !self.draft.healthy() {
+                    return None; // the next step will drop the drafter
+                }
+                (self.draft, &**dsess)
+            }
+            None => (self.target, &*self.tsess),
+        };
+        let handle = sess.batch_handle()?;
+        let have = sess.len();
+        if have >= self.ctx.len() || sess.tokens() != &self.ctx[..have] {
+            return None; // rollback-first reconcile: not a pure append
+        }
+        Some(PlannedAppend {
+            model_key: model_key(model),
+            handle,
+            tokens: Arc::from(&self.ctx[have..]),
+        })
+    }
+
+    fn absorb_append(&mut self, rows: Result<Option<Logits>>) {
+        let (idx, sess) = match self.dsess.as_mut() {
+            Some(dsess) => (1, &mut **dsess),
+            None => (0, &mut *self.tsess),
+        };
+        let have = sess.len();
+        let suffix: Vec<Token> = self.ctx[have..].to_vec();
+        match rows.and_then(|r| sess.absorb_batched(&suffix, r)) {
+            // The batch charged the model counters once; per-task pass
+            // accounting stays solo-equivalent via an explicit charge.
+            Ok(()) => self.meter.charge(idx, Duration::ZERO),
+            Err(e) => self.pending_fault = Some(e),
         }
     }
 }

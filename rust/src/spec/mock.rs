@@ -8,6 +8,7 @@
 //! algorithm in `spec::` be exercised (and its losslessness proven
 //! statistically) without PJRT artifacts.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -129,6 +130,27 @@ impl LanguageModel for MockModel {
             rows: Vec::new(),
         }))
     }
+
+    /// Batched suffix scoring: the whole batch counts as **one** forward
+    /// (one call record, one `T_i` busy-wait), which is exactly the saving
+    /// the scheduler's coalescing exists to produce — tests and benches
+    /// observe it through [`calls`](LanguageModel::calls). Rows are a pure
+    /// function of each session's rolling prefix hash, so every entry
+    /// returns `Ok(None)` and [`MockSession::absorb_batched`] recomputes
+    /// them locally, bit-identical to a solo append.
+    fn append_batch(&self, appends: &[(u64, Arc<[Token]>)]) -> Option<Vec<Result<Option<Logits>>>> {
+        if appends.is_empty() {
+            return Some(Vec::new());
+        }
+        let start = Instant::now();
+        if !self.cost.is_zero() {
+            while start.elapsed() < self.cost {
+                std::hint::spin_loop();
+            }
+        }
+        self.counters.record(start.elapsed());
+        Some(appends.iter().map(|_| Ok(None)).collect())
+    }
 }
 
 /// Incremental scoring session over a [`MockModel`]: a rolling prefix hash
@@ -205,6 +227,39 @@ impl ScoringSession for MockSession<'_> {
         let vocab = self.model.vocab;
         assert!(pos < self.tokens.len(), "row {pos} out of range {}", self.tokens.len());
         &self.rows[pos * vocab..(pos + 1) * vocab]
+    }
+
+    /// Mock sessions are host-local, so the handle carries no state; any
+    /// value lets the batched path engage.
+    fn batch_handle(&self) -> Option<u64> {
+        Some(0)
+    }
+
+    /// Install a batched append's suffix. The engine side
+    /// ([`MockModel::append_batch`]) already recorded the one coalesced
+    /// call, so this records nothing and pays no `T_i`; rows are
+    /// recomputed from the rolling hash — the same pure function `append`
+    /// uses, hence bit-identical.
+    fn absorb_batched(&mut self, suffix: &[Token], _rows: Option<Logits>) -> Result<()> {
+        if suffix.is_empty() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.tokens.len() + suffix.len() <= self.model.seq_len,
+            "context too long"
+        );
+        let mut h = self
+            .hashes
+            .last()
+            .copied()
+            .unwrap_or(self.model.base_seed ^ FNV_OFFSET);
+        for &t in suffix {
+            h = fnv(&t.to_le_bytes(), h);
+            self.hashes.push(h);
+            self.model.extend_row_for_hash(h, &mut self.rows);
+            self.tokens.push(t);
+        }
+        Ok(())
     }
 }
 
@@ -320,6 +375,34 @@ mod tests {
         assert!(m.total_time() >= Duration::from_millis(2));
         sess.rollback(1).unwrap(); // free, must not count
         assert_eq!(m.calls(), 2);
+    }
+
+    #[test]
+    fn batched_append_rows_identical_one_call() {
+        let m = MockModel::new("m", 64, 16, 7, 0.5);
+        let mut solo = m.open_session().unwrap();
+        solo.append(&[1, 2, 3]).unwrap();
+        solo.append(&[4, 5]).unwrap();
+        m.reset_counters();
+        // Two sessions coalesced into one engine call.
+        let mut a = m.open_session().unwrap();
+        let mut b = m.open_session().unwrap();
+        a.absorb_batched(&[1, 2, 3], None).unwrap();
+        let entries: Vec<(u64, Arc<[Token]>)> = vec![
+            (a.batch_handle().unwrap(), Arc::from(&[4, 5][..])),
+            (b.batch_handle().unwrap(), Arc::from(&[1, 2, 3][..])),
+        ];
+        let results = m.append_batch(&entries).unwrap();
+        assert_eq!(results.len(), 2);
+        a.absorb_batched(&entries[0].1, results[0].as_ref().unwrap().clone()).unwrap();
+        b.absorb_batched(&entries[1].1, results[1].as_ref().unwrap().clone()).unwrap();
+        assert_eq!(m.calls(), 1, "one coalesced call for the whole batch");
+        for t in 0..5 {
+            assert_eq!(a.row(t), solo.row(t), "row {t}");
+        }
+        for t in 0..3 {
+            assert_eq!(b.row(t), solo.row(t), "row {t}");
+        }
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub mod verify;
 
 pub use chaos::{ChaosModel, Fault};
 pub use polybasic::{generate as polybasic_generate, PolyConfig};
-pub use task::{DecodeTask, InflightState, ResumeState, StepOutcome};
+pub use task::{model_key, DecodeTask, InflightState, PlannedAppend, ResumeState, StepOutcome};
 pub use types::{
     FaultKind, GenerationOutput, HealthConfig, HealthTracker, LanguageModel, ModelFault,
     SamplingParams, ScoringSession, Token, VerifyRule,

@@ -40,15 +40,19 @@
 
 use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::dualistic::{dist_row_into, pick};
 use super::rng::Pcg32;
 use super::sampler::FilterScratch;
-use super::task::{DecodeTask, InflightState, ResumeState, StepMeter, StepOutcome};
+use super::task::{
+    model_key, DecodeTask, InflightState, PlannedAppend, ResumeState, StepMeter, StepOutcome,
+};
 use super::types::{
-    reconcile, GenerationOutput, LanguageModel, SamplingParams, ScoringSession, Token, VerifyRule,
+    reconcile, GenerationOutput, LanguageModel, Logits, SamplingParams, ScoringSession, Token,
+    VerifyRule,
 };
 use super::verify::{verify_token, TokenVerdict};
 
@@ -158,6 +162,9 @@ pub struct PolyTask<'m> {
     /// Length of the chain the task was dispatched on; `dispatch_n -
     /// models.len()` is the degradation count.
     dispatch_n: usize,
+    /// Failure delivered by [`DecodeTask::absorb_append`], surfaced by the
+    /// next `step` exactly like the equivalent in-step append failure.
+    pending_fault: Option<anyhow::Error>,
 }
 
 /// Why a step could not complete normally.
@@ -281,6 +288,7 @@ impl<'m> PolyTask<'m> {
             meter: StepMeter::new(k),
             live_models: want,
             dispatch_n,
+            pending_fault: None,
         };
         Ok((task, dropped))
     }
@@ -454,6 +462,17 @@ impl DecodeTask for PolyTask<'_> {
         if self.finished() {
             return Ok(StepOutcome::Finished { new_tokens: 0 });
         }
+        if let Some(e) = self.pending_fault.take() {
+            // A batched pre-append failed. Same trichotomy as in-step: a
+            // drafter failure drops that member, a target failure (only
+            // possible once fully degraded) fails the request.
+            let n = self.models.len();
+            if n > 1 {
+                self.drop_member(n - 1);
+                return Ok(StepOutcome::Progress { new_tokens: 0 });
+            }
+            return Err(e);
+        }
         // Proactive health sweep: drop drafters whose breaker opened (e.g.
         // another task's calls tripped it) before spending calls on them.
         let mut d = self.models.len();
@@ -526,6 +545,72 @@ impl DecodeTask for PolyTask<'_> {
 
     fn degraded(&self) -> u32 {
         (self.dispatch_n - self.models.len()) as u32
+    }
+
+    fn plan_append(&mut self) -> Option<PlannedAppend> {
+        if self.finished() || self.pending_fault.is_some() {
+            return None;
+        }
+        let n = self.models.len();
+        if (1..n).any(|d| !self.models[d].healthy()) {
+            return None; // the next step's health sweep reshapes the chain
+        }
+        // Fully degraded: the next step is an autoregressive target
+        // reconcile against `flat`.
+        if n == 1 {
+            let sess = &self.sessions[0];
+            let handle = sess.batch_handle()?;
+            let have = sess.len();
+            if have >= self.pipe.flat.len() || sess.tokens() != &self.pipe.flat[..have] {
+                return None;
+            }
+            return Some(PlannedAppend {
+                model_key: model_key(self.models[0]),
+                handle,
+                tokens: Arc::from(&self.pipe.flat[have..]),
+            });
+        }
+        // Otherwise the next step's first engine call is the deepest
+        // drafter's catch-up reconcile — but only when the step will open
+        // with a drafting burst (mirrors step_body's gate; flush mode and
+        // a full deepest queue open with a verify instead, which is never
+        // a pure append).
+        let committed = self.pipe.committed - self.prompt_len;
+        let remaining = self.cfg.max_new - committed;
+        let in_flight = self.pipe.in_flight();
+        let draft_room = self.seq_cap.saturating_sub(self.pipe.flat.len());
+        let flush = in_flight >= remaining || draft_room == 0;
+        let deepest = n - 2;
+        let want = self.cfg.draft_k.min(remaining.saturating_sub(in_flight)).min(draft_room);
+        if flush || want == 0 || self.pipe.queues[deepest].len() >= self.cfg.thresholds[deepest].max(1)
+        {
+            return None;
+        }
+        let dsess = &self.sessions[n - 1];
+        let handle = dsess.batch_handle()?;
+        let have = dsess.len();
+        if have >= self.pipe.flat.len() || dsess.tokens() != &self.pipe.flat[..have] {
+            return None; // rollback-first reconcile: not a pure append
+        }
+        Some(PlannedAppend {
+            model_key: model_key(self.models[n - 1]),
+            handle,
+            tokens: Arc::from(&self.pipe.flat[have..]),
+        })
+    }
+
+    fn absorb_append(&mut self, rows: Result<Option<Logits>>) {
+        let n = self.models.len();
+        let idx = if n == 1 { 0 } else { n - 1 };
+        let sess = &mut self.sessions[idx];
+        let have = sess.len();
+        let suffix: Vec<Token> = self.pipe.flat[have..].to_vec();
+        match rows.and_then(|r| sess.absorb_batched(&suffix, r)) {
+            // The batch charged the model counters once; per-task pass
+            // accounting stays solo-equivalent via an explicit charge.
+            Ok(()) => self.meter.charge(idx, Duration::ZERO),
+            Err(e) => self.pending_fault = Some(e),
+        }
     }
 }
 

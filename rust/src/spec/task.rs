@@ -25,12 +25,13 @@
 //! parked between steps.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::rng::Pcg32;
-use super::types::{GenerationOutput, LanguageModel, Token};
+use super::types::{GenerationOutput, LanguageModel, Logits, Token};
 
 /// What one [`DecodeTask::step`] accomplished.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -151,6 +152,35 @@ pub enum InflightState {
     },
 }
 
+/// One pure-append engine call a task proposes for cross-request
+/// coalescing (see [`DecodeTask::plan_append`]). The scheduler groups
+/// plans from all live tasks by chain member and submits each group as a
+/// single [`LanguageModel::append_batch`] per scheduler tick.
+///
+/// Identity is by value, not by borrow: `model_key` is the planned chain
+/// member's data pointer, which the scheduler resolves back to its own
+/// `&[Arc<dyn LanguageModel>]` chain slice. This keeps the plan free of
+/// task borrows, so the scheduler can collect plans from every live task
+/// and still mutate the tasks when absorbing results.
+#[derive(Debug, Clone)]
+pub struct PlannedAppend {
+    /// Data pointer of the chain member the append targets (compare with
+    /// [`model_key`] of a chain entry).
+    pub model_key: usize,
+    /// The session's [`batch_handle`](super::types::ScoringSession::batch_handle).
+    pub handle: u64,
+    /// Suffix the next step would append first. Shared, not cloned: the
+    /// same allocation travels through retries and the channel protocol.
+    pub tokens: Arc<[Token]>,
+}
+
+/// Grouping key for [`PlannedAppend`]: the model's data pointer. The same
+/// chain member yields the same key whether reached through a task's
+/// borrow or the scheduler's `Arc`.
+pub fn model_key(model: &dyn LanguageModel) -> usize {
+    model as *const dyn LanguageModel as *const () as usize
+}
+
 /// A resumable decode: one (request, chain) pair stepped one draft→verify
 /// round at a time. Implementations live next to their `generate` wrappers
 /// in [`polybasic`](super::polybasic), [`dualistic`](super::dualistic),
@@ -187,6 +217,35 @@ pub trait DecodeTask {
     /// verify rules the output stays byte-identical.
     fn degraded(&self) -> u32 {
         0
+    }
+
+    /// *Plan* phase of the plan→submit→absorb protocol: the first engine
+    /// call the next [`step`](Self::step) would issue, **iff** it is a
+    /// pure append on a batch-capable session (the canonical context
+    /// strictly extends the session's scored prefix). `None` means the
+    /// next step is not coalescible — rollback-first, degraded chain,
+    /// resume restore, or a session without a batch handle — and the task
+    /// falls back to the unbatched in-step path.
+    ///
+    /// A task that returns `Some` remembers the plan and expects exactly
+    /// one [`absorb_append`](Self::absorb_append) before its next `step`.
+    /// Safety: a plan only pre-executes work the step would do anyway
+    /// against the same canonical context, so a mispredicted plan costs
+    /// performance, never correctness — the step's own `reconcile` rolls
+    /// back any divergence (prefix determinism + rollback exactness).
+    fn plan_append(&mut self) -> Option<PlannedAppend> {
+        None
+    }
+
+    /// *Absorb* phase: deliver the planned append's slice of the batched
+    /// reply. `Ok(rows)` installs the suffix rows into the planned
+    /// session (bit-identical to a solo append), after which the next
+    /// step's first `reconcile` is a free no-op. `Err` is stashed and
+    /// handled by the next `step` exactly like an in-step append failure
+    /// (drafter → degrade, target → fail), so batching stays inside the
+    /// degrade/fail/delay trichotomy.
+    fn absorb_append(&mut self, rows: Result<Option<Logits>>) {
+        let _ = rows;
     }
 }
 
@@ -254,6 +313,16 @@ impl StepMeter {
         self.wall += self.step_started.elapsed();
     }
 
+    /// Charge model `idx` with one forward pass of `cost` executed
+    /// *outside* a `begin`/`end` bracket — the scheduler's batched submit
+    /// runs between steps, where no bracket is open. Keeps a task's
+    /// per-request `F_i` identical to a solo (unbatched) run while the
+    /// shared model counters record the real, coalesced engine calls.
+    pub fn charge(&mut self, idx: usize, cost: Duration) {
+        self.passes[idx] += 1;
+        self.time[idx] += cost;
+    }
+
     /// Remove model `idx` from the meter when graceful degradation drops a
     /// chain member mid-decode; its accumulated totals are discarded along
     /// with it (the surviving entries keep chain order).
@@ -303,6 +372,21 @@ mod tests {
         assert_eq!(passes, vec![3]);
         assert!(time[0] <= m.total_time());
         assert!(wall > Duration::ZERO);
+    }
+
+    #[test]
+    fn charge_adds_passes_outside_brackets() {
+        let m = MockModel::new("m", 32, 8, 1, 0.0);
+        let models: [&dyn LanguageModel; 1] = [&m];
+        let mut meter = StepMeter::new(1);
+        // A batched append executed between steps: charged explicitly.
+        meter.charge(0, Duration::from_millis(2));
+        meter.begin(&models);
+        m.forward(&[1]).unwrap();
+        meter.end(&models);
+        let (_, passes, time) = meter.into_parts();
+        assert_eq!(passes, vec![2], "charge + bracketed delta");
+        assert!(time[0] >= Duration::from_millis(2));
     }
 
     #[test]

@@ -244,6 +244,12 @@ impl Logits {
         &self.data[t * self.vocab..(t + 1) * self.vocab]
     }
 
+    /// The flat `[seq * vocab]` row-major buffer. Lets consumers absorb a
+    /// whole reply with one bulk copy instead of a row-by-row loop.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
     /// Softmax of row `t` at the given temperature.
     pub fn probs(&self, t: usize, temperature: f32) -> Vec<f32> {
         softmax(self.row(t), temperature)
@@ -333,6 +339,27 @@ pub trait LanguageModel {
     fn health_handle(&self) -> Option<Arc<HealthTracker>> {
         None
     }
+
+    /// Score many sessions' pending suffixes in **one** engine round-trip.
+    /// `appends[i]` is `(batch_handle, suffix)` for one session of this
+    /// model (handles come from [`ScoringSession::batch_handle`]).
+    ///
+    /// Returns `None` when the backend has no batched path (callers fall
+    /// back to per-session [`ScoringSession::append`]). Otherwise the vec
+    /// holds one `Result` per entry, in order — a poisoned session fails
+    /// only its own entry, never the batch. Per entry, `Ok(Some(logits))`
+    /// carries the suffix rows for the session to absorb; `Ok(None)` means
+    /// the rows are recoverable session-side (e.g. the mock's hash oracle)
+    /// and [`ScoringSession::absorb_batched`] recomputes them. Either way
+    /// the entry's rows must be bit-identical to what a solo `append` of
+    /// the same suffix would have produced.
+    fn append_batch(
+        &self,
+        appends: &[(u64, Arc<[Token]>)],
+    ) -> Option<Vec<anyhow::Result<Option<Logits>>>> {
+        let _ = appends;
+        None
+    }
 }
 
 /// An incremental decode handle: a scored token prefix whose logits rows
@@ -375,6 +402,23 @@ pub trait ScoringSession {
             data.extend_from_slice(self.row(t));
         }
         Logits::new(data, rows, vocab)
+    }
+
+    /// Identifier for [`LanguageModel::append_batch`] entries, or `None`
+    /// when this session cannot join a batched append (the default — e.g.
+    /// [`StatelessSession`], whose appends re-score the whole prefix).
+    fn batch_handle(&self) -> Option<u64> {
+        None
+    }
+
+    /// Complete a batched append this session's model executed via
+    /// [`LanguageModel::append_batch`]: extend the local prefix by
+    /// `suffix` and install its rows — from `rows` when the engine shipped
+    /// them, recomputed locally when it returned `Ok(None)`. Must leave
+    /// the session bit-identical to a solo `append(suffix)`.
+    fn absorb_batched(&mut self, suffix: &[Token], rows: Option<Logits>) -> anyhow::Result<()> {
+        let _ = (suffix, rows);
+        anyhow::bail!("session has no batched-append support")
     }
 }
 

@@ -278,3 +278,71 @@ fn deadline_exceeded_mid_decode_cancels_and_releases_kv() {
     assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
     assert_eq!(metrics.inflight(), 0);
 }
+
+/// A two-member chain (target + one drafter) sharing seed/noise so the
+/// drafter is *perfect*: under greedy it full-accepts every block, which
+/// keeps its session a strict prefix of the context and makes every
+/// tick's drafter call a pure batched append.
+fn pair_chain(fault: Option<(u64, Fault)>) -> Vec<Arc<dyn LanguageModel>> {
+    let target = MockModel::new("t", 512, 24, 13, 0.0);
+    let draft = MockModel::new("d", 512, 24, 13, 0.0);
+    let draft: Arc<dyn LanguageModel> = match fault {
+        Some((at, f)) => Arc::new(ChaosModel::new(draft).fault_at(at, f)),
+        None => Arc::new(draft),
+    };
+    vec![Arc::new(target), draft]
+}
+
+/// Fault isolation inside a coalesced batch: when one session's entry in
+/// a [`SessionAppendBatch`]-style batched call faults, only the task that
+/// owns that entry degrades — its batch-mates absorb their rows and keep
+/// their drafters — and under greedy both outputs stay byte-identical to
+/// a fault-free run.
+#[test]
+fn batched_entry_fault_degrades_only_its_own_task() {
+    let reqs: Vec<Request> =
+        (1..=2).map(|id| greedy_req(id, Method::Dualistic { draft_k: 1 }, 24)).collect();
+    let clean = pair_chain(None);
+    let expected: Vec<Vec<i32>> =
+        reqs.iter().map(|r| decode(&clean, r).unwrap().tokens).collect();
+
+    // Two live same-chain requests: each tick the scheduler coalesces both
+    // drafter appends into one batched call claiming two chaos indices in
+    // batch order (draft_k = 1 and a perfect drafter keep every tick's
+    // drafter call a pure batched append). Index 3 is therefore the second
+    // entry of the second tick's batch: request 2's entry, mid-batch.
+    let chain = pair_chain(Some((3, Fault::Fail)));
+    let kv = kv_pool();
+    let metrics = Arc::new(Metrics::default());
+    let now = Instant::now();
+    let batch: Vec<QueueEntry> = reqs
+        .iter()
+        .map(|r| {
+            kv.lock().unwrap().admit(r.id, 60).unwrap();
+            QueueEntry::fresh(r.clone(), now)
+        })
+        .collect();
+    let out = drive(&chain, batch, &kv, &metrics);
+
+    let mut by_id: std::collections::BTreeMap<u64, Response> = Default::default();
+    for r in out {
+        let resp = r.expect("a drafter fault must never fail a request");
+        by_id.insert(resp.id, resp);
+    }
+    for (req, want) in reqs.iter().zip(&expected) {
+        assert_eq!(
+            &by_id[&req.id].tokens, want,
+            "request {}: batched-entry fault must be invisible in greedy output",
+            req.id
+        );
+    }
+    assert_eq!(by_id[&1].degraded, 0, "the clean entry's task must keep its drafter");
+    assert_eq!(by_id[&2].degraded, 1, "only the faulted entry's task degrades");
+    assert_eq!(metrics.chains_degraded.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 0);
+    assert!(
+        metrics.batched_calls.load(Ordering::Relaxed) > 0,
+        "coalescing must have engaged"
+    );
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+}

@@ -197,6 +197,83 @@ fn prop_prefix_shared_decode_identical_to_uncontended() {
     }
 }
 
+/// Cross-request batched verification is invisible in output: a
+/// concurrent mixed-class workload covering every coordinator `Method` ×
+/// `VerifyRule` decodes byte-identically with the scheduler's coalescing
+/// on and off, and both match the uncontended one-shot decode. The
+/// batched path must actually engage — the coalescing run records
+/// batched calls with ≥ 2 sessions — and the unbatched run must never
+/// submit one.
+#[test]
+fn prop_batched_verification_identical_to_unbatched() {
+    let methods = [
+        Method::Autoregressive,
+        Method::Dualistic { draft_k: 4 },
+        Method::Polybasic { draft_k: 4, mu: 4 },
+    ];
+    let rules = [VerifyRule::Greedy, VerifyRule::Speculative, VerifyRule::Typical { eps: 0.25 }];
+    let chain = mock_chain(512, 24, 123);
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for &method in &methods {
+        for &rule in &rules {
+            id += 1;
+            let mut r = Request::new(id, vec![2, 7, 1], 16 + (id as usize % 4) * 6);
+            r.method = method;
+            r.rule = rule;
+            r.task = Some(ALL_TASKS[id as usize % ALL_TASKS.len()]);
+            r.sampling.seed = 300 + id;
+            r.sampling.temperature = if rule == VerifyRule::Greedy { 0.0 } else { 1.0 };
+            reqs.push(r);
+        }
+    }
+    let expected: Vec<Vec<i32>> =
+        reqs.iter().map(|r| scheduler::decode(&chain, r).unwrap().tokens).collect();
+
+    let run = |opts: scheduler::SchedulerOpts| {
+        let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
+            block_size: 8,
+            total_blocks: 512,
+            bytes_per_token: 4,
+            swap_blocks: 0,
+        })));
+        let metrics = Arc::new(Metrics::default());
+        let now = Instant::now();
+        let batch: Vec<QueueEntry> = reqs
+            .iter()
+            .map(|r| {
+                kv.lock().unwrap().admit(r.id, 60).unwrap();
+                QueueEntry::fresh(r.clone(), now)
+            })
+            .collect();
+        let mut got: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+        scheduler::run_batch_opts(&chain, batch, None, reqs.len(), &kv, &metrics, opts, |ev| {
+            if let scheduler::BatchEvent::Done { id, response } = ev {
+                got.insert(id, response.expect("no faults in this workload").tokens);
+            }
+        });
+        assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+        (got, metrics)
+    };
+    let (batched, m_on) = run(scheduler::SchedulerOpts { coalesce: true });
+    let (unbatched, m_off) = run(scheduler::SchedulerOpts { coalesce: false });
+    assert_eq!(batched, unbatched, "coalescing changed some request's committed tokens");
+    for (r, want) in reqs.iter().zip(&expected) {
+        assert_eq!(
+            &batched[&r.id], want,
+            "{:?} {:?} request {}: batched serving diverged from one-shot decode",
+            r.method, r.rule, r.id
+        );
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(m_on.batched_calls.load(ord) > 0, "the coalescing path must actually engage");
+    assert!(
+        m_on.batch_occupancy.max() >= 2,
+        "same-member plans must coalesce into multi-session batches"
+    );
+    assert_eq!(m_off.engine_calls.load(ord), 0, "coalesce=false must never submit a batch");
+}
+
 /// Batcher: every pushed request is popped exactly once, regardless of
 /// batch sizing, priorities, or close timing.
 #[test]
