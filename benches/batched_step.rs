@@ -1,14 +1,18 @@
-//! Cross-request batched verification benchmark: engine calls per tick
-//! and wall-clock for a batch of live same-chain requests, scheduler
-//! coalescing on vs off, at 1 / 8 / 32 live requests.
+//! Cross-request batched verification benchmark, two parts:
 //!
-//! The chain is two mock members with a fixed per-call busy-wait, so the
-//! wall-clock difference is dominated by how many engine calls the
-//! scheduler issues — the quantity the coalescer (one `SessionAppendBatch`
-//! per chain member per tick) exists to collapse. A perfect drafter
-//! (same weights as the target) keeps every tick's drafter work a pure
-//! append under greedy, the best case for coalescing; with one live
-//! request the two modes should be indistinguishable.
+//! 1. Engine calls per tick and wall-clock for a batch of live same-chain
+//!    requests, scheduler coalescing on vs off, at 1 / 8 / 32 live
+//!    requests. The chain is two mock members with a fixed per-call
+//!    busy-wait, so the wall-clock difference is dominated by how many
+//!    engine calls the scheduler issues — the quantity the coalescer (one
+//!    `SessionAppendBatch` per chain member per tick) exists to collapse.
+//!
+//! 2. A prefix-length sweep (128 / 1k / 8k) under the O(suffix) mock cost
+//!    model (`with_token_cost`): the coalesced KV-cached tick pays
+//!    `cost + per_token · suffix` — flat in prefix length — while the
+//!    stateless full-recompute tick pays `cost + per_token · prefix` and
+//!    grows linearly. This is the per-token cost contract (Lemma 3.1's
+//!    `T_i` must not scale with context) the device cache pool implements.
 //!
 //!   cargo bench --bench batched_step
 
@@ -22,7 +26,7 @@ use polyspec::coordinator::kv::{KvConfig, KvManager};
 use polyspec::coordinator::metrics::Metrics;
 use polyspec::coordinator::scheduler::{self, SchedulerOpts};
 use polyspec::spec::mock::MockModel;
-use polyspec::spec::types::{LanguageModel, VerifyRule};
+use polyspec::spec::types::{LanguageModel, ScoringSession, Token, VerifyRule};
 
 const MAX_NEW: usize = 24;
 const CALL_COST: Duration = Duration::from_micros(200);
@@ -92,6 +96,79 @@ fn run(live: usize, coalesce: bool) -> Run {
     }
 }
 
+/// One decode-tick timing at prefix length `p`: `live` sessions, each tick
+/// one coalesced `append_batch` of a 2-token suffix per session followed by
+/// a 1-token rollback (the draft/verify reject pattern that keeps caches
+/// hot and exercised). Returns mean tick wall-clock over `ticks` ticks.
+fn cached_tick_cost(model: &MockModel, p: usize, live: usize, ticks: usize) -> f64 {
+    let prefix: Vec<Token> = (0..p).map(|i| (i % 32) as Token).collect();
+    let mut sessions: Vec<_> = (0..live).map(|_| model.open_session().unwrap()).collect();
+    for s in &mut sessions {
+        // Install the prefix without paying the prefill (absorb recomputes
+        // rows locally): the sweep times steady-state decode ticks only.
+        s.absorb_batched(&prefix, None).unwrap();
+    }
+    let start = Instant::now();
+    for t in 0..ticks {
+        let suffix: Arc<[Token]> = Arc::from(&[(t % 32) as Token, ((t + 7) % 32) as Token][..]);
+        let entries: Vec<(u64, Arc<[Token]>)> =
+            sessions.iter().map(|s| (s.batch_handle().unwrap(), suffix.clone())).collect();
+        let results = model.append_batch(&entries).expect("mock batches");
+        for (s, r) in sessions.iter_mut().zip(results) {
+            s.absorb_batched(&suffix, r.unwrap()).unwrap();
+            let len = s.len();
+            s.rollback(len - 1).unwrap(); // reject the second token
+        }
+    }
+    start.elapsed().as_secs_f64() / ticks as f64
+}
+
+/// The stateless contrast: each tick re-scores prefix + suffix in full,
+/// once per session (no cache, no coalescing across the prefix).
+fn stateless_tick_cost(model: &MockModel, p: usize, live: usize, ticks: usize) -> f64 {
+    let mut ctx: Vec<Token> = (0..p).map(|i| (i % 32) as Token).collect();
+    let start = Instant::now();
+    for t in 0..ticks {
+        ctx.push((t % 32) as Token);
+        for _ in 0..live {
+            model.forward(&ctx).unwrap();
+        }
+        ctx.pop();
+    }
+    start.elapsed().as_secs_f64() / ticks as f64
+}
+
+fn prefix_sweep() {
+    const LIVE: usize = 4;
+    const TICKS: usize = 32;
+    let per_token = Duration::from_micros(1);
+    let model = MockModel::new("sweep", 16384, 32, 17, 0.0)
+        .with_cost(CALL_COST)
+        .with_token_cost(per_token);
+    println!("\n== prefix sweep: per-tick cost under the O(suffix) cost model ==");
+    println!(
+        "({LIVE} sessions, {TICKS} ticks, 2-token suffix/tick, {:?} flat + {:?}/token)\n",
+        CALL_COST, per_token
+    );
+    println!("{:>8} {:>14} {:>16} {:>7}", "prefix", "cached/tick", "stateless/tick", "ratio");
+    let mut cached = Vec::new();
+    for &p in &[128usize, 1024, 8192] {
+        let c = cached_tick_cost(&model, p, LIVE, TICKS);
+        let s = stateless_tick_cost(&model, p, LIVE, TICKS);
+        println!("{:>8} {:>12.1}us {:>14.1}us {:>6.1}x", p, c * 1e6, s * 1e6, s / c);
+        cached.push(c);
+    }
+    // The coalesced cached tick must be flat in prefix length (generous 3x
+    // margin for timer noise); the stateless tick must visibly grow.
+    assert!(
+        cached[2] < cached[0] * 3.0,
+        "cached tick cost grew with prefix length: {:.1}us @128 vs {:.1}us @8k",
+        cached[0] * 1e6,
+        cached[2] * 1e6
+    );
+    println!("\n(cached per-tick cost flat in prefix length; stateless grows linearly)");
+}
+
 fn main() {
     println!("== batched_step: cross-request batched verification ==");
     println!(
@@ -124,4 +201,5 @@ fn main() {
         }
     }
     println!("\n(outputs byte-identical between modes at every batch size)");
+    prefix_sweep();
 }

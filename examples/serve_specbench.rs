@@ -4,8 +4,9 @@
 //! exercise the paged-KV radix prefix cache — against the polybasic chain,
 //! and report latency/throughput. Writes a machine-readable
 //! `BENCH_serve.json` (throughput, TTFT, prefix-hit rate, restore cost,
-//! coalesced engine calls per committed token) next to the working
-//! directory for CI trend tracking.
+//! coalesced engine calls per committed token, and the KV-cache
+//! recompute-avoided ratio) next to the working directory for CI trend
+//! tracking.
 //!
 //!   make artifacts && cargo run --release --example serve_specbench
 //!
@@ -170,6 +171,19 @@ fn main() -> anyhow::Result<()> {
         "wasted_recompute_tokens",
         Json::Num(metrics.wasted_recompute_tokens.load(ord) as f64),
     );
+    // KV-cached incremental scoring: suffix rows actually computed vs the
+    // prefix rows the session caches spared from re-scoring. The ratio
+    // `avoided / (avoided + computed)` is the headline O(suffix) win — a
+    // stateless engine sits at 0, a warm cache near 1.
+    let suffix_computed = metrics.suffix_tokens_computed.load(ord) as f64;
+    let prefix_avoided = metrics.prefix_tokens_avoided.load(ord) as f64;
+    put("suffix_tokens_computed", Json::Num(suffix_computed));
+    put("prefix_tokens_avoided", Json::Num(prefix_avoided));
+    put("recompute_avoided_ratio", Json::Num(metrics.recompute_avoided_ratio()));
+    put(
+        "cache_resident_tokens",
+        Json::Num(metrics.cache_resident_tokens.load(ord) as f64),
+    );
     put("metrics", snapshot);
     println!(
         "coalescing: {engine_calls:.0} engine calls ({:.0} batched, mean {:.2} sessions) \
@@ -177,6 +191,12 @@ fn main() -> anyhow::Result<()> {
         metrics.batched_calls.load(ord) as f64,
         metrics.batch_occupancy.mean(),
         engine_calls / (tokens.max(1) as f64),
+    );
+    println!(
+        "kv cache: {suffix_computed:.0} suffix tokens computed, \
+         {prefix_avoided:.0} prefix tokens avoided \
+         -> {:.3} recompute avoided",
+        metrics.recompute_avoided_ratio(),
     );
     let json = Json::Obj(report);
     std::fs::write("BENCH_serve.json", format!("{json}\n"))?;

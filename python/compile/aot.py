@@ -3,18 +3,49 @@
 Interchange contract with the rust runtime (rust/src/runtime/):
 
   artifacts/
-    manifest.json            — families -> roles -> {hlo, params_bin, args[]}
+    manifest.json            — families -> roles -> {hlo, params_bin, args[],
+                               batched?, incremental?}
     <family>/<role>.hlo.txt  — HLO text of  f(tokens [S] i32, *weights) ->
                                (logits [S, V] f32,)
     <family>/<role>.params.bin — weights, concatenated little-endian in the
                                exact order of the ``args`` list (f32 or int8)
+
+With ``--batched N`` each role additionally exports:
+
+  <role>.b{N}.hlo.txt         — legacy stacked entry
+                                f(tokens [N, S], *w) -> (logits [N, S, V],):
+                                a vmap over the full-prefix forward, still
+                                O(prefix) per row.  The rust engine uses it
+                                to serve *stateless* ``forward_batch`` as one
+                                submission instead of a per-row loop.
+  <role>.prefill.hlo.txt      — f(tokens [S], slot [] i32, k_pool, v_pool,
+                                *w) -> (logits [S, V], k_pool', v_pool'):
+                                full-context score that also writes the
+                                sequence's K/V cache into pool slot ``slot``.
+  <role>.decode.b{N}.hlo.txt  — f(suffixes [N, W], prefix_lens [N] i32,
+                                k_pool, v_pool, *w) ->
+                                (logits [N, W, V], k_pool', v_pool'):
+                                one O(suffix) decode step over every pool
+                                slot at once.
+
+Pool tensors are ``[N, L, NB, BS, H, dh]`` f32 — the batch axis is the
+*cache-page arena*, block-sized (BS = the coordinator's paged-KV block
+size) so rust block tables map 1:1 onto pool pages.  The decode entry is
+the device half of ``SessionAppendBatch``: the scheduler coalesces one
+append per (chain member, tick) and the engine runs them as a single
+submission whose per-tick cost is O(W · S), flat in prefix length — the
+``T_i`` Lemma 3.1's cost model needs.  Manifest key ``incremental``:
+``{prefill_hlo, decode_hlo, batch, window, cache{block_size, blocks,
+n_layers, n_heads, d_head}, params_bin}``.
 
 HLO **text**, not a serialized HloModuleProto: jax >= 0.5 emits protos with
 64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
 (``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
 cleanly (see /opt/xla-example/README.md).  Weights are *arguments*, not
 embedded constants, so the rust side uploads them to device buffers once and
-reuses them across every forward (``execute_b``).
+reuses them across every forward (``execute_b``); pool buffers likewise stay
+device-resident, with each call's updated pools replacing the engine's
+handles.
 
 Python runs only here — `make artifacts` — and never on the request path.
 """
@@ -29,8 +60,11 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from . import configs
-from .model import forward
+from .model import forward, forward_decode_pool, forward_prefill_pool
 from .params import build_role_params
+
+# Paged-KV block size; must match coordinator::paged (rust/src/coordinator).
+BLOCK_SIZE = 16
 
 
 def to_hlo_text(lowered) -> str:
@@ -130,13 +164,12 @@ def export_role_batched(family_cfg, role, out_dir, batch):
     prefix because the single-sequence HLO above has no batch dimension;
     this export produces the ``[B, S]`` module it would call instead.
 
-    Stub status: the lowering is a plain ``vmap`` over the full-prefix
-    forward, so each batched call still recomputes every prefix from
-    position 0 — the real win needs the KV-cached incremental HLO
-    (see ROADMAP "device-side KV-cached HLO"), at which point the batch
-    dimension rides on the cache pages rather than the token prefix.
-    Until the rust loader grows a batched ``execute`` wrapper this entry
-    is exported under a separate manifest key and left unread.
+    The lowering is a plain ``vmap`` over the full-prefix forward, so each
+    batched call still recomputes every prefix from position 0 — this entry
+    serves the *stateless* ``forward_batch`` path (sessions without cache
+    slots).  Cached sessions go through the O(suffix) incremental pair from
+    :func:`export_role_incremental` instead, where the batch dimension
+    rides on cache pages rather than token prefixes.
     """
     cfg, params = build_role_params(family_cfg, role)
     named = [(n, a) for n, a in flatten_params(params)
@@ -164,6 +197,82 @@ def export_role_batched(family_cfg, role, out_dir, batch):
             "params_bin": f"{family_cfg.family}/{role}.params.bin"}
 
 
+def export_role_incremental(family_cfg, role, out_dir, batch, window):
+    """KV-cached prefill / decode-step pair over a device cache pool.
+
+    Lowers two executables against one shared pool layout
+    ``[batch, L, S // BLOCK_SIZE, BLOCK_SIZE, H, dh]``:
+
+      prefill:  f(tokens [S], slot [], k_pool, v_pool, *w)
+                  -> (logits [S, V], k_pool', v_pool')
+      decode:   f(suffixes [batch, window], prefix_lens [batch],
+                  k_pool, v_pool, *w)
+                  -> (logits [batch, window, V], k_pool', v_pool')
+
+    The decode entry scores ``window`` suffix tokens per slot per call in
+    O(window · S) — flat in prefix length; longer appends loop the window.
+    Slots not participating in a call are fed dummy rows whose cache writes
+    land past their ``prefix_len`` (the never-attended region), so idle
+    slots survive every call unchanged.  Byte-identity with the full-prefix
+    forward is pinned by python/tests/test_aot.py.
+    """
+    cfg, params = build_role_params(family_cfg, role)
+    named = [(n, a) for n, a in flatten_params(params)
+             if isinstance(a, np.ndarray) and a.dtype != object and a.ndim > 0]
+    flat_leaves = [a for _, a in named]
+    treedef_params = params
+    leaf_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat_leaves]
+
+    assert cfg.seq_len % BLOCK_SIZE == 0, (
+        f"seq_len {cfg.seq_len} not a multiple of block size {BLOCK_SIZE}")
+    blocks = cfg.seq_len // BLOCK_SIZE
+    pool_shape = (batch, cfg.n_layers, blocks, BLOCK_SIZE,
+                  cfg.n_heads, cfg.d_head)
+    pool_spec = jax.ShapeDtypeStruct(pool_shape, jnp.float32)
+
+    def prefill_fn(tokens, slot, k_pool, v_pool, *leaves):
+        rebuilt = _rebuild(treedef_params, list(leaves))
+        return forward_prefill_pool(rebuilt, tokens, slot, k_pool, v_pool, cfg)
+
+    def decode_fn(suffixes, prefix_lens, k_pool, v_pool, *leaves):
+        rebuilt = _rebuild(treedef_params, list(leaves))
+        return forward_decode_pool(rebuilt, suffixes, prefix_lens,
+                                   k_pool, v_pool, cfg)
+
+    token_spec = jax.ShapeDtypeStruct((cfg.seq_len,), jnp.int32)
+    slot_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    suffix_spec = jax.ShapeDtypeStruct((batch, window), jnp.int32)
+    lens_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+    prefill = jax.jit(prefill_fn).lower(
+        token_spec, slot_spec, pool_spec, pool_spec, *leaf_specs)
+    decode = jax.jit(decode_fn).lower(
+        suffix_spec, lens_spec, pool_spec, pool_spec, *leaf_specs)
+
+    fam_dir = os.path.join(out_dir, family_cfg.family)
+    os.makedirs(fam_dir, exist_ok=True)
+    prefill_rel = f"{family_cfg.family}/{role}.prefill.hlo.txt"
+    decode_rel = f"{family_cfg.family}/{role}.decode.b{batch}.hlo.txt"
+    with open(os.path.join(out_dir, prefill_rel), "w") as f:
+        f.write(to_hlo_text(prefill))
+    with open(os.path.join(out_dir, decode_rel), "w") as f:
+        f.write(to_hlo_text(decode))
+
+    return {
+        "prefill_hlo": prefill_rel,
+        "decode_hlo": decode_rel,
+        "batch": batch,
+        "window": window,
+        "cache": {
+            "block_size": BLOCK_SIZE, "blocks": blocks,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+        },
+        # Same weights blob as the stateless entry; uploaded once.
+        "params_bin": f"{family_cfg.family}/{role}.params.bin",
+    }
+
+
 def _rebuild(template, leaves):
     """Rebuild the params pytree from ``leaves`` in flatten order, keeping
     static entries (ints such as quant group sizes) from the template."""
@@ -177,7 +286,7 @@ def _rebuild(template, leaves):
     return leaves.pop(0)
 
 
-def export_family(family, out_dir, roles=None, batched=0):
+def export_family(family, out_dir, roles=None, batched=0, window=BLOCK_SIZE):
     fam = configs.FAMILIES[family]
     entry = {"roles": {}}
     for role in (roles or fam.roles().keys()):
@@ -187,6 +296,10 @@ def export_family(family, out_dir, roles=None, batched=0):
             print(f"[aot] lowering {family}/{role} [B={batched}] ...", flush=True)
             entry["roles"][role]["batched"] = export_role_batched(
                 fam, role, out_dir, batched)
+            print(f"[aot] lowering {family}/{role} [prefill + decode "
+                  f"B={batched} W={window}] ...", flush=True)
+            entry["roles"][role]["incremental"] = export_role_incremental(
+                fam, role, out_dir, batched, window)
     return entry
 
 
@@ -196,8 +309,12 @@ def main():
     ap.add_argument("--families", default=",".join(configs.DEFAULT_SET),
                     help="comma list, or 'bench' / 'scale' / 'all'")
     ap.add_argument("--batched", type=int, default=0,
-                    help="also export a [B, S] batched entry per role "
-                         "(0 = off; experimental, unread by the runtime)")
+                    help="also export the batched triplet per role: legacy "
+                         "[B, S] stacked entry + KV-cached prefill/decode "
+                         "pair over a B-slot cache pool (0 = off)")
+    ap.add_argument("--window", type=int, default=BLOCK_SIZE,
+                    help="decode-step suffix window (tokens scored per slot "
+                         "per decode call; longer appends loop the window)")
     args = ap.parse_args()
 
     sets = {"bench": configs.BENCH_SET, "scale": configs.SCALE_SET,
@@ -212,8 +329,8 @@ def main():
         with open(manifest_path) as f:
             manifest = json.load(f)
     for fam in fams:
-        manifest["families"][fam] = export_family(fam, out_dir,
-                                                  batched=args.batched)
+        manifest["families"][fam] = export_family(
+            fam, out_dir, batched=args.batched, window=args.window)
     with open(manifest_path, "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"[aot] wrote {manifest_path} ({len(manifest['families'])} families)")

@@ -82,3 +82,154 @@ def forward_prob(params, tokens, cfg, *, temperature=1.0, use_pallas=True):
     """Softmax distribution per position (used by python-side diagnostics)."""
     logits = forward(params, tokens, cfg, use_pallas=use_pallas)
     return jax.nn.softmax(logits / temperature, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# KV-cached incremental execution (prefill / decode-step split)
+#
+# The serving runtime scores a session's *suffix* per append; a stateless
+# full-context forward makes that O(prefix) per call, which breaks the
+# per-token cost model T_i the paper's Lemma 3.1 prices chains by. The two
+# entry points below split one role into:
+#
+#   forward_prefill : tokens [S] -> (logits [S, V], K/V cache)
+#   forward_decode  : suffix [D] + prefix_len + cache -> (logits [D, V],
+#                     updated cache)
+#
+# Cache layout is [L, NB, BS, H, dh] — per-layer K/V chunked into NB blocks
+# of BS tokens, matching the coordinator's paged-KV block size, so a batch
+# dimension stacked in front of it batches over *cache pages*, not token
+# prefixes. Cache-validity contract (what makes rollback O(1)): rows
+# < prefix_len are authoritative; rows >= prefix_len are garbage-but-finite
+# (prefill computes them from padding, rollback simply lowers prefix_len).
+# Garbage rows are never attended — decode masks position j for suffix row
+# d unless j <= prefix_len + d — and every decode overwrites its window
+# starting exactly at prefix_len, so staleness never escapes.
+# ---------------------------------------------------------------------------
+
+
+def _qkv(xn, layer, cfg, *, use_pallas=True):
+    """Project one normed activation block to per-head q/k/v `[T, H, dh]`."""
+    t = xn.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    q = matmul(xn, layer["wq"], use_pallas=use_pallas).reshape(t, h, dh)
+    k = matmul(xn, layer["wk"], use_pallas=use_pallas).reshape(t, h, dh)
+    v = matmul(xn, layer["wv"], use_pallas=use_pallas).reshape(t, h, dh)
+    return q, k, v
+
+
+def forward_prefill(params, tokens, cfg, *, use_pallas=True, block=16):
+    """Full-context scorer that also materialises the per-layer K/V cache.
+
+    ``tokens [S] int32 -> (logits [S, V], k_cache, v_cache)`` where each
+    cache is ``[L, S // block, block, H, dh]`` f32. The logits computation
+    is op-for-op the same as :func:`forward` (the caches are saved
+    intermediates, not a different attention), so prefill logits match the
+    stateless forward.
+    """
+    s = tokens.shape[0]
+    assert s % block == 0, f"seq_len {s} not a multiple of block {block}"
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s]
+    gain = 1.0
+    ks, vs = [], []
+    for layer in params["layers"]:
+        xn = layer_norm(x, layer["ln1"])
+        q, k, v = _qkv(xn, layer, cfg, use_pallas=use_pallas)
+        ks.append(k)
+        vs.append(v)
+        qh, kh, vh = (a.transpose(1, 0, 2) for a in (q, k, v))  # [H, S, dh]
+        o = flash_attention(qh, kh, vh) if use_pallas else kref.attention_ref(qh, kh, vh)
+        o = o.transpose(1, 0, 2).reshape(s, cfg.d_model)
+        x = x + gain * matmul(o, layer["wo"], use_pallas=use_pallas)
+        x = x + gain * mlp_block(layer_norm(x, layer["ln2"]), layer,
+                                 use_pallas=use_pallas)
+        gain *= cfg.residual_gain
+    x = layer_norm(x, params["lnf"])
+    logits = jnp.dot(x, params["tok_emb"].T)
+    shape = (len(ks), s // block, block, cfg.n_heads, cfg.d_head)
+    return logits, jnp.stack(ks).reshape(shape), jnp.stack(vs).reshape(shape)
+
+
+def forward_decode(params, suffix, prefix_len, k_cache, v_cache, cfg, *,
+                   use_pallas=True):
+    """One decode step: score a fixed-width suffix window against the cache.
+
+    ``suffix [D] int32`` are the tokens at positions ``prefix_len ..
+    prefix_len + D``; their K/V rows are written into the cache at those
+    positions (``dynamic_update_slice`` over the flattened block axis — the
+    caller must keep ``prefix_len + D <= S``, XLA would clamp otherwise)
+    and each suffix row ``d`` attends cache positions ``j <= prefix_len +
+    d``. Returns ``(logits [D, V], k_cache', v_cache')``. Cost is
+    O(D · S) attention instead of O(S²) — flat in prefix length.
+
+    Attention here is plain jnp (the ref.py oracle idiom) rather than the
+    Pallas flash kernel: the shape is a thin D×S rectangle with a
+    dynamic diagonal offset, which the fixed-grid kernel does not serve.
+    """
+    d = suffix.shape[0]
+    n_layers, nb, bs, h, dh = k_cache.shape
+    s = nb * bs
+    dm = cfg.d_model
+    scale = 1.0 / (dh ** 0.5)
+    prefix_len = jnp.asarray(prefix_len, jnp.int32)
+    pos_emb = jax.lax.dynamic_slice(params["pos_emb"], (prefix_len, 0), (d, dm))
+    x = params["tok_emb"][suffix] + pos_emb
+    # Row d may attend cache position j iff j <= prefix_len + d (self and
+    # earlier; rows beyond that are garbage or the causal future).
+    mask = jnp.arange(s)[None, :] <= prefix_len + jnp.arange(d)[:, None]
+    gain = 1.0
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        xn = layer_norm(x, layer["ln1"])
+        q, k, v = _qkv(xn, layer, cfg, use_pallas=use_pallas)
+        kc = jax.lax.dynamic_update_slice(
+            k_cache[li].reshape(s, h, dh), k, (prefix_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            v_cache[li].reshape(s, h, dh), v, (prefix_len, 0, 0))
+        new_k.append(kc.reshape(nb, bs, h, dh))
+        new_v.append(vc.reshape(nb, bs, h, dh))
+        scores = jnp.einsum("dhe,she->hds", q, kc) * scale
+        scores = jnp.where(mask[None], scores, -1e30)
+        p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+        p = p / p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("hds,she->dhe", p, vc).reshape(d, dm)
+        x = x + gain * matmul(o, layer["wo"], use_pallas=use_pallas)
+        x = x + gain * mlp_block(layer_norm(x, layer["ln2"]), layer,
+                                 use_pallas=use_pallas)
+        gain *= cfg.residual_gain
+    x = layer_norm(x, params["lnf"])
+    logits = jnp.dot(x, params["tok_emb"].T)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def forward_prefill_pool(params, tokens, slot, k_pool, v_pool, cfg, *,
+                         use_pallas=True):
+    """Prefill one sequence and write its cache into pool slot ``slot``.
+
+    Pools are ``[B, L, NB, BS, H, dh]`` — the device-resident cache arena
+    the rust engine batches decode steps over. Returns ``(logits [S, V],
+    k_pool', v_pool')``.
+    """
+    block = k_pool.shape[3]
+    logits, kc, vc = forward_prefill(params, tokens, cfg,
+                                     use_pallas=use_pallas, block=block)
+    at = (jnp.asarray(slot, jnp.int32), 0, 0, 0, 0, 0)
+    k_pool = jax.lax.dynamic_update_slice(k_pool, kc[None], at)
+    v_pool = jax.lax.dynamic_update_slice(v_pool, vc[None], at)
+    return logits, k_pool, v_pool
+
+
+def forward_decode_pool(params, suffixes, prefix_lens, k_pool, v_pool, cfg, *,
+                        use_pallas=True):
+    """Batched decode step over every pool slot at once.
+
+    ``suffixes [B, D]`` + ``prefix_lens [B]`` + pools ``[B, L, NB, BS, H,
+    dh]`` -> ``(logits [B, D, V], k_pool', v_pool')``. vmap over the slot
+    axis with shared weights: the batch dimension rides on cache pages.
+    Slots with nothing to decode are fed dummy rows (zero tokens at their
+    own ``prefix_len``); their writes land in the never-attended garbage
+    region, so live-but-idle slots are unharmed.
+    """
+    f = lambda t, p, kc, vc: forward_decode(  # noqa: E731
+        params, t, p, kc, vc, cfg, use_pallas=use_pallas)
+    return jax.vmap(f)(suffixes, prefix_lens, k_pool, v_pool)

@@ -15,7 +15,8 @@ import numpy as np
 import pytest
 
 from compile import aot, configs
-from compile.model import forward
+from compile.model import (forward, forward_decode, forward_decode_pool,
+                           forward_prefill, forward_prefill_pool)
 from compile.params import build_role_params
 
 
@@ -116,3 +117,163 @@ def test_repeat_export_is_stable(exported, tiny_family, tmp_path):
     a = open(out / entry["roles"]["target"]["params_bin"], "rb").read()
     b = open(tmp_path / entry2["roles"]["target"]["params_bin"], "rb").read()
     assert a == b
+
+
+# ---------------------------------------------------------------------------
+# KV-cached incremental path (prefill / decode-step split)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_setup(tiny_family):
+    cfg, params = build_role_params(tiny_family, "target")
+    toks = (jnp.arange(cfg.seq_len, dtype=jnp.int32) * 5) % cfg.vocab
+    return cfg, params, toks
+
+
+def test_prefill_logits_match_forward(tiny_setup):
+    """Prefill is the same computation as forward plus saved K/V — exact."""
+    cfg, params, toks = tiny_setup
+    want = forward(params, toks, cfg)
+    got, kc, vc = forward_prefill(params, toks, cfg)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert kc.shape == (cfg.n_layers, cfg.seq_len // aot.BLOCK_SIZE,
+                        aot.BLOCK_SIZE, cfg.n_heads, cfg.d_head)
+    assert vc.shape == kc.shape
+
+
+def test_decode_rows_match_forward(tiny_setup):
+    """Decode over a cache built from a *padded* prefill reproduces the
+    full-context forward's suffix rows: garbage rows past prefix_len must
+    not leak into attention."""
+    cfg, params, toks = tiny_setup
+    p, d = 12, 4
+    # Prefill sees the true prefix but junk at positions >= p.
+    padded = toks.at[p:].set(7 % cfg.vocab)
+    _, kc, vc = forward_prefill(params, padded, cfg)
+    got, kc2, vc2 = forward_decode(params, toks[p:p + d], p, kc, vc, cfg)
+    want = forward(params, toks, cfg)[p:p + d]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    assert kc2.shape == kc.shape
+
+
+def test_decode_after_rollback_overwrites_stale_rows(tiny_setup):
+    """Rollback is a host-side length decrement: re-decoding a *different*
+    suffix at the same prefix_len must overwrite the stale rows and match
+    a fresh full-context forward on the new tokens."""
+    cfg, params, toks = tiny_setup
+    p, d = 12, 4
+    _, kc, vc = forward_prefill(params, toks.at[p:].set(0), cfg)
+    # First speculation: some draft suffix, later rejected.
+    draft = (toks[p:p + d] + 3) % cfg.vocab
+    _, kc, vc = forward_decode(params, draft, p, kc, vc, cfg)
+    # After rollback to p, decode the real suffix over the same cache.
+    got, _, _ = forward_decode(params, toks[p:p + d], p, kc, vc, cfg)
+    want = forward(params, toks, cfg)[p:p + d]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_decode_chained_windows(tiny_setup):
+    """Appending in several window-sized chunks equals one long forward."""
+    cfg, params, toks = tiny_setup
+    p, w = 8, 4
+    _, kc, vc = forward_prefill(params, toks.at[p:].set(0), cfg)
+    rows = []
+    for start in range(p, p + 3 * w, w):
+        out, kc, vc = forward_decode(params, toks[start:start + w],
+                                     start, kc, vc, cfg)
+        rows.append(np.asarray(out))
+    want = forward(params, toks, cfg)[p:p + 3 * w]
+    np.testing.assert_allclose(np.concatenate(rows), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pool_batched_decode_matches_solo(tiny_setup):
+    """One pooled decode over B slots == per-slot solo decodes, and dummy
+    rows on one slot leave the other slot's result untouched."""
+    cfg, params, toks = tiny_setup
+    b, d = 2, 4
+    toks2 = (toks * 3 + 1) % cfg.vocab
+    p1, p2 = 12, 8
+    nb = cfg.seq_len // aot.BLOCK_SIZE
+    pool_shape = (b, cfg.n_layers, nb, aot.BLOCK_SIZE, cfg.n_heads, cfg.d_head)
+    k_pool = jnp.zeros(pool_shape)
+    v_pool = jnp.zeros(pool_shape)
+    _, k_pool, v_pool = forward_prefill_pool(
+        params, toks.at[p1:].set(0), 0, k_pool, v_pool, cfg)
+    _, k_pool, v_pool = forward_prefill_pool(
+        params, toks2.at[p2:].set(0), 1, k_pool, v_pool, cfg)
+
+    suffixes = jnp.stack([toks[p1:p1 + d], toks2[p2:p2 + d]])
+    lens = jnp.array([p1, p2], jnp.int32)
+    got, k_pool, v_pool = forward_decode_pool(
+        params, suffixes, lens, k_pool, v_pool, cfg)
+    want1 = forward(params, toks, cfg)[p1:p1 + d]
+    want2 = forward(params, toks2, cfg)[p2:p2 + d]
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want1),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want2),
+                               atol=1e-4, rtol=1e-4)
+
+    # Second call: slot 0 decodes for real, slot 1 rides along as a dummy —
+    # zero tokens at its own current length, so the write lands entirely in
+    # its never-attended garbage region.
+    suffixes = jnp.stack([toks[p1 + d:p1 + 2 * d], jnp.zeros(d, jnp.int32)])
+    lens = jnp.array([p1 + d, p2 + d], jnp.int32)
+    got2, k_pool, v_pool = forward_decode_pool(
+        params, suffixes, lens, k_pool, v_pool, cfg)
+    want3 = forward(params, toks, cfg)[p1 + d:p1 + 2 * d]
+    np.testing.assert_allclose(np.asarray(got2[0]), np.asarray(want3),
+                               atol=1e-4, rtol=1e-4)
+    # Slot 1's real rows survived the dummy write: decode its true suffix.
+    got3, _, _ = forward_decode_pool(
+        params, jnp.stack([jnp.zeros(d, jnp.int32), toks2[p2 + d:p2 + 2 * d]]),
+        jnp.array([p1 + 2 * d, p2 + d], jnp.int32), k_pool, v_pool, cfg)
+    want4 = forward(params, toks2, cfg)[p2 + d:p2 + 2 * d]
+    np.testing.assert_allclose(np.asarray(got3[1]), np.asarray(want4),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def exported_inc(tiny_family, tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts_inc")
+    configs.FAMILIES["tinyfam"] = tiny_family
+    try:
+        entry = aot.export_family("tinyfam", str(out), roles=["target"],
+                                  batched=2, window=4)
+    finally:
+        del configs.FAMILIES["tinyfam"]
+    return out, entry
+
+
+def test_incremental_manifest_entry(exported_inc):
+    out, entry = exported_inc
+    role = entry["roles"]["target"]
+    assert role["batched"]["batch"] == 2
+    assert os.path.exists(out / role["batched"]["hlo"])
+    inc = role["incremental"]
+    assert inc["batch"] == 2 and inc["window"] == 4
+    assert inc["cache"]["block_size"] == aot.BLOCK_SIZE
+    assert inc["cache"]["blocks"] * aot.BLOCK_SIZE == role["config"]["seq_len"]
+    assert inc["cache"]["n_layers"] == role["config"]["n_layers"]
+    assert os.path.exists(out / inc["prefill_hlo"])
+    assert os.path.exists(out / inc["decode_hlo"])
+    assert inc["params_bin"] == role["params_bin"]
+
+
+def test_incremental_hlo_signatures(exported_inc):
+    """The lowered entry computations carry the pool/suffix shapes the rust
+    loader will feed (3-output tuple, [B, W] suffixes, pool params)."""
+    out, entry = exported_inc
+    inc = entry["roles"]["target"]["incremental"]
+    prefill = open(out / inc["prefill_hlo"]).read()
+    decode = open(out / inc["decode_hlo"]).read()
+    assert "ENTRY" in prefill and "ENTRY" in decode
+    assert "s32[32]" in prefill        # full-context tokens
+    assert "s32[2,4]" in decode        # [B, W] suffixes
+    assert "s32[2]" in decode          # prefix_lens
+    # Pool tensors appear as parameters in both.
+    pool = "f32[2,2,2,16,2,16]"        # [B, L, NB, BS, H, dh]
+    assert pool in prefill and pool in decode

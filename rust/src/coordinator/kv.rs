@@ -562,6 +562,14 @@ impl KvManager {
     pub fn allocated_bytes(&self) -> usize {
         self.seqs.values().map(|a| a.tokens * self.cfg.bytes_per_token).sum()
     }
+
+    /// Tokens of KV currently resident for live sequences — what the
+    /// scheduler publishes as the `cache_resident_tokens` gauge each sweep.
+    /// Counts mapped sequence tokens only (cached-but-unmapped radix blocks
+    /// and swapped-out sequences are excluded: nothing live attends them).
+    pub fn resident_tokens(&self) -> usize {
+        self.seqs.values().map(|a| a.tokens).sum()
+    }
 }
 
 /// Bytes of KV per token for one chain: `sum_i 2 * layers_i * d_model_i * 4`.

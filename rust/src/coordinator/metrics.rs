@@ -182,6 +182,16 @@ pub struct Metrics {
     pub batched_tokens: AtomicU64,
     /// Sessions-per-batched-call occupancy distribution.
     pub batch_occupancy: CountHistogram,
+    /// Suffix tokens the coalescing path actually computed — the O(suffix)
+    /// work a KV-cached engine pays per planned append.
+    pub suffix_tokens_computed: AtomicU64,
+    /// Prefix tokens the KV cache spared those appends from re-scoring (a
+    /// stateless engine would recompute each session's whole prefix). The
+    /// recompute-avoided ratio is `avoided / (avoided + computed)`.
+    pub prefix_tokens_avoided: AtomicU64,
+    /// Gauge: tokens currently resident in device/host KV across all live
+    /// sequences (store semantics — last sweep's observation wins).
+    pub cache_resident_tokens: AtomicU64,
     /// Requests currently holding a live decode task on some worker.
     inflight: AtomicU64,
     inflight_peak: AtomicU64,
@@ -289,6 +299,31 @@ impl Metrics {
         self.batch_occupancy.record(sessions as u64);
     }
 
+    /// One sweep's coalesced appends: `computed` suffix tokens were scored,
+    /// while the sessions' caches spared `avoided` prefix tokens from being
+    /// re-scored (what a stateless engine would have recomputed).
+    pub fn record_suffix_work(&self, computed: usize, avoided: usize) {
+        self.suffix_tokens_computed.fetch_add(computed as u64, Ordering::Relaxed);
+        self.prefix_tokens_avoided.fetch_add(avoided as u64, Ordering::Relaxed);
+    }
+
+    /// Overwrite the cache-residency gauge with this sweep's observation.
+    pub fn set_cache_resident(&self, tokens: usize) {
+        self.cache_resident_tokens.store(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// Fraction of would-be recompute the KV cache avoided:
+    /// `avoided / (avoided + computed)`, 0.0 before any coalesced append.
+    pub fn recompute_avoided_ratio(&self) -> f64 {
+        let avoided = self.prefix_tokens_avoided.load(Ordering::Relaxed) as f64;
+        let computed = self.suffix_tokens_computed.load(Ordering::Relaxed) as f64;
+        if avoided + computed == 0.0 {
+            0.0
+        } else {
+            avoided / (avoided + computed)
+        }
+    }
+
     /// Expose a model's [`HealthTracker`] in metrics snapshots. Workers
     /// call this once per chain member at engine-load time; re-registering
     /// the same name replaces the handle (workers share per-model trackers
@@ -363,6 +398,13 @@ impl Metrics {
         put("batched_calls", Json::Num(self.batched_calls.load(Ordering::Relaxed) as f64));
         put("batched_tokens",
             Json::Num(self.batched_tokens.load(Ordering::Relaxed) as f64));
+        put("suffix_tokens_computed",
+            Json::Num(self.suffix_tokens_computed.load(Ordering::Relaxed) as f64));
+        put("prefix_tokens_avoided",
+            Json::Num(self.prefix_tokens_avoided.load(Ordering::Relaxed) as f64));
+        put("recompute_avoided_ratio", Json::Num(self.recompute_avoided_ratio()));
+        put("cache_resident_tokens",
+            Json::Num(self.cache_resident_tokens.load(Ordering::Relaxed) as f64));
         {
             let mut occ = BTreeMap::new();
             occ.insert("calls".into(), Json::Num(self.batch_occupancy.count() as f64));
@@ -483,6 +525,9 @@ mod tests {
         m.record_restore_saved(20);
         m.record_engine_call(3, 12); // coalesced: 3 sessions in one call
         m.record_engine_call(1, 2); // singleton batch: engine call, not "batched"
+        m.record_suffix_work(14, 42); // 14 suffix rows scored, 42 prefix spared
+        m.set_cache_resident(100);
+        m.set_cache_resident(56); // gauge: last observation wins
         let health = Arc::new(HealthTracker::default());
         health.record_failure(crate::spec::types::FaultKind::Transient);
         health.record_retry();
@@ -506,6 +551,11 @@ mod tests {
         assert_eq!(parsed.req("engine_calls").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.req("batched_calls").unwrap().as_usize(), Some(1));
         assert_eq!(parsed.req("batched_tokens").unwrap().as_usize(), Some(14));
+        assert_eq!(parsed.req("suffix_tokens_computed").unwrap().as_usize(), Some(14));
+        assert_eq!(parsed.req("prefix_tokens_avoided").unwrap().as_usize(), Some(42));
+        assert!((parsed.req("recompute_avoided_ratio").unwrap().as_f64().unwrap() - 0.75).abs()
+            < 1e-9);
+        assert_eq!(parsed.req("cache_resident_tokens").unwrap().as_usize(), Some(56));
         let occ = parsed.req("batch_occupancy").unwrap();
         assert_eq!(occ.get("calls").unwrap().as_usize(), Some(2));
         assert!((occ.get("mean_sessions").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);

@@ -610,7 +610,12 @@ fn submit_batched(
             continue;
         };
         let appended: usize = entries.iter().map(|(_, t)| t.len()).sum();
+        // Recompute-avoided accounting: each planned append scored only its
+        // suffix; a stateless engine would have re-scored `prefix_len` more
+        // rows per session (what the KV cache makes O(suffix)).
+        let avoided: usize = group.iter().map(|&p| plans[p].1.prefix_len).sum();
         metrics.record_engine_call(entries.len(), appended);
+        metrics.record_suffix_work(appended, avoided);
         let mut results = results.into_iter();
         for &p in &group {
             let r = results
@@ -717,6 +722,8 @@ pub fn run_batch_opts(
         if opts.coalesce {
             submit_batched(chain, &mut live, metrics);
         }
+        // Publish this sweep's cache residency (gauge: overwrite, not add).
+        metrics.set_cache_resident(kv.lock().unwrap().resident_tokens());
 
         // ---- one sweep: one step per live task, round-robin --------------
         let mut i = 0;

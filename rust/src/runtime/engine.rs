@@ -1,10 +1,55 @@
 //! ModelEngine: one AOT-compiled chain member, executing on the PJRT CPU
-//! client with device-resident weights.
+//! client with device-resident weights and a device-resident KV cache pool.
 //!
 //! Adapted from /opt/xla-example/load_hlo: HLO **text** -> `HloModuleProto`
 //! -> compile -> `execute_b`. Weights are uploaded once per engine as
 //! `PjRtBuffer`s (never per call); the only per-call host->device transfer
 //! is the token vector, and the only device->host transfer is the logits.
+//!
+//! # Executable triplet (prefill / decode-step / stacked)
+//!
+//! A role exported with `--batched N` loads up to four executables:
+//!
+//! * `exe` — stateless `f(tokens [S]) -> (logits [S, V],)`; the fallback
+//!   that always exists.
+//! * `batched` — legacy stacked `f(tokens [B, S]) -> (logits [B, S, V],)`;
+//!   still O(prefix) per row, used so a stateless `forward_batch` is one
+//!   submission instead of a per-row `execute` loop.
+//! * `prefill` — `f(tokens [S], slot, k_pool, v_pool, *w) -> (logits,
+//!   k_pool', v_pool')`: full-context score that also writes the session's
+//!   K/V rows into one slot of the device cache pool.
+//! * `decode` — `f(suffixes [B, W], prefix_lens [B], k_pool, v_pool, *w)
+//!   -> (logits [B, W, V], k_pool', v_pool')`: one **O(suffix)** decode
+//!   step over every pool slot at once. This is what makes
+//!   `SessionAppend` cost scale with the suffix, not the prefix — the
+//!   `T_i` Lemma 3.1's cost model prices chains by — and it is the device
+//!   half of the scheduler's coalesced `SessionAppendBatch`: the batch
+//!   dimension rides on *cache pages* (pool slots shaped on the paged-KV
+//!   block size), not re-stacked token prefixes.
+//!
+//! # Cache pool contract
+//!
+//! The pool holds `B` slots of `[L, NB, BS, H, dh]` K/V rows (one
+//! `coordinator::paged` block per `BS` tokens). Per slot the engine tracks
+//! `(used, len, valid)`: rows `< len` are authoritative, rows `>= len` are
+//! garbage-but-finite and never attended (the decode HLO masks position
+//! `j` for suffix row `d` unless `j <= prefix_len + d`). Rollback is an
+//! O(1) host-side length decrement; the stale device rows are overwritten
+//! by the next decode at that position. Appends longer than the window
+//! loop window-sized chunks; near `seq_len` a chunk is *end-aligned*
+//! (re-feeding a few already-cached tokens, whose recomputed K/V rows are
+//! bit-identical because the computation is deterministic) so
+//! `dynamic_update_slice`'s start-index clamping can never corrupt valid
+//! rows. Idle slots ride every batched call as dummies writing into their
+//! own garbage region; an idle slot whose garbage region is narrower than
+//! the window is invalidated instead and repaired by re-prefill on its
+//! next append.
+//!
+//! Updated pool buffers replace the engine's handles after every call
+//! (no donation/aliasing yet — xla 0.1.6 exposes none; and when the
+//! result arrives as one tuple literal rather than untupled leaf buffers,
+//! the pools take a host round-trip per call — both are loader
+//! limitations, not contract changes).
 //!
 //! NOTE: `xla::PjRtClient` is `Rc`-based (not `Send`); engines must stay on
 //! the thread that created them. [`super::host::EngineHost`] provides a
@@ -18,6 +63,7 @@
 
 #[cfg(feature = "pjrt")]
 mod real {
+    use std::cell::RefCell;
     use std::time::{Duration, Instant};
 
     use anyhow::{Context, Result};
@@ -40,31 +86,110 @@ mod real {
         }
     }
 
+    /// Host-side view of one pool slot (see module doc, "Cache pool
+    /// contract"). Device rows `< len` are authoritative iff `valid`.
+    #[derive(Clone, Copy, Default)]
+    struct Slot {
+        used: bool,
+        len: usize,
+        valid: bool,
+    }
+
+    /// Device-resident K/V cache pool + the prefill/decode executables
+    /// that read and write it.
+    struct CachePool {
+        prefill_exe: xla::PjRtLoadedExecutable,
+        decode_exe: xla::PjRtLoadedExecutable,
+        k: xla::PjRtBuffer,
+        v: xla::PjRtBuffer,
+        /// `[B, L, NB, BS, H, dh]` — kept for the tuple-literal re-upload
+        /// fallback in `split_cached_result`.
+        shape: Vec<usize>,
+        batch: usize,
+        window: usize,
+        slots: Vec<Slot>,
+    }
+
     /// One compiled chain member with device-resident weights.
     pub struct ModelEngine {
         meta: ModelMeta,
         role: String,
         exe: xla::PjRtLoadedExecutable,
+        /// Legacy stacked `[B, S]` entry (batch size, executable).
+        batched: Option<(usize, xla::PjRtLoadedExecutable)>,
+        /// KV-cached incremental state; `RefCell` because the engine is
+        /// thread-pinned (see module NOTE) and `LanguageModel` takes `&self`.
+        pool: Option<RefCell<CachePool>>,
         /// Weight buffers in executable-argument order (tokens arg excluded).
         weights: Vec<xla::PjRtBuffer>,
         client: xla::PjRtClient,
         counters: ModelCounters,
     }
 
+    fn compile_hlo_text(
+        client: &xla::PjRtClient,
+        path: &std::path::Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
     impl ModelEngine {
-        /// Load + compile one role from the artifacts directory.
+        /// Load + compile one role from the artifacts directory, including
+        /// the batched / incremental executables when the manifest has them.
         pub fn load(client: &Client, role: &RoleSpec) -> Result<Self> {
-            let proto = xla::HloModuleProto::from_text_file(
-                role.hlo_path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing HLO text {:?}", role.hlo_path))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .inner
-                .compile(&comp)
-                .with_context(|| {
-                    format!("compiling {}/{}", role.hlo_path.display(), role.role)
-                })?;
+            let exe = compile_hlo_text(&client.inner, &role.hlo_path)
+                .with_context(|| format!("role {}", role.role))?;
+
+            let batched = match &role.batched {
+                Some(b) => Some((b.batch, compile_hlo_text(&client.inner, &b.hlo_path)?)),
+                None => None,
+            };
+            let pool = match &role.incremental {
+                Some(inc) => {
+                    let c = &inc.cache;
+                    anyhow::ensure!(
+                        c.blocks * c.block_size == role.meta.seq_len,
+                        "cache {}x{} blocks != seq_len {}",
+                        c.blocks,
+                        c.block_size,
+                        role.meta.seq_len
+                    );
+                    anyhow::ensure!(
+                        inc.window >= 1 && inc.window <= role.meta.seq_len,
+                        "decode window {} outside [1, seq_len {}]",
+                        inc.window,
+                        role.meta.seq_len
+                    );
+                    let shape =
+                        vec![inc.batch, c.n_layers, c.blocks, c.block_size, c.n_heads, c.d_head];
+                    // Zero-filled pools: every slot starts all-garbage
+                    // (len 0), which the validity contract already covers.
+                    let zeros = vec![0f32; inc.batch * c.slot_elems()];
+                    let k = client
+                        .inner
+                        .buffer_from_host_buffer::<f32>(&zeros, &shape, None)
+                        .context("allocating K pool")?;
+                    let v = client
+                        .inner
+                        .buffer_from_host_buffer::<f32>(&zeros, &shape, None)
+                        .context("allocating V pool")?;
+                    Some(RefCell::new(CachePool {
+                        prefill_exe: compile_hlo_text(&client.inner, &inc.prefill_path)?,
+                        decode_exe: compile_hlo_text(&client.inner, &inc.decode_path)?,
+                        k,
+                        v,
+                        shape,
+                        batch: inc.batch,
+                        window: inc.window,
+                        slots: vec![Slot::default(); inc.batch],
+                    }))
+                }
+                None => None,
+            };
 
             let blob = std::fs::read(&role.params_path)
                 .with_context(|| format!("reading weights {:?}", role.params_path))?;
@@ -115,6 +240,8 @@ mod real {
                 meta: role.meta.clone(),
                 role: role.role.clone(),
                 exe,
+                batched,
+                pool,
                 weights,
                 client: client.inner.clone(),
                 counters: ModelCounters::default(),
@@ -159,24 +286,347 @@ mod real {
             Ok(data)
         }
 
-        /// Score a whole batch of session prefixes in one engine visit —
-        /// the device half of `SessionAppendBatch`. The compiled HLO still
-        /// has no batch dimension (a `[B, S]` entry point is tracked on
-        /// the ROADMAP next to device-side KV caching; see the batched
-        /// stub in `python/compile/aot.py`), so the stacked prefixes
-        /// execute back-to-back under **one** counters bracket: today's
-        /// win is one channel round-trip and one timed call per
-        /// (model, tick) instead of per request.
+        /// Score a whole batch of *stateless* session prefixes in one
+        /// engine visit. With a `--batched N` manifest entry the stacked
+        /// `[B, S]` executable runs each N-row chunk as **one** device
+        /// submission (unused trailing rows stay zero-padded and their
+        /// logits are discarded); without it, the rows execute
+        /// back-to-back under one counters bracket. Cached sessions take
+        /// [`Self::decode_batch`] instead.
         pub fn forward_batch(&self, prefixes: &[&[Token]]) -> Result<Vec<Logits>> {
             let start = Instant::now();
             let vocab = self.meta.vocab;
+            let s = self.meta.seq_len;
             let mut out = Vec::with_capacity(prefixes.len());
-            for tokens in prefixes {
-                let data = self.execute(tokens)?;
-                out.push(Logits::new(data[..tokens.len() * vocab].to_vec(), tokens.len(), vocab));
+            match &self.batched {
+                Some((b, exe)) => {
+                    for chunk in prefixes.chunks(*b) {
+                        let mut stacked = vec![0i32; b * s];
+                        for (i, tokens) in chunk.iter().enumerate() {
+                            anyhow::ensure!(
+                                tokens.len() <= s,
+                                "context {} exceeds seq_len {s}",
+                                tokens.len()
+                            );
+                            stacked[i * s..i * s + tokens.len()].copy_from_slice(tokens);
+                        }
+                        let buf = self
+                            .client
+                            .buffer_from_host_buffer::<i32>(&stacked, &[*b, s], None)
+                            .context("uploading stacked tokens")?;
+                        let mut args: Vec<&xla::PjRtBuffer> =
+                            Vec::with_capacity(1 + self.weights.len());
+                        args.push(&buf);
+                        args.extend(self.weights.iter());
+                        let result = exe.execute_b(&args).context("batched execute")?;
+                        let lit = result[0][0].to_literal_sync().context("fetching logits")?;
+                        let data = lit
+                            .to_tuple1()
+                            .context("unwrapping 1-tuple")?
+                            .to_vec::<f32>()
+                            .context("logits to host")?;
+                        anyhow::ensure!(
+                            data.len() == b * s * vocab,
+                            "unexpected batched logits size {} != {}x{}x{}",
+                            data.len(),
+                            b,
+                            s,
+                            vocab
+                        );
+                        for (i, tokens) in chunk.iter().enumerate() {
+                            let row0 = i * s * vocab;
+                            out.push(Logits::new(
+                                data[row0..row0 + tokens.len() * vocab].to_vec(),
+                                tokens.len(),
+                                vocab,
+                            ));
+                        }
+                    }
+                }
+                None => {
+                    for tokens in prefixes {
+                        let data = self.execute(tokens)?;
+                        out.push(Logits::new(
+                            data[..tokens.len() * vocab].to_vec(),
+                            tokens.len(),
+                            vocab,
+                        ));
+                    }
+                }
             }
             self.counters.record(start.elapsed());
             Ok(out)
+        }
+
+        // ---- KV-cached incremental path ---------------------------------
+
+        /// Claim a free pool slot for a new session. `None` when the role
+        /// has no incremental export or every slot is taken — the caller
+        /// falls back to stateless scoring.
+        pub fn cache_alloc(&self) -> Option<usize> {
+            let pool = self.pool.as_ref()?;
+            let mut p = pool.borrow_mut();
+            let idx = p.slots.iter().position(|s| !s.used)?;
+            p.slots[idx] = Slot { used: true, len: 0, valid: false };
+            Some(idx)
+        }
+
+        /// Return a slot to the pool. Device rows are left as-is: a freed
+        /// slot is all-garbage by contract (len 0).
+        pub fn cache_free(&self, slot: usize) {
+            if let Some(pool) = &self.pool {
+                let mut p = pool.borrow_mut();
+                if slot < p.slots.len() {
+                    p.slots[slot] = Slot::default();
+                }
+            }
+        }
+
+        /// O(1) rollback: drop cached rows past `to_len`. The stale device
+        /// rows are overwritten by the next decode at that position.
+        pub fn cache_rollback(&self, slot: usize, to_len: usize) {
+            if let Some(pool) = &self.pool {
+                let mut p = pool.borrow_mut();
+                if let Some(s) = p.slots.get_mut(slot) {
+                    s.len = s.len.min(to_len);
+                }
+            }
+        }
+
+        /// True iff `decode_batch` may serve an append starting at `from`
+        /// on this slot: the cache is valid and positioned exactly there.
+        pub fn can_decode(&self, slot: usize, from: usize) -> bool {
+            match &self.pool {
+                Some(pool) => {
+                    let p = pool.borrow();
+                    p.slots.get(slot).is_some_and(|s| s.used && s.valid && s.len == from)
+                }
+                None => false,
+            }
+        }
+
+        /// Split a 3-output `(logits, k_pool', v_pool')` execute result.
+        ///
+        /// xla 0.1.6 API note: with `return_tuple=True` modules, PJRT
+        /// clients either *untuple* the result into one `PjRtBuffer` per
+        /// leaf (preferred — the pools never leave the device) or hand
+        /// back a single buffer holding the tuple literal. Handle both;
+        /// the latter costs a pool host round-trip per call (module doc).
+        fn split_cached_result(
+            &self,
+            result: Vec<Vec<xla::PjRtBuffer>>,
+            pool_shape: &[usize],
+        ) -> Result<(Vec<f32>, xla::PjRtBuffer, xla::PjRtBuffer)> {
+            let mut bufs = result.into_iter().next().context("empty execute result")?;
+            match bufs.len() {
+                3 => {
+                    let v = bufs.pop().expect("v pool");
+                    let k = bufs.pop().expect("k pool");
+                    let logits = bufs[0]
+                        .to_literal_sync()
+                        .context("fetching logits")?
+                        .to_vec::<f32>()
+                        .context("logits to host")?;
+                    Ok((logits, k, v))
+                }
+                1 => {
+                    let lit = bufs[0].to_literal_sync().context("fetching result tuple")?;
+                    let parts = lit.to_tuple().context("decomposing 3-tuple")?;
+                    anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+                    let logits = parts[0].to_vec::<f32>().context("logits to host")?;
+                    let k_host = parts[1].to_vec::<f32>().context("k pool to host")?;
+                    let v_host = parts[2].to_vec::<f32>().context("v pool to host")?;
+                    let k = self
+                        .client
+                        .buffer_from_host_buffer::<f32>(&k_host, pool_shape, None)
+                        .context("re-uploading K pool")?;
+                    let v = self
+                        .client
+                        .buffer_from_host_buffer::<f32>(&v_host, pool_shape, None)
+                        .context("re-uploading V pool")?;
+                    Ok((logits, k, v))
+                }
+                n => anyhow::bail!("unexpected execute output arity {n}"),
+            }
+        }
+
+        /// Full-context score + cache write: positions the slot's cache at
+        /// `tokens.len()`. Used at first append and as *repair* after the
+        /// cache went stale (rollback past a window boundary, capacity
+        /// invalidation). O(prefix), like the stateless forward.
+        pub fn prefill(&self, slot: usize, tokens: &[Token]) -> Result<Logits> {
+            let pool = self.pool.as_ref().context("no incremental cache pool loaded")?;
+            let start = Instant::now();
+            let s = self.meta.seq_len;
+            let vocab = self.meta.vocab;
+            anyhow::ensure!(tokens.len() <= s, "context {} exceeds seq_len {s}", tokens.len());
+            let mut p = pool.borrow_mut();
+            anyhow::ensure!(
+                p.slots.get(slot).is_some_and(|sl| sl.used),
+                "prefill into unallocated slot {slot}"
+            );
+            let mut padded = vec![0i32; s];
+            padded[..tokens.len()].copy_from_slice(tokens);
+            let tok_buf = self
+                .client
+                .buffer_from_host_buffer::<i32>(&padded, &[s], None)
+                .context("uploading tokens")?;
+            let slot_buf = self
+                .client
+                .buffer_from_host_buffer::<i32>(&[slot as i32], &[], None)
+                .context("uploading slot index")?;
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 + self.weights.len());
+            args.push(&tok_buf);
+            args.push(&slot_buf);
+            args.push(&p.k);
+            args.push(&p.v);
+            args.extend(self.weights.iter());
+            let result = p.prefill_exe.execute_b(&args).context("prefill execute")?;
+            let (data, k, v) = self.split_cached_result(result, &p.shape.clone())?;
+            anyhow::ensure!(
+                data.len() == s * vocab,
+                "unexpected prefill logits size {} != {s}x{vocab}",
+                data.len()
+            );
+            p.k = k;
+            p.v = v;
+            p.slots[slot] = Slot { used: true, len: tokens.len(), valid: true };
+            self.counters.record(start.elapsed());
+            Ok(Logits::new(data[..tokens.len() * vocab].to_vec(), tokens.len(), vocab))
+        }
+
+        /// One **O(suffix)** batched decode: score each row's suffix
+        /// (`tokens[from..]`, with `tokens` the full prefix for end-aligned
+        /// re-feeds) against its slot's cache, all rows in one device
+        /// submission per window chunk. Every row must satisfy
+        /// [`Self::can_decode`]`(slot, from)`; on success each slot's
+        /// cache is positioned at `tokens.len()`.
+        ///
+        /// Per-call cost is O(chunks · batch · window · seq_len) attention
+        /// — independent of prefix length (a solo append pays the dummy
+        /// rows of idle slots: the padding tradeoff for one fixed-shape
+        /// executable).
+        pub fn decode_batch(&self, rows: &[(usize, &[Token], usize)]) -> Result<Vec<Logits>> {
+            let pool = self.pool.as_ref().context("no incremental cache pool loaded")?;
+            let start = Instant::now();
+            let s = self.meta.seq_len;
+            let vocab = self.meta.vocab;
+            let mut p = pool.borrow_mut();
+            let (b, w) = (p.batch, p.window);
+            anyhow::ensure!(!rows.is_empty(), "empty decode batch");
+            let mut part: Vec<Option<usize>> = vec![None; b];
+            for (i, &(slot, tokens, from)) in rows.iter().enumerate() {
+                anyhow::ensure!(slot < b, "slot {slot} out of pool range {b}");
+                anyhow::ensure!(part[slot].is_none(), "slot {slot} appears twice in batch");
+                let sl = &p.slots[slot];
+                anyhow::ensure!(
+                    sl.used && sl.valid && sl.len == from,
+                    "slot {slot} not positioned for decode at {from} \
+                     (used={} valid={} len={})",
+                    sl.used,
+                    sl.valid,
+                    sl.len
+                );
+                anyhow::ensure!(from < tokens.len(), "empty suffix for slot {slot}");
+                anyhow::ensure!(
+                    tokens.len() <= s,
+                    "context {} exceeds seq_len {s}",
+                    tokens.len()
+                );
+                part[slot] = Some(i);
+            }
+            let max_suffix = rows.iter().map(|&(_, t, f)| t.len() - f).max().unwrap_or(0);
+            let chunks = max_suffix.div_ceil(w);
+            let mut out: Vec<Vec<f32>> =
+                rows.iter().map(|&(_, t, f)| Vec::with_capacity((t.len() - f) * vocab)).collect();
+
+            for c in 0..chunks {
+                let mut suffixes = vec![0i32; b * w];
+                let mut lens = vec![0i32; b];
+                for slot in 0..b {
+                    match part[slot] {
+                        Some(i) => {
+                            let (_, tokens, from) = rows[i];
+                            // This chunk wants rows [pos, pos + w) ∩
+                            // [from, total); end-align near capacity so the
+                            // write window always fits (re-fed rows
+                            // recompute bit-identical K/V).
+                            let total = tokens.len();
+                            let pos = (from + c * w).min(total);
+                            let chunk_start = pos.min(s - w);
+                            for (j, tok) in
+                                tokens[chunk_start..total.min(chunk_start + w)].iter().enumerate()
+                            {
+                                suffixes[slot * w + j] = *tok;
+                            }
+                            lens[slot] = chunk_start as i32;
+                        }
+                        None if p.slots[slot].used && p.slots[slot].valid => {
+                            // Idle slot: dummy rows must land in its own
+                            // garbage region. If that region is narrower
+                            // than the window, the write would clobber
+                            // valid rows — invalidate and let the next
+                            // append repair by re-prefill.
+                            let len = p.slots[slot].len;
+                            if len + w <= s {
+                                lens[slot] = len as i32;
+                            } else {
+                                lens[slot] = (s - w) as i32;
+                                p.slots[slot].valid = false;
+                            }
+                        }
+                        None => {
+                            // Unused/invalid slot: the whole cache is
+                            // garbage, any write position is fine.
+                            lens[slot] = 0;
+                        }
+                    }
+                }
+                let suf_buf = self
+                    .client
+                    .buffer_from_host_buffer::<i32>(&suffixes, &[b, w], None)
+                    .context("uploading suffixes")?;
+                let len_buf = self
+                    .client
+                    .buffer_from_host_buffer::<i32>(&lens, &[b], None)
+                    .context("uploading prefix lens")?;
+                let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 + self.weights.len());
+                args.push(&suf_buf);
+                args.push(&len_buf);
+                args.push(&p.k);
+                args.push(&p.v);
+                args.extend(self.weights.iter());
+                let result = p.decode_exe.execute_b(&args).context("decode execute")?;
+                let (data, k, v) = self.split_cached_result(result, &p.shape.clone())?;
+                anyhow::ensure!(
+                    data.len() == b * w * vocab,
+                    "unexpected decode logits size {} != {b}x{w}x{vocab}",
+                    data.len()
+                );
+                p.k = k;
+                p.v = v;
+                for (i, &(slot, tokens, from)) in rows.iter().enumerate() {
+                    let total = tokens.len();
+                    let pos = from + c * w;
+                    if pos >= total {
+                        continue; // this row finished in an earlier chunk
+                    }
+                    let chunk_start = pos.min(s - w);
+                    let take = w.min(total - pos);
+                    let off = pos - chunk_start;
+                    let base = (slot * w + off) * vocab;
+                    out[i].extend_from_slice(&data[base..base + take * vocab]);
+                }
+            }
+            for &(slot, tokens, _) in rows {
+                p.slots[slot].len = tokens.len();
+            }
+            self.counters.record(start.elapsed());
+            Ok(rows
+                .iter()
+                .zip(out)
+                .map(|(&(_, t, f), data)| Logits::new(data, t.len() - f, vocab))
+                .collect())
         }
     }
 
@@ -266,6 +716,30 @@ mod stub {
         }
 
         pub fn forward_batch(&self, _prefixes: &[&[Token]]) -> Result<Vec<Logits>> {
+            anyhow::bail!(DISABLED)
+        }
+
+        // KV-cached incremental API, mirrored so `runtime::host` compiles
+        // identically without the `pjrt` feature. `cache_alloc` reporting
+        // "no pool" routes every session to the stateless path, which then
+        // fails with the same DISABLED error as everything else here.
+        pub fn cache_alloc(&self) -> Option<usize> {
+            None
+        }
+
+        pub fn cache_free(&self, _slot: usize) {}
+
+        pub fn cache_rollback(&self, _slot: usize, _to_len: usize) {}
+
+        pub fn can_decode(&self, _slot: usize, _from: usize) -> bool {
+            false
+        }
+
+        pub fn prefill(&self, _slot: usize, _tokens: &[Token]) -> Result<Logits> {
+            anyhow::bail!(DISABLED)
+        }
+
+        pub fn decode_batch(&self, _rows: &[(usize, &[Token], usize)]) -> Result<Vec<Logits>> {
             anyhow::bail!(DISABLED)
         }
     }

@@ -16,9 +16,21 @@
 //! the reply carries only the *new* logits rows — O(suffix · vocab) on the
 //! wire instead of O(prefix · vocab) both ways. The host side
 //! ([`RemoteSession`]) caches every row it has received, so `rollback` and
-//! row re-reads never touch the channel. (The compiled HLO itself is
-//! stateless full-context; device-side KV caching is a separate artifact
-//! change tracked on the ROADMAP.)
+//! row re-reads never touch the channel.
+//!
+//! With a `--batched` artifact set, the engine thread also keeps each
+//! session's K/V rows *device-resident* in the engine's cache pool: at
+//! `SessionOpen` the session claims a pool slot (falling back to stateless
+//! scoring when the pool is exhausted or absent), and each append then
+//! executes the **O(suffix)** decode-step executable over only the new
+//! tokens ([`ModelEngine::decode_batch`]). A session whose cache went
+//! stale (rollback past a window boundary, capacity invalidation, or a
+//! stateless-scored stretch) is *repaired* by one O(prefix)
+//! [`ModelEngine::prefill`] and decodes incrementally again after.
+//! Rollback stays O(1) on the cache (a length decrement — stale device
+//! rows are overwritten by the next decode), so the
+//! decode/prefill/stateless choice is invisible in the bytes: all three
+//! score the same prefix with the same weights.
 //!
 //! # Batched appends (plan → submit → absorb)
 //!
@@ -29,9 +41,12 @@
 //! by model and *submits* one batched request per member
 //! ([`LanguageModel::append_batch`]), and each task *absorbs* its
 //! per-entry rows before `step()` runs — whose first reconcile is then a
-//! free no-op. The engine thread executes a batch as one stacked forward
-//! per model ([`ModelEngine::forward_batch`]) and slices each session's
-//! new rows out of the result. The reply carries per-entry `Result`s, so
+//! free no-op. The engine thread splits each model's batch into
+//! cache-resident sessions — **one** O(suffix) batched decode submission
+//! over the pool ([`ModelEngine::decode_batch`]) — and stateless ones,
+//! one stacked `[B, S]` submission when the legacy batched executable is
+//! loaded ([`ModelEngine::forward_batch`]); each session's new rows are
+//! sliced out of its group's result. The reply carries per-entry `Result`s, so
 //! one poisoned session fails alone: failed entries are retried as a
 //! *subset* batch under the same [`CallPolicy`] backoff, and every entry's
 //! outcome feeds the per-model health tracker individually.
@@ -207,10 +222,49 @@ impl Drop for EngineHost {
     }
 }
 
-/// Engine-thread-side session state: the authoritative token prefix.
+/// Engine-thread-side session state: the authoritative token prefix plus
+/// the engine cache-pool slot holding its device-resident K/V rows
+/// (`None` = stateless session: pool exhausted, absent, or stub build).
 struct SessionState {
     model: usize,
     tokens: Vec<Token>,
+    slot: Option<usize>,
+}
+
+/// Score `st.tokens[from..]` after the prefix was already extended,
+/// preferring the cheapest valid path: O(suffix) cached decode, O(prefix)
+/// cache repair (prefill), O(prefix) stateless forward. All three produce
+/// identical rows (same prefix, same weights); only cost differs. The
+/// caller rolls the prefix back on `Err`.
+fn session_score(engine: &ModelEngine, st: &SessionState, from: usize) -> Result<Logits> {
+    if from == st.tokens.len() {
+        // Empty appends are free (ScoringSession invariant); never reach
+        // the device.
+        return Ok(Logits::new(Vec::new(), 0, engine.vocab()));
+    }
+    if let Some(slot) = st.slot {
+        if engine.can_decode(slot, from) {
+            let mut rows = engine.decode_batch(&[(slot, st.tokens.as_slice(), from)])?;
+            return Ok(rows.pop().expect("one entry in, one out"));
+        }
+        // Stale cache (rollback past a window boundary, capacity
+        // invalidation, or a stateless stretch): one prefill repositions
+        // it at the full prefix, and this append's rows come for free.
+        let logits = engine.prefill(slot, &st.tokens)?;
+        return slice_rows(&logits, from, st.tokens.len());
+    }
+    let logits = engine.forward(&st.tokens)?;
+    slice_rows(&logits, from, st.tokens.len())
+}
+
+/// Copy rows `[from, to)` out of a full-context logits block.
+fn slice_rows(logits: &Logits, from: usize, to: usize) -> Result<Logits> {
+    let vocab = logits.vocab();
+    let mut data = Vec::with_capacity((to - from) * vocab);
+    for t in from..to {
+        data.extend_from_slice(logits.row(t));
+    }
+    Ok(Logits::new(data, to - from, vocab))
 }
 
 fn engine_thread(
@@ -259,7 +313,10 @@ fn engine_thread(
             Req::SessionOpen { model, reply } => {
                 let id = next_session;
                 next_session += 1;
-                sessions.insert(id, SessionState { model, tokens: Vec::new() });
+                // Claim a cache-pool slot if the role has an incremental
+                // export with free capacity; stateless otherwise.
+                let slot = engines[model].cache_alloc();
+                sessions.insert(id, SessionState { model, tokens: Vec::new(), slot });
                 let _ = reply.send(id);
             }
             Req::SessionAppend { session, tokens, reply } => {
@@ -267,23 +324,14 @@ fn engine_thread(
                     let st = sessions.get_mut(&session).context("unknown session")?;
                     let from = st.tokens.len();
                     st.tokens.extend_from_slice(&tokens);
-                    // The compiled HLO is stateless full-context: re-execute
-                    // the whole prefix, but ship only the new rows back.
-                    match engines[st.model].forward(&st.tokens) {
-                        Ok(logits) => {
-                            let vocab = logits.vocab();
-                            let rows = st.tokens.len() - from;
-                            let mut data = Vec::with_capacity(rows * vocab);
-                            for t in from..st.tokens.len() {
-                                data.extend_from_slice(logits.row(t));
-                            }
-                            Ok(Logits::new(data, rows, vocab))
-                        }
-                        Err(e) => {
-                            st.tokens.truncate(from);
-                            Err(e)
-                        }
+                    // O(suffix) on the cached path; the engine rolls its
+                    // own slot state back implicitly (slot.len only
+                    // advances on success), the prefix rolls back here.
+                    let r = session_score(&engines[st.model], st, from);
+                    if r.is_err() {
+                        st.tokens.truncate(from);
                     }
+                    r
                 })();
                 let _ = reply.send(r);
             }
@@ -299,12 +347,21 @@ fn engine_thread(
                         st.tokens.len()
                     );
                     st.tokens.truncate(to_len);
+                    // O(1) cache sync: drop cached rows past the new
+                    // length; device rows are overwritten by later decodes.
+                    if let Some(slot) = st.slot {
+                        engines[st.model].cache_rollback(slot, to_len);
+                    }
                     Ok(())
                 })();
                 let _ = reply.send(r);
             }
             Req::SessionClose { session } => {
-                sessions.remove(&session);
+                if let Some(st) = sessions.remove(&session) {
+                    if let Some(slot) = st.slot {
+                        engines[st.model].cache_free(slot);
+                    }
+                }
             }
             Req::Shutdown => break,
         }
@@ -312,11 +369,13 @@ fn engine_thread(
 }
 
 /// Execute a batched append on the engine thread: extend every named
-/// session, run **one** stacked forward per distinct model in the batch,
-/// and slice each entry's new rows out of the shared result. Entries fail
-/// individually (unknown session); a model-level forward failure fails —
-/// and rolls back — every entry of that model's group, leaving other
-/// models' entries untouched.
+/// session, then per distinct model run **one** O(suffix) batched decode
+/// submission over the cache-resident sessions ([`ModelEngine::decode_batch`])
+/// plus one stacked stateless forward over the rest
+/// ([`ModelEngine::forward_batch`]), and slice each entry's new rows out
+/// of its group's result. Entries fail individually (unknown session); a
+/// group-level failure fails — and rolls back — every entry of that
+/// group, leaving other groups' entries untouched.
 fn run_append_batch(
     engines: &[ModelEngine],
     sessions: &mut HashMap<u64, SessionState>,
@@ -348,34 +407,80 @@ fn run_append_batch(
             }
         }
     }
-    // Stage 2: one batched forward per distinct model over the distinct
-    // sessions it touches (first-appearance order keeps this deterministic).
-    let mut order: Vec<(usize, u64)> = Vec::new();
+    // Stage 2: per distinct model, split its distinct sessions
+    // (first-appearance order keeps this deterministic) into
+    // cache-resident ones — scored by **one** batched decode submission
+    // over only their suffixes — and stateless ones, scored by one
+    // stacked full-prefix forward. `from0` is the pre-batch length (the
+    // first staged entry per session carries it), so a cached session's
+    // decode covers every stacked entry of this batch at once.
+    let mut order: Vec<(usize, u64, usize)> = Vec::new();
     for s in staged.iter().flatten() {
-        if !order.iter().any(|&(_, sid)| sid == s.session) {
-            order.push((s.model, s.session));
+        if !order.iter().any(|&(_, sid, _)| sid == s.session) {
+            order.push((s.model, s.session, s.from));
         }
     }
-    let mut distinct_models: Vec<usize> = order.iter().map(|&(m, _)| m).collect();
+    let mut distinct_models: Vec<usize> = order.iter().map(|&(m, _, _)| m).collect();
     distinct_models.sort_unstable();
     distinct_models.dedup();
-    let mut ok_rows: HashMap<u64, Logits> = HashMap::new();
+    // Per-session scored rows + the absolute position of their first row
+    // (0 for full-context results, `from0` for suffix-only decode results).
+    let mut ok_rows: HashMap<u64, (usize, Logits)> = HashMap::new();
     let mut failed: HashMap<u64, String> = HashMap::new();
     for model in distinct_models {
-        let group: Vec<u64> =
-            order.iter().filter(|&&(m, _)| m == model).map(|&(_, s)| s).collect();
-        let prefixes: Vec<&[Token]> =
-            group.iter().map(|sid| sessions[sid].tokens.as_slice()).collect();
-        match engines[model].forward_batch(&prefixes) {
-            Ok(all) => {
-                for (sid, logits) in group.iter().zip(all) {
-                    ok_rows.insert(*sid, logits);
+        let engine = &engines[model];
+        let mut cached: Vec<(u64, usize)> = Vec::new();
+        let mut stateless: Vec<u64> = Vec::new();
+        for &(m, sid, from0) in &order {
+            if m != model {
+                continue;
+            }
+            let st = &sessions[&sid];
+            let on_cache = st
+                .slot
+                .is_some_and(|slot| engine.can_decode(slot, from0) && from0 < st.tokens.len());
+            if on_cache {
+                cached.push((sid, from0));
+            } else {
+                stateless.push(sid);
+            }
+        }
+        if !cached.is_empty() {
+            let rows: Vec<(usize, &[Token], usize)> = cached
+                .iter()
+                .map(|&(sid, from0)| {
+                    let st = &sessions[&sid];
+                    (st.slot.expect("cached session has a slot"), st.tokens.as_slice(), from0)
+                })
+                .collect();
+            match engine.decode_batch(&rows) {
+                Ok(all) => {
+                    for (&(sid, from0), logits) in cached.iter().zip(all) {
+                        ok_rows.insert(sid, (from0, logits));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for &(sid, _) in &cached {
+                        failed.insert(sid, msg.clone());
+                    }
                 }
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for sid in &group {
-                    failed.insert(*sid, msg.clone());
+        }
+        if !stateless.is_empty() {
+            let prefixes: Vec<&[Token]> =
+                stateless.iter().map(|sid| sessions[sid].tokens.as_slice()).collect();
+            match engine.forward_batch(&prefixes) {
+                Ok(all) => {
+                    for (sid, logits) in stateless.iter().zip(all) {
+                        ok_rows.insert(*sid, (0, logits));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for sid in &stateless {
+                        failed.insert(*sid, msg.clone());
+                    }
                 }
             }
         }
@@ -397,11 +502,11 @@ fn run_append_batch(
         if let Some(msg) = failed.get(&s.session) {
             results[i] = Some(Err(anyhow::anyhow!("batched forward failed: {msg}")));
         } else {
-            let logits = &ok_rows[&s.session];
+            let (base, logits) = &ok_rows[&s.session];
             let vocab = logits.vocab();
             let mut data = Vec::with_capacity(s.len * vocab);
             for t in s.from..s.from + s.len {
-                data.extend_from_slice(logits.row(t));
+                data.extend_from_slice(logits.row(t - base));
             }
             results[i] = Some(Ok(Logits::new(data, s.len, vocab)));
         }

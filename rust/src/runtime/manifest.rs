@@ -57,6 +57,53 @@ pub struct ModelMeta {
     pub flops_per_forward: u64,
 }
 
+/// Legacy stacked-batch entry: `f(tokens [B, S]) -> (logits [B, S, V],)`.
+///
+/// Still O(prefix) per row (a vmap over the full-prefix forward); the engine
+/// uses it to run stateless `forward_batch` as one submission instead of a
+/// per-row `execute` loop. Cached sessions use [`IncrementalSpec`] instead.
+#[derive(Debug, Clone)]
+pub struct BatchedSpec {
+    pub hlo_path: PathBuf,
+    pub batch: usize,
+}
+
+/// Shape of one pool slot's K/V cache: `[n_layers, blocks, block_size,
+/// n_heads, d_head]` f32, block-sized to match `coordinator::paged`.
+#[derive(Debug, Clone)]
+pub struct CacheSpec {
+    pub block_size: usize,
+    pub blocks: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+}
+
+impl CacheSpec {
+    /// f32 elements in one slot's K (or V) cache.
+    pub fn slot_elems(&self) -> usize {
+        self.n_layers * self.blocks * self.block_size * self.n_heads * self.d_head
+    }
+}
+
+/// KV-cached incremental pair over a `batch`-slot device cache pool:
+///
+///   prefill: `f(tokens [S], slot [] s32, k_pool, v_pool, *w)
+///             -> (logits [S, V], k_pool', v_pool')`
+///   decode:  `f(suffixes [B, W], prefix_lens [B] s32, k_pool, v_pool, *w)
+///             -> (logits [B, W, V], k_pool', v_pool')`
+///
+/// Pools are `[B, <CacheSpec>]`; the decode entry scores `window` suffix
+/// tokens per slot per call in O(window · seq_len) — flat in prefix length.
+#[derive(Debug, Clone)]
+pub struct IncrementalSpec {
+    pub prefill_path: PathBuf,
+    pub decode_path: PathBuf,
+    pub batch: usize,
+    pub window: usize,
+    pub cache: CacheSpec,
+}
+
 /// One chain member: where its HLO + weights live and what it looks like.
 #[derive(Debug, Clone)]
 pub struct RoleSpec {
@@ -65,6 +112,10 @@ pub struct RoleSpec {
     pub params_path: PathBuf,
     pub args: Vec<ArgSpec>,
     pub meta: ModelMeta,
+    /// `--batched N` legacy stacked entry, when exported.
+    pub batched: Option<BatchedSpec>,
+    /// `--batched N` KV-cached prefill/decode pair, when exported.
+    pub incremental: Option<IncrementalSpec>,
 }
 
 /// One model family (target + derived drafters).
@@ -157,12 +208,42 @@ fn parse_role(role_name: &str, r: &Json, root: &Path) -> Result<RoleSpec> {
             nbytes: a.req("nbytes")?.as_usize().context("nbytes")?,
         });
     }
+    let batched = match r.get("batched") {
+        Some(b) => Some(BatchedSpec {
+            hlo_path: root.join(b.req("hlo")?.as_str().context("batched hlo")?),
+            batch: b.req("batch")?.as_usize().context("batched batch")?,
+        }),
+        None => None,
+    };
+    let incremental = match r.get("incremental") {
+        Some(inc) => {
+            let c = inc.req("cache")?;
+            Some(IncrementalSpec {
+                prefill_path: root
+                    .join(inc.req("prefill_hlo")?.as_str().context("prefill_hlo")?),
+                decode_path: root
+                    .join(inc.req("decode_hlo")?.as_str().context("decode_hlo")?),
+                batch: inc.req("batch")?.as_usize().context("incremental batch")?,
+                window: inc.req("window")?.as_usize().context("window")?,
+                cache: CacheSpec {
+                    block_size: c.req("block_size")?.as_usize().context("block_size")?,
+                    blocks: c.req("blocks")?.as_usize().context("blocks")?,
+                    n_layers: c.req("n_layers")?.as_usize().context("cache n_layers")?,
+                    n_heads: c.req("n_heads")?.as_usize().context("cache n_heads")?,
+                    d_head: c.req("d_head")?.as_usize().context("cache d_head")?,
+                },
+            })
+        }
+        None => None,
+    };
     Ok(RoleSpec {
         role: role_name.to_string(),
         hlo_path: root.join(r.req("hlo")?.as_str().context("hlo")?),
         params_path: root.join(r.req("params_bin")?.as_str().context("params_bin")?),
         args,
         meta,
+        batched,
+        incremental,
     })
 }
 
@@ -185,7 +266,17 @@ mod tests {
                          "d_ff": 4, "vocab": 4, "seq_len": 8, "seed": 0,
                          "residual_gain": 0.4},
               "param_count": 8,
-              "flops_per_forward": 128
+              "flops_per_forward": 128,
+              "batched": {"hlo": "fam/target.b4.hlo.txt", "batch": 4,
+                          "params_bin": "fam/target.params.bin"},
+              "incremental": {
+                "prefill_hlo": "fam/target.prefill.hlo.txt",
+                "decode_hlo": "fam/target.decode.b4.hlo.txt",
+                "batch": 4, "window": 16,
+                "cache": {"block_size": 16, "blocks": 2, "n_layers": 1,
+                          "n_heads": 1, "d_head": 2},
+                "params_bin": "fam/target.params.bin"
+              }
             }
           }
         }
@@ -201,6 +292,38 @@ mod tests {
         assert_eq!(role.args[0].dtype, ArgDtype::F32);
         assert_eq!(role.args[0].shape, vec![4, 2]);
         assert!(role.hlo_path.ends_with("fam/target.hlo.txt"));
+    }
+
+    #[test]
+    fn parses_batched_and_incremental() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let role = m.family("fam").unwrap().role("target").unwrap();
+        let b = role.batched.as_ref().unwrap();
+        assert_eq!(b.batch, 4);
+        assert!(b.hlo_path.ends_with("fam/target.b4.hlo.txt"));
+        let inc = role.incremental.as_ref().unwrap();
+        assert_eq!((inc.batch, inc.window), (4, 16));
+        assert!(inc.prefill_path.ends_with("fam/target.prefill.hlo.txt"));
+        assert!(inc.decode_path.ends_with("fam/target.decode.b4.hlo.txt"));
+        assert_eq!(inc.cache.block_size * inc.cache.blocks, 32);
+        assert_eq!(inc.cache.slot_elems(), 1 * 2 * 16 * 1 * 2);
+    }
+
+    #[test]
+    fn batched_entries_are_optional() {
+        // An older manifest (no --batched export) must still parse.
+        let trimmed = {
+            // Strip the two optional keys by reparsing a hand-built subset.
+            let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+            assert!(m.family("fam").unwrap().role("target").unwrap().batched.is_some());
+            SAMPLE
+                .replace("\"batched\"", "\"batched_unused\"")
+                .replace("\"incremental\"", "\"incremental_unused\"")
+        };
+        let m = Manifest::parse(&trimmed, PathBuf::from("/tmp/a")).unwrap();
+        let role = m.family("fam").unwrap().role("target").unwrap();
+        assert!(role.batched.is_none());
+        assert!(role.incremental.is_none());
     }
 
     #[test]

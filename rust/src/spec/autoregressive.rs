@@ -169,6 +169,7 @@ impl DecodeTask for ArTask<'_> {
             model_key: model_key(self.model),
             handle,
             tokens: Arc::from(&self.ctx[have..]),
+            prefix_len: have,
         })
     }
 

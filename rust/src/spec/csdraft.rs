@@ -480,6 +480,7 @@ impl DecodeTask for CsDraftTask<'_> {
             model_key: model_key(self.models[idx]),
             handle,
             tokens: Arc::from(&self.ctx[have..]),
+            prefix_len: have,
         })
     }
 

@@ -414,6 +414,7 @@ impl DecodeTask for DualisticTask<'_> {
             model_key: model_key(model),
             handle,
             tokens: Arc::from(&self.ctx[have..]),
+            prefix_len: have,
         })
     }
 

@@ -31,6 +31,12 @@ pub struct MockModel {
     /// Busy-wait per forward, to emulate a per-forward cost `T_i` in timing
     /// tests and theory validation.
     cost: Duration,
+    /// Additional busy-wait per *computed token*, emulating the device cost
+    /// model of the KV-cached runtime: a stateless `forward` pays it per
+    /// prefix token (O(prefix)), while a session `append` / coalesced
+    /// `append_batch` pays it only per suffix token (O(suffix)).  Benches
+    /// contrast the two to show per-tick cost flat in prefix length.
+    cost_per_token: Duration,
     counters: ModelCounters,
 }
 
@@ -44,6 +50,7 @@ impl MockModel {
             model_seed: fnv(name.as_bytes(), 0x9e3779b97f4a7c15),
             noise,
             cost: Duration::ZERO,
+            cost_per_token: Duration::ZERO,
             counters: ModelCounters::default(),
         }
     }
@@ -52,6 +59,26 @@ impl MockModel {
     pub fn with_cost(mut self, cost: Duration) -> Self {
         self.cost = cost;
         self
+    }
+
+    /// Emulate a per-computed-token cost on top of [`with_cost`]'s flat
+    /// launch overhead.  `forward` then costs `cost + per_token · prefix`
+    /// while session appends cost `cost + per_token · suffix` — the same
+    /// O(prefix) vs O(suffix) contrast the device KV cache buys.
+    pub fn with_token_cost(mut self, per_token: Duration) -> Self {
+        self.cost_per_token = per_token;
+        self
+    }
+
+    /// Busy-wait out the emulated cost for a pass that computed `n_tokens`
+    /// token rows, measured from `start` (row computation overlaps it).
+    fn wait_cost(&self, start: Instant, n_tokens: usize) {
+        let total = self.cost + self.cost_per_token * n_tokens as u32;
+        if !total.is_zero() {
+            while start.elapsed() < total {
+                std::hint::spin_loop();
+            }
+        }
     }
 
     /// Append the logits row for prefix-hash `h` onto `out`. The row is a
@@ -101,11 +128,8 @@ impl LanguageModel for MockModel {
             h = fnv(&t.to_le_bytes(), h);
             self.extend_row_for_hash(h, &mut data);
         }
-        if !self.cost.is_zero() {
-            while start.elapsed() < self.cost {
-                std::hint::spin_loop();
-            }
-        }
+        // Stateless scoring recomputes every prefix row: O(prefix) cost.
+        self.wait_cost(start, tokens.len());
         self.counters.record(start.elapsed());
         Ok(Logits::new(data, tokens.len(), self.vocab))
     }
@@ -143,11 +167,11 @@ impl LanguageModel for MockModel {
             return Some(Vec::new());
         }
         let start = Instant::now();
-        if !self.cost.is_zero() {
-            while start.elapsed() < self.cost {
-                std::hint::spin_loop();
-            }
-        }
+        // One launch for the whole batch, paying only for suffix rows: the
+        // coalesced KV-cached cost model (flat overhead amortized, O(suffix)
+        // compute per entry).
+        let suffix_tokens: usize = appends.iter().map(|(_, s)| s.len()).sum();
+        self.wait_cost(start, suffix_tokens);
         self.counters.record(start.elapsed());
         Some(appends.iter().map(|_| Ok(None)).collect())
     }
@@ -200,13 +224,11 @@ impl ScoringSession for MockSession<'_> {
             self.model.extend_row_for_hash(h, &mut self.rows);
             self.tokens.push(t);
         }
-        // One append emulates one forward pass: same per-call cost `T_i`
-        // and call accounting as a stateless forward.
-        if !self.model.cost.is_zero() {
-            while start.elapsed() < self.model.cost {
-                std::hint::spin_loop();
-            }
-        }
+        // One append emulates one decode-step launch: same flat per-call
+        // cost `T_i` and call accounting as a stateless forward, but the
+        // per-token component scales with the *suffix* only — the KV cache
+        // makes appends O(suffix), not O(prefix).
+        self.model.wait_cost(start, suffix.len());
         self.model.counters.record(start.elapsed());
         Ok(())
     }
@@ -413,6 +435,35 @@ mod tests {
         assert_eq!(m.calls(), 2);
         m.reset_counters();
         assert_eq!(m.calls(), 0);
+    }
+
+    #[test]
+    fn token_cost_scales_with_suffix_not_prefix() {
+        let m = MockModel::new("m", 256, 8, 0, 0.0)
+            .with_cost(Duration::from_millis(1))
+            .with_token_cost(Duration::from_micros(200));
+        let long: Vec<Token> = (0..100).map(|i| (i % 8) as Token).collect();
+        // Stateless forward pays per prefix token: >= 1ms + 100 * 200us.
+        let t0 = Instant::now();
+        m.forward(&long).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(21));
+        // A session append over the same 100-token prefix pays only for the
+        // 2-token suffix: >= 1ms + 2 * 200us, and well under the stateless
+        // bound even on noisy timers.
+        let mut sess = m.open_session().unwrap();
+        sess.absorb_batched(&long, None).unwrap(); // install prefix, no cost
+        let t1 = Instant::now();
+        sess.append(&[1, 2]).unwrap();
+        let dt = t1.elapsed();
+        assert!(dt >= Duration::from_micros(1400), "append too fast: {dt:?}");
+        // Batched path: one launch, cost covers total suffix tokens only.
+        let entries: Vec<(u64, Arc<[Token]>)> = vec![
+            (0, Arc::from(&[3][..])),
+            (0, Arc::from(&[4, 5][..])),
+        ];
+        let t2 = Instant::now();
+        m.append_batch(&entries).unwrap();
+        assert!(t2.elapsed() >= Duration::from_micros(1600)); // 1ms + 3 tokens
     }
 
     #[test]

@@ -568,6 +568,7 @@ impl DecodeTask for PolyTask<'_> {
                 model_key: model_key(self.models[0]),
                 handle,
                 tokens: Arc::from(&self.pipe.flat[have..]),
+                prefix_len: have,
             });
         }
         // Otherwise the next step's first engine call is the deepest
@@ -596,6 +597,7 @@ impl DecodeTask for PolyTask<'_> {
             model_key: model_key(self.models[n - 1]),
             handle,
             tokens: Arc::from(&self.pipe.flat[have..]),
+            prefix_len: have,
         })
     }
 

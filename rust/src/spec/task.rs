@@ -172,6 +172,11 @@ pub struct PlannedAppend {
     /// Suffix the next step would append first. Shared, not cloned: the
     /// same allocation travels through retries and the channel protocol.
     pub tokens: Arc<[Token]>,
+    /// Session length the suffix extends (tokens already scored and cached).
+    /// Pure telemetry for the scheduler's recompute-avoided accounting: a
+    /// KV-cached engine computes `tokens.len()` rows where a stateless one
+    /// recomputes `prefix_len` more.
+    pub prefix_len: usize,
 }
 
 /// Grouping key for [`PlannedAppend`]: the model's data pointer. The same

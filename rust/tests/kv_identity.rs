@@ -1,0 +1,248 @@
+//! KV-cached incremental scoring ≡ full-prefix recompute, byte for byte.
+//!
+//! The serving stack scores each session append incrementally (cached
+//! sessions + the scheduler's coalesced `append_batch` submissions — the
+//! same O(suffix) contract the device engine's cache pool implements).
+//! [`ForceStateless`] hides a model's session support, so every scoring
+//! call re-runs the full prefix: the full-recompute oracle. These tests
+//! pin that the two are **bit-identical** for every coordinator `Method`
+//! × `VerifyRule`, and that the equivalence survives exactly the paths
+//! where a stale cache would show: speculative rollback, suspend/restore
+//! from the swap tier, and mid-decode chain degradation.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use polyspec::coordinator::api::{DecodeError, Method, Request, Response};
+use polyspec::coordinator::batcher::QueueEntry;
+use polyspec::coordinator::kv::{KvConfig, KvManager};
+use polyspec::coordinator::metrics::Metrics;
+use polyspec::coordinator::router::pipeline_headroom;
+use polyspec::coordinator::scheduler::{self, BatchEvent, SchedulerOpts};
+use polyspec::spec::chaos::{ChaosModel, Fault};
+use polyspec::spec::mock::MockModel;
+use polyspec::spec::types::{ForceStateless, LanguageModel, VerifyRule};
+use polyspec::workload::tasks::TaskKind;
+
+/// The standard mock chain (target / intermediate / draft on shared
+/// weights), either with its native cached sessions (the KV-cached path)
+/// or wrapped in [`ForceStateless`] (the full-recompute oracle). Same
+/// seeds both ways: identical weights, different execution strategy.
+fn chain_with(stateless: bool, seed: u64) -> Vec<Arc<dyn LanguageModel>> {
+    let mk = |name: &str, noise: f32| -> Arc<dyn LanguageModel> {
+        let m = MockModel::new(name, 512, 24, seed, noise);
+        if stateless {
+            Arc::new(ForceStateless(m))
+        } else {
+            Arc::new(m)
+        }
+    };
+    vec![mk("target", 0.0), mk("mid", 0.35), mk("draft", 0.8)]
+}
+
+/// Every coordinator `Method` × `VerifyRule`. The noisy drafters guarantee
+/// rejections under every rule, so each request's decode rolls sessions
+/// back many times — rollback correctness is load-bearing here, not
+/// incidental.
+fn mixed_workload() -> Vec<Request> {
+    let methods = [
+        Method::Polybasic { draft_k: 4, mu: 4 },
+        Method::Dualistic { draft_k: 4 },
+        Method::Autoregressive,
+    ];
+    let rules = [VerifyRule::Greedy, VerifyRule::Speculative, VerifyRule::Typical { eps: 0.25 }];
+    let tasks = [TaskKind::Qa, TaskKind::Summarization, TaskKind::Math];
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for &method in &methods {
+        for &rule in &rules {
+            id += 1;
+            let mut r = Request::new(id, vec![1, 2, 3], 20 + (id as usize % 3) * 8);
+            r.method = method;
+            r.rule = rule;
+            r.task = Some(tasks[id as usize % 3]);
+            r.sampling.seed = 500 + id;
+            r.sampling.temperature = if rule == VerifyRule::Greedy { 0.0 } else { 1.0 };
+            reqs.push(r);
+        }
+    }
+    reqs
+}
+
+fn serve(
+    chain: &[Arc<dyn LanguageModel>],
+    reqs: &[Request],
+    kv: &Arc<Mutex<KvManager>>,
+    metrics: &Arc<Metrics>,
+) -> std::collections::BTreeMap<u64, Response> {
+    let now = Instant::now();
+    let batch: Vec<QueueEntry> =
+        reqs.iter().map(|r| QueueEntry::fresh(r.clone(), now)).collect();
+    let mut out: std::collections::BTreeMap<u64, Result<Response, DecodeError>> =
+        Default::default();
+    scheduler::run_batch_opts(
+        chain,
+        batch,
+        None,
+        reqs.len(),
+        kv,
+        metrics,
+        SchedulerOpts { coalesce: true },
+        |ev| {
+            if let BatchEvent::Done { id, response } = ev {
+                out.insert(id, response);
+            }
+        },
+    );
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    out.into_iter().map(|(id, r)| (id, r.expect("request failed"))).collect()
+}
+
+fn big_pool() -> Arc<Mutex<KvManager>> {
+    Arc::new(Mutex::new(KvManager::new(KvConfig {
+        block_size: 8,
+        total_blocks: 512,
+        bytes_per_token: 4,
+        swap_blocks: 0,
+    })))
+}
+
+/// THE property: a concurrent Method × VerifyRule workload served on the
+/// KV-cached coalescing path is byte-identical to the same workload on
+/// full-prefix recompute — and both match the uncontended one-shot decode.
+/// The cached run must actually exercise the cache (coalesced engine
+/// calls, suffix-only compute, nonzero recompute-avoided ratio); the
+/// stateless oracle must never touch it.
+#[test]
+fn prop_cached_serving_identical_to_full_recompute() {
+    let reqs = mixed_workload();
+    let cached_chain = chain_with(false, 41);
+    let stateless_chain = chain_with(true, 41);
+
+    // Uncontended oracle on the stateless chain: pure full-prefix scoring.
+    let expected: Vec<Vec<i32>> =
+        reqs.iter().map(|r| scheduler::decode(&stateless_chain, r).unwrap().tokens).collect();
+
+    let kv = big_pool();
+    for r in &reqs {
+        kv.lock().unwrap().admit(r.id, 60).unwrap();
+    }
+    let m_cached = Arc::new(Metrics::default());
+    let cached = serve(&cached_chain, &reqs, &kv, &m_cached);
+
+    let kv = big_pool();
+    for r in &reqs {
+        kv.lock().unwrap().admit(r.id, 60).unwrap();
+    }
+    let m_stateless = Arc::new(Metrics::default());
+    let stateless = serve(&stateless_chain, &reqs, &kv, &m_stateless);
+
+    for (r, want) in reqs.iter().zip(&expected) {
+        assert_eq!(
+            &cached[&r.id].tokens, want,
+            "{:?} {:?} request {}: cached-incremental diverged from full recompute",
+            r.method, r.rule, r.id
+        );
+        assert_eq!(
+            &stateless[&r.id].tokens, want,
+            "request {}: stateless serving diverged from one-shot decode",
+            r.id
+        );
+    }
+
+    // The cached run must have gone through the coalesced O(suffix) path.
+    assert!(m_cached.batched_calls.load(Ordering::Relaxed) > 0, "coalescing must engage");
+    let computed = m_cached.suffix_tokens_computed.load(Ordering::Relaxed);
+    let avoided = m_cached.prefix_tokens_avoided.load(Ordering::Relaxed);
+    assert!(computed > 0, "cached run must compute suffix rows");
+    assert!(avoided > 0, "cached run must avoid prefix recompute");
+    assert!(m_cached.recompute_avoided_ratio() > 0.0);
+    // ForceStateless has no batch handle: the oracle never coalesces and
+    // never records suffix work.
+    assert_eq!(m_stateless.engine_calls.load(Ordering::Relaxed), 0);
+    assert_eq!(m_stateless.suffix_tokens_computed.load(Ordering::Relaxed), 0);
+}
+
+/// Suspend/restore does not leak cache state: a pool small enough to force
+/// preemptions, backed by a swap tier large enough that every victim
+/// swaps out and restores its KV, still decodes byte-identically to the
+/// full-recompute oracle — restored sessions pick up their caches exactly
+/// where suspension left them.
+#[test]
+fn prop_cached_swap_restore_identical_to_full_recompute() {
+    let reqs = mixed_workload();
+    let cached_chain = chain_with(false, 33);
+    let stateless_chain = chain_with(true, 33);
+    let expected: Vec<Vec<i32>> =
+        reqs.iter().map(|r| scheduler::decode(&stateless_chain, r).unwrap().tokens).collect();
+
+    // Tiny pool (admissions fit, growth demand saturates) + a swap tier
+    // that holds every victim in full.
+    let kv = Arc::new(Mutex::new(KvManager::new(KvConfig {
+        block_size: 4,
+        total_blocks: 26,
+        bytes_per_token: 4,
+        swap_blocks: 128,
+    })));
+    let metrics = Arc::new(Metrics::default());
+    kv.lock().unwrap().attach_metrics(metrics.clone());
+    for r in &reqs {
+        let need = r.prompt.len() + pipeline_headroom(&r.method, cached_chain.len());
+        kv.lock().unwrap().admit_fresh(r.id, need).unwrap();
+    }
+    let out = serve(&cached_chain, &reqs, &kv, &metrics);
+
+    for (r, want) in reqs.iter().zip(&expected) {
+        assert_eq!(
+            &out[&r.id].tokens, want,
+            "{:?} {:?} request {}: suspend/restore-from-swap broke cache identity",
+            r.method, r.rule, r.id
+        );
+    }
+    let ord = Ordering::Relaxed;
+    assert!(metrics.preemptions.load(ord) >= 1, "scenario must saturate the pool");
+    assert!(metrics.swapped_blocks.load(ord) > 0, "victims must take the swap path");
+    assert_eq!(kv.lock().unwrap().active_seqs(), 0);
+}
+
+/// Mid-decode degradation does not leak cache state: a drafter fault drops
+/// it from the chain partway through a request, and under greedy (only the
+/// target's argmax commits) the output stays byte-identical to the
+/// fault-free full-recompute oracle — the target's session cache carries
+/// across the chain reshape untouched.
+#[test]
+fn prop_cached_degradation_identical_to_full_recompute() {
+    let mk_req = || {
+        let mut r = Request::new(1, vec![2, 7, 1], 24);
+        r.method = Method::Dualistic { draft_k: 2 };
+        r.rule = VerifyRule::Greedy;
+        r.sampling.temperature = 0.0;
+        r
+    };
+    // Oracle: fault-free stateless pair (same weights, full recompute).
+    let stateless_chain: Vec<Arc<dyn LanguageModel>> = vec![
+        Arc::new(ForceStateless(MockModel::new("t", 512, 24, 13, 0.0))),
+        Arc::new(ForceStateless(MockModel::new("d", 512, 24, 13, 0.4))),
+    ];
+    let expected = scheduler::decode(&stateless_chain, &mk_req()).unwrap().tokens;
+
+    // Cached run with the drafter faulting on its third call: the task
+    // degrades mid-decode and finishes target-only, on live caches.
+    let chain: Vec<Arc<dyn LanguageModel>> = vec![
+        Arc::new(MockModel::new("t", 512, 24, 13, 0.0)),
+        Arc::new(
+            ChaosModel::new(MockModel::new("d", 512, 24, 13, 0.4)).fault_at(2, Fault::Fail),
+        ),
+    ];
+    let kv = big_pool();
+    kv.lock().unwrap().admit(1, 60).unwrap();
+    let metrics = Arc::new(Metrics::default());
+    let out = serve(&chain, &[mk_req()], &kv, &metrics);
+
+    assert_eq!(
+        out[&1].tokens, expected,
+        "mid-decode degradation must be invisible in greedy output"
+    );
+    assert!(out[&1].degraded >= 1, "the drafter fault must actually degrade the chain");
+}
