@@ -17,7 +17,8 @@
 //!   cargo bench --bench batched_step
 
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use polyspec::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use polyspec::coordinator::api::{Method, Request};
@@ -63,7 +64,7 @@ fn run(live: usize, coalesce: bool) -> Run {
             r.rule = VerifyRule::Greedy;
             r.sampling.temperature = 0.0;
             r.sampling.seed = 100 + id;
-            kv.lock().unwrap().admit(id, 80).unwrap();
+            kv.lock().admit(id, 80).unwrap();
             QueueEntry::fresh(r, now)
         })
         .collect();
@@ -86,7 +87,7 @@ fn run(live: usize, coalesce: bool) -> Run {
     );
     let wall = start.elapsed().as_secs_f64();
     assert_eq!(outputs.len(), live, "every request must complete");
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
     outputs.sort_by_key(|(id, _)| *id);
     Run {
         wall,

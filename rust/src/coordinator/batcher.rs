@@ -31,8 +31,10 @@
 //!   parked and `try_pop` leaves that many requests behind for them.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::sync::time::Instant;
+use crate::sync::{Condvar, Mutex};
 
 use super::api::{Request, ResumeCarry};
 
@@ -131,7 +133,7 @@ impl DynamicBatcher {
     }
 
     pub fn push(&self, req: Request) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let q = Queued { req, enqueued: Instant::now(), resume: None };
         match classify(&q.req) {
             Priority::Interactive => st.interactive.push_back(q),
@@ -146,7 +148,7 @@ impl DynamicBatcher {
     /// traffic. Accepted even after [`close`](Self::close) — a preempted
     /// request is in-flight work that must drain, not a new arrival.
     pub fn push_front_resumed(&self, req: Request, carry: ResumeCarry) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let q = Queued { req, enqueued: Instant::now(), resume: Some(carry) };
         match classify(&q.req) {
             Priority::Interactive => st.interactive.push_front(q),
@@ -157,11 +159,11 @@ impl DynamicBatcher {
 
     /// Workers currently parked in [`pop_batch`](Self::pop_batch).
     pub fn parked_workers(&self) -> usize {
-        self.state.lock().unwrap().parked
+        self.state.lock().parked
     }
 
     pub fn len(&self) -> usize {
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock();
         st.interactive.len() + st.batch.len()
     }
 
@@ -171,7 +173,7 @@ impl DynamicBatcher {
 
     /// Stop accepting work and wake all waiting workers.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.state.lock().closed = true;
         self.cv.notify_all();
     }
 
@@ -179,7 +181,7 @@ impl DynamicBatcher {
     /// drained. Interactive requests are drained first, subject to the
     /// starvation guard.
     pub fn pop_batch(&self) -> Option<Batch> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         loop {
             let total = st.interactive.len() + st.batch.len();
             if total > 0 {
@@ -193,12 +195,13 @@ impl DynamicBatcher {
                         .chain(st.batch.front().iter())
                         .map(|q| q.enqueued)
                         .min()
+                        // xtask:allow(panic): total > 0 guarantees a queue front.
                         .unwrap();
                     let waited = oldest.elapsed();
                     if waited < self.policy.max_wait {
                         st.parked += 1;
                         let (next, _timeout) =
-                            self.cv.wait_timeout(st, self.policy.max_wait - waited).unwrap();
+                            self.cv.wait_timeout(st, self.policy.max_wait - waited);
                         st = next;
                         st.parked -= 1;
                         continue;
@@ -210,7 +213,7 @@ impl DynamicBatcher {
                 return None;
             }
             st.parked += 1;
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st);
             st.parked -= 1;
         }
     }
@@ -222,7 +225,7 @@ impl DynamicBatcher {
     /// busy worker topping up between steps cannot drain arrivals out from
     /// under idle workers (multi-worker pull fairness).
     pub fn try_pop(&self, n: usize) -> Batch {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let queued = st.interactive.len() + st.batch.len();
         let reserve = st.parked.min(queued);
         self.drain_locked(&mut st, n.min(queued - reserve))
@@ -460,7 +463,7 @@ mod tests {
         // A lone arrival is reserved for the parked worker: the busy
         // worker's between-step top-up must come back empty.
         {
-            let mut st = b.state.lock().unwrap();
+            let mut st = b.state.lock();
             st.interactive.push_back(Queued {
                 req: req(1, None),
                 enqueued: Instant::now(),

@@ -43,7 +43,7 @@
 //! ([`fits`](KvManager::fits) is false).
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use crate::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -162,6 +162,7 @@ impl KvManager {
                 }
                 bail!("KV pool exhausted mid-allocation (availability changed)");
             }
+            // xtask:allow(panic): the branch above freed or found a block.
             out.push(self.pool.alloc().expect("block free after eviction"));
         }
         Ok(out)
@@ -383,8 +384,10 @@ impl KvManager {
         }
         let mut fresh = self.take_blocks(extra + usize::from(split))?;
         if split {
+            // xtask:allow(panic): take_blocks returned extra + 1 blocks.
             let copy = fresh.pop().expect("reserved the split block");
             let old = {
+                // xtask:allow(panic): presence checked at the top of grow.
                 let alloc = self.seqs.get_mut(&seq).expect("checked above");
                 let idx = alloc.shared_prefix / self.cfg.block_size;
                 let old = std::mem::replace(&mut alloc.table[idx], copy);
@@ -394,6 +397,7 @@ impl KvManager {
             self.pool.decref(old);
             self.note_cow_split();
         }
+        // xtask:allow(panic): presence checked at the top of grow.
         let alloc = self.seqs.get_mut(&seq).expect("checked above");
         alloc.table.append(&mut fresh);
         alloc.tokens = tokens;

@@ -2,9 +2,13 @@
 //! JSON snapshots (via the in-tree JSON writer).
 
 use std::collections::BTreeMap;
+// xtask:allow(facade): metrics are monitoring-only and never part of a
+// modeled protocol; the histograms rely on `fetch_max`, which the loom
+// atomics do not guarantee, so the counters stay on std atomics.
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use crate::sync::{Arc, Mutex};
 
 use crate::runtime::json::Json;
 use crate::spec::types::HealthTracker;
@@ -226,7 +230,7 @@ impl Metrics {
             .fetch_add((mean_accept * 1000.0) as u64, Ordering::Relaxed);
         self.accept_count.fetch_add(1, Ordering::Relaxed);
         if let Some(t) = task {
-            *self.per_task.lock().unwrap().entry(t.to_string()).or_insert(0) += 1;
+            *self.per_task.lock().entry(t.to_string()).or_insert(0) += 1;
         }
     }
 
@@ -329,7 +333,7 @@ impl Metrics {
     /// the same name replaces the handle (workers share per-model trackers
     /// only if they share the model instance).
     pub fn register_model_health(&self, name: &str, tracker: Arc<HealthTracker>) {
-        self.model_health.lock().unwrap().insert(name.to_string(), tracker);
+        self.model_health.lock().insert(name.to_string(), tracker);
     }
 
     /// A decode task went live on a worker. Returns the new concurrency.
@@ -439,12 +443,12 @@ impl Metrics {
             lat.insert("max_ms".into(), Json::Num(h.max().as_secs_f64() * 1e3));
             obj.insert(format!("{name}_latency"), Json::Obj(lat));
         }
-        let per_task = self.per_task.lock().unwrap();
+        let per_task = self.per_task.lock();
         obj.insert(
             "per_task".into(),
             Json::Obj(per_task.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect()),
         );
-        let model_health = self.model_health.lock().unwrap();
+        let model_health = self.model_health.lock();
         obj.insert(
             "model_health".into(),
             Json::Obj(

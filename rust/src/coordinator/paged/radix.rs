@@ -86,10 +86,13 @@ impl RadixCache {
     }
 
     fn node(&self, idx: usize) -> &RadixNode {
+        // xtask:allow(panic): indices come from the tree's own links; slots
+        // are only vacated by remove_subtree, which unlinks them first.
         self.nodes[idx].as_ref().expect("live radix node")
     }
 
     fn node_mut(&mut self, idx: usize) -> &mut RadixNode {
+        // xtask:allow(panic): same arena invariant as `node` above.
         self.nodes[idx].as_mut().expect("live radix node")
     }
 
@@ -241,6 +244,7 @@ impl RadixCache {
         let mut freed = 0usize;
         let mut stack = vec![idx];
         while let Some(ix) = stack.pop() {
+            // xtask:allow(panic): subtree indices are live until taken here.
             let node = self.nodes[ix].take().expect("live radix node");
             self.free_slots.push(ix);
             self.len -= 1;

@@ -14,7 +14,7 @@
 //! `coordinator::kv` and `coordinator::scheduler`.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use crate::sync::{Arc, Mutex};
 
 use super::api::{Method, Request};
 use super::batcher::DynamicBatcher;
@@ -109,7 +109,10 @@ impl Router {
             // onto shared blocks instead of fresh ones, so concurrent
             // requests over a common prompt (or a conversation follow-up
             // over its own transcript) cost only their unshared suffix.
-            let mut kv = lane.kv.lock().unwrap();
+            let mut kv = lane.kv.lock();
+            // xtask:allow(kv-pairing): admission transfers ownership of
+            // the allocation to the scheduler, which releases/suspends it
+            // on every exit path of run_batch_opts.
             kv.admit_fresh_prefixed(req.id, &req.prompt, req.prompt.len() + headroom)
                 .map_err(|_| RejectReason::KvExhausted)?;
         }
@@ -154,7 +157,7 @@ mod tests {
         let req = Request::new(1, vec![1; 30], 40);
         r.route(None, req).unwrap();
         assert_eq!(r.lane("fam").unwrap().batcher.len(), 1);
-        assert_eq!(r.lane("fam").unwrap().kv.lock().unwrap().active_seqs(), 1);
+        assert_eq!(r.lane("fam").unwrap().kv.lock().active_seqs(), 1);
     }
 
     #[test]
@@ -168,7 +171,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // Nothing admitted on rejection.
-        assert_eq!(r.lane("fam").unwrap().kv.lock().unwrap().active_seqs(), 0);
+        assert_eq!(r.lane("fam").unwrap().kv.lock().active_seqs(), 0);
     }
 
     #[test]

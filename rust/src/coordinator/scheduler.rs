@@ -74,8 +74,10 @@
 //! waits for a longer neighbour to finish.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::sync::time::Instant;
+use crate::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -114,6 +116,7 @@ fn dispatch_task<'m>(
         }
         Method::Dualistic { draft_k } => {
             let target = chain[0].as_ref();
+            // xtask:allow(panic): dispatch_task validated the chain is non-empty.
             let draft = chain.last().expect("chain non-empty").as_ref();
             let cfg = dualistic::DualisticConfig {
                 draft_k,
@@ -273,7 +276,7 @@ fn open_entry<'m>(
         let spent = opened.duration_since(enqueued)
             + resume.as_ref().map_or(Duration::ZERO, |c| c.queue_time + c.service_time);
         if spent > deadline {
-            let mut kvm = kv.lock().unwrap();
+            let mut kvm = kv.lock();
             match &resume {
                 None => {
                     // The router admitted it, so a KV reservation exists.
@@ -329,7 +332,7 @@ fn open_entry<'m>(
             Err(err) => {
                 // The router admitted it, so the KV reservation exists
                 // and must be returned even though no task ever ran.
-                let released = kv.lock().unwrap().release(req.id);
+                let released = kv.lock().release(req.id);
                 debug_assert!(
                     released.is_ok(),
                     "KV release failed for request {}: every admitted request \
@@ -361,7 +364,7 @@ fn open_entry<'m>(
         };
     let wasted;
     {
-        let mut kvm = kv.lock().unwrap();
+        let mut kvm = kv.lock();
         if !kvm.fits(need) {
             kvm.settle_resume_debt(need);
             if let Some(h) = &carry.state.swap {
@@ -418,7 +421,7 @@ fn open_entry<'m>(
             })
         }
         Err(err) => {
-            let released = kv.lock().unwrap().release(req.id);
+            let released = kv.lock().release(req.id);
             debug_assert!(
                 released.is_ok(),
                 "KV release failed for resumed request {}: re-admission just \
@@ -469,7 +472,7 @@ fn preempt<'m>(
         };
         let content = req.prompt.len() + carry.state.committed.len() + drafted;
         let resume_need = req.prompt.len() + carry.state.committed.len() + headroom;
-        let suspended = kv.lock().unwrap().suspend(req.id, content, resume_need);
+        let suspended = kv.lock().suspend(req.id, content, resume_need);
         match suspended {
             Ok(handle) => carry.state.swap = handle,
             Err(e) => debug_assert!(
@@ -513,7 +516,7 @@ fn grow_with_preemption<'m>(
     loop {
         let id = live[*i].req.id;
         let (grown, fits, others) = {
-            let mut kvm = kv.lock().unwrap();
+            let mut kvm = kv.lock();
             (kvm.grow(id, target), kvm.fits(target), kvm.active_seqs() > 1)
         };
         if grown.is_ok() {
@@ -523,7 +526,7 @@ fn grow_with_preemption<'m>(
             return GrowOutcome::Failed;
         }
         let victim = {
-            let kvm = kv.lock().unwrap();
+            let kvm = kv.lock();
             select_victim(live.iter().enumerate().filter_map(|(v, l)| {
                 if v == *i || l.task.finished() {
                     return None;
@@ -714,7 +717,7 @@ pub fn run_batch_opts(
             }
             // Nothing to pull: space is held by other workers' tasks and
             // will free. Back off briefly and retry.
-            std::thread::sleep(Duration::from_micros(200));
+            crate::sync::thread::sleep(Duration::from_micros(200));
             continue;
         }
 
@@ -723,7 +726,7 @@ pub fn run_batch_opts(
             submit_batched(chain, &mut live, metrics);
         }
         // Publish this sweep's cache residency (gauge: overwrite, not add).
-        metrics.set_cache_resident(kv.lock().unwrap().resident_tokens());
+        metrics.set_cache_resident(kv.lock().resident_tokens());
 
         // ---- one sweep: one step per live task, round-robin --------------
         let mut i = 0;
@@ -737,7 +740,7 @@ pub fn run_batch_opts(
                 let Live { req, task, .. } = live.remove(i);
                 drop(task);
                 metrics.task_ended();
-                let released = kv.lock().unwrap().release(req.id);
+                let released = kv.lock().release(req.id);
                 debug_assert!(
                     released.is_ok(),
                     "KV release failed for deadline-cancelled request {}: every \
@@ -789,7 +792,6 @@ pub fn run_batch_opts(
                                 let target = l.req.prompt.len() + l.streamed + l.headroom;
                                 if kv
                                     .lock()
-                                    .unwrap()
                                     .seq_tokens(l.req.id)
                                     .is_some_and(|cur| target > cur)
                                 {
@@ -826,7 +828,7 @@ pub fn run_batch_opts(
             let id = req.id;
             let resp: Result<Response, DecodeError> = match step_err {
                 Some(e) => {
-                    let released = kv.lock().unwrap().release(req.id);
+                    let released = kv.lock().release(req.id);
                     debug_assert!(
                         released.is_ok(),
                         "KV release failed for request {}: every admitted request \
@@ -846,7 +848,7 @@ pub fn run_batch_opts(
                     // needs them.
                     let mut content = req.prompt.clone();
                     content.extend_from_slice(&gen.tokens);
-                    let released = kv.lock().unwrap().release_cached(req.id, &content);
+                    let released = kv.lock().release_cached(req.id, &content);
                     debug_assert!(
                         released.is_ok(),
                         "KV release failed for request {}: every admitted request \
@@ -955,7 +957,7 @@ mod tests {
         .enumerate()
         .map(|(i, &m)| {
             let req = mk_req(i as u64, 12, m);
-            kv.lock().unwrap().admit(req.id, 40).unwrap();
+            kv.lock().admit(req.id, 40).unwrap();
             QueueEntry::fresh(req, now)
         })
         .collect();
@@ -971,7 +973,7 @@ mod tests {
             assert_eq!(resp.tokens.len(), 12);
             assert!(resp.ttft.is_some());
         }
-        assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+        assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
         assert_eq!(metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed), 3);
         assert_eq!(metrics.inflight(), 0);
         assert!(metrics.inflight_peak() >= 2, "steps should interleave");
@@ -984,7 +986,7 @@ mod tests {
         let kv = Arc::new(Mutex::new(KvManager::new(KvConfig::default())));
         let metrics = Arc::new(Metrics::default());
         let req = mk_req(1, 16, Method::Polybasic { draft_k: 3, mu: 4 });
-        kv.lock().unwrap().admit(1, 60).unwrap();
+        kv.lock().admit(1, 60).unwrap();
         let gen = decode(&chain, &req).unwrap();
         let batch = vec![QueueEntry::fresh(req, Instant::now())];
         let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
@@ -1010,7 +1012,7 @@ mod tests {
         let metrics = Arc::new(Metrics::default());
         // max_new far beyond the 64-token context: task open must fail.
         let req = mk_req(1, 600, Method::Polybasic { draft_k: 3, mu: 4 });
-        kv.lock().unwrap().admit(1, 30).unwrap();
+        kv.lock().admit(1, 30).unwrap();
         let batch = vec![QueueEntry::fresh(req, Instant::now())];
         let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
         run_batch(&chain, batch, None, 2, &kv, &metrics, |ev| {
@@ -1020,7 +1022,7 @@ mod tests {
         });
         assert_eq!(out.len(), 1);
         assert!(out[0].is_err());
-        assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked on open failure");
+        assert_eq!(kv.lock().active_seqs(), 0, "KV leaked on open failure");
         assert_eq!(metrics.requests_failed.load(std::sync::atomic::Ordering::Relaxed), 1);
     }
 
@@ -1033,7 +1035,7 @@ mod tests {
         let kv = Arc::new(Mutex::new(KvManager::new(KvConfig::default())));
         let metrics = Arc::new(Metrics::default());
         let req = mk_req(1, 0, Method::Autoregressive);
-        kv.lock().unwrap().admit(1, 10).unwrap();
+        kv.lock().admit(1, 10).unwrap();
         let batch = vec![QueueEntry::fresh(req, Instant::now())];
         let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
         run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| {
@@ -1045,7 +1047,7 @@ mod tests {
         assert!(resp.tokens.is_empty());
         assert_eq!(resp.ttft, None, "no first token -> no TTFT");
         assert_eq!(metrics.ttft_latency.count(), 0, "histogram must not see a fake TTFT");
-        assert_eq!(kv.lock().unwrap().active_seqs(), 0);
+        assert_eq!(kv.lock().active_seqs(), 0);
     }
 
     #[test]
@@ -1065,7 +1067,7 @@ mod tests {
         let batch: Vec<_> = (0..B)
             .map(|id| {
                 let req = mk_req(id, T, Method::Autoregressive);
-                kv.lock().unwrap().admit(req.id, 40).unwrap();
+                kv.lock().admit(req.id, 40).unwrap();
                 QueueEntry::fresh(req, now)
             })
             .collect();
@@ -1087,7 +1089,7 @@ mod tests {
         assert_eq!(metrics.engine_calls.load(Ordering::Relaxed), T as u64);
         assert_eq!(metrics.batched_calls.load(Ordering::Relaxed), T as u64);
         assert_eq!(metrics.batch_occupancy.max(), B);
-        assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+        assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
     }
 
     #[test]
@@ -1110,7 +1112,7 @@ mod tests {
                 .enumerate()
                 .map(|(i, &m)| {
                     let req = mk_req(i as u64, 12, m);
-                    kv.lock().unwrap().admit(req.id, 60).unwrap();
+                    kv.lock().admit(req.id, 60).unwrap();
                     QueueEntry::fresh(req, now)
                 })
                 .collect();

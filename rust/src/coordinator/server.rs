@@ -17,9 +17,10 @@
 //! errors, retries, and breaker states. No Python anywhere near this path.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{mpsc, thread, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -82,7 +83,7 @@ pub struct Server {
     metrics: Arc<Metrics>,
     kv: Arc<Mutex<KvManager>>,
     replies: SinkMap,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
     next_id: AtomicU64,
     seq_len: usize,
 }
@@ -112,7 +113,7 @@ impl Server {
         })));
         // Mirror the paged-KV meters (prefix hits, CoW splits, swap
         // traffic) into the server-wide snapshot.
-        kv.lock().unwrap().attach_metrics(metrics.clone());
+        kv.lock().attach_metrics(metrics.clone());
 
         let mut router = Router::new(cfg.family.clone());
         router.add_lane(
@@ -137,7 +138,7 @@ impl Server {
             let family = cfg.family.clone();
             let roles = roles.clone();
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-            let handle = std::thread::Builder::new()
+            let handle = thread::Builder::new()
                 .name(format!("worker-{w}"))
                 .spawn(move || {
                     let role_refs: Vec<&str> = roles.iter().map(|s| s.as_str()).collect();
@@ -214,11 +215,11 @@ impl Server {
 
     fn route(&self, req: Request, sink: ReplySink) -> Result<(), RejectReason> {
         let id = req.id;
-        self.replies.lock().unwrap().insert(id, sink);
+        self.replies.lock().insert(id, sink);
         match self.router.route(None, req) {
             Ok(()) => Ok(()),
             Err(e) => {
-                self.replies.lock().unwrap().remove(&id);
+                self.replies.lock().remove(&id);
                 self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                 Err(e)
             }
@@ -265,7 +266,7 @@ impl Server {
     }
 
     pub fn kv_utilization(&self) -> f64 {
-        self.kv.lock().unwrap().utilization()
+        self.kv.lock().utilization()
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -287,12 +288,12 @@ impl Server {
 
     /// Wait until the queue is empty and all in-flight work finished (poll).
     pub fn quiesce(&self, timeout: Duration) -> bool {
-        let start = std::time::Instant::now();
+        let start = crate::sync::time::Instant::now();
         while start.elapsed() < timeout {
-            if self.batcher.is_empty() && self.replies.lock().unwrap().is_empty() {
+            if self.batcher.is_empty() && self.replies.lock().is_empty() {
                 return true;
             }
-            std::thread::sleep(Duration::from_millis(10));
+            thread::sleep(Duration::from_millis(10));
         }
         false
     }
@@ -306,13 +307,13 @@ impl Server {
 fn deliver(replies: &SinkMap, event: BatchEvent<'_>) {
     match event {
         BatchEvent::Delta { id, tokens } => {
-            let map = replies.lock().unwrap();
+            let map = replies.lock();
             if let Some(ReplySink::Stream(tx)) = map.get(&id) {
                 let _ = tx.send(StreamItem::Delta(tokens.to_vec()));
             }
         }
         BatchEvent::Done { id, response } => {
-            let sink = replies.lock().unwrap().remove(&id);
+            let sink = replies.lock().remove(&id);
             match (sink, response) {
                 (Some(ReplySink::Final(tx)), outcome) => {
                     let _ = tx.send(outcome);
@@ -362,21 +363,21 @@ mod tests {
     fn deliver_surfaces_errors_to_final_sink() {
         let replies: SinkMap = Arc::new(Mutex::new(HashMap::new()));
         let (tx, rx) = mpsc::channel();
-        replies.lock().unwrap().insert(7, ReplySink::Final(tx));
+        replies.lock().insert(7, ReplySink::Final(tx));
         deliver(
             &replies,
             BatchEvent::Done { id: 7, response: Err(DecodeError::Internal("boom".into())) },
         );
         let got = rx.recv().expect("failure must be delivered, not dropped");
         assert_eq!(got.unwrap_err(), DecodeError::Internal("boom".into()));
-        assert!(replies.lock().unwrap().is_empty(), "sink must be removed");
+        assert!(replies.lock().is_empty(), "sink must be removed");
     }
 
     #[test]
     fn deliver_surfaces_errors_to_stream_sink() {
         let replies: SinkMap = Arc::new(Mutex::new(HashMap::new()));
         let (tx, rx) = mpsc::channel();
-        replies.lock().unwrap().insert(8, ReplySink::Stream(tx));
+        replies.lock().insert(8, ReplySink::Stream(tx));
         deliver(&replies, BatchEvent::Delta { id: 8, tokens: &[4, 5] });
         deliver(&replies, BatchEvent::Done { id: 8, response: Err(DecodeError::EngineLost) });
         assert!(matches!(rx.recv().unwrap(), StreamItem::Delta(t) if t == vec![4, 5]));
@@ -391,8 +392,8 @@ mod tests {
         let replies: SinkMap = Arc::new(Mutex::new(HashMap::new()));
         let (ftx, frx) = mpsc::channel();
         let (stx, srx) = mpsc::channel();
-        replies.lock().unwrap().insert(1, ReplySink::Final(ftx));
-        replies.lock().unwrap().insert(2, ReplySink::Stream(stx));
+        replies.lock().insert(1, ReplySink::Final(ftx));
+        replies.lock().insert(2, ReplySink::Stream(stx));
         deliver(&replies, BatchEvent::Done { id: 1, response: Ok(mk_response(1)) });
         deliver(&replies, BatchEvent::Done { id: 2, response: Ok(mk_response(2)) });
         assert_eq!(frx.recv().unwrap().unwrap().id, 1);

@@ -78,6 +78,7 @@ pub fn run_cell(
                 autoregressive::generate(chain[0].as_ref(), &q.prompt, q.max_new, &sampling)?
             }
             BenchMethod::Eagle { draft_k } => {
+                // xtask:allow(panic): bench chains are fixed, non-empty fixtures.
                 let draft = chain.last().unwrap();
                 dualistic::generate(
                     chain[0].as_ref(),

@@ -5,9 +5,16 @@
 //! ([`coordinator`]) driving AOT-compiled JAX/Pallas models ([`runtime`])
 //! with the paper's multi-model speculative decoding algorithms and theory
 //! ([`spec`]), evaluated on a SpecBench-style workload suite ([`workload`]).
+//!
+//! The crate is `forbid(unsafe_code)`: the accounting substrate the
+//! paper's cost model runs on (`coordinator`) must stay trivially free of
+//! memory-safety caveats, and the pjrt path goes through safe wrappers.
+
+#![forbid(unsafe_code)]
 
 pub mod coordinator;
 pub mod harness;
 pub mod runtime;
 pub mod spec;
+pub mod sync;
 pub mod workload;

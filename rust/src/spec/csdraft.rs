@@ -131,6 +131,7 @@ impl<'m> CsDraftTask<'m> {
         anyhow::ensure!(
             want.first() == Some(&0)
                 && want.windows(2).all(|w| w[0] < w[1])
+                // xtask:allow(panic): first() == Some(&0) proves non-empty.
                 && *want.last().unwrap() < models.len(),
             "live-model set must be ascending, in range, and contain the target"
         );
@@ -166,6 +167,7 @@ impl<'m> CsDraftTask<'m> {
             }
         }
         cfg.lens = want[1..].iter().map(|&i| dispatch_lens[i - 1]).collect();
+        // xtask:allow(panic): `want` was just validated non-empty.
         let seq_cap = want.iter().map(|&i| models[i].seq_len()).min().unwrap();
         anyhow::ensure!(
             prompt.len() + cfg.max_new + cfg.block_len() + 1 <= seq_cap,

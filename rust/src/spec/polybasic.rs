@@ -210,6 +210,7 @@ impl<'m> PolyTask<'m> {
             "live chain must include the target"
         );
         anyhow::ensure!(
+            // xtask:allow(panic): the caller guard above proves `want` non-empty.
             want.windows(2).all(|w| w[0] < w[1]) && *want.last().unwrap() < dispatch_n,
             "live chain indices must be ascending dispatch indices"
         );
@@ -259,6 +260,7 @@ impl<'m> PolyTask<'m> {
 
         let live_refs: Vec<&'m dyn LanguageModel> =
             want.iter().map(|&i| models[i].as_ref()).collect();
+        // xtask:allow(panic): the live chain always contains the target.
         let seq_cap = live_refs.iter().map(|m| m.seq_len()).min().unwrap();
         anyhow::ensure!(
             prompt.len() + cfg.max_new + cfg.headroom() <= seq_cap,

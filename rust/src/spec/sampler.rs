@@ -61,6 +61,7 @@ pub fn filter_top_kp_scratch(
     let idx = &mut scratch.idx;
     idx.clear();
     idx.extend(0..n);
+    // xtask:allow(panic): probs come out of softmax_into and are never NaN.
     idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
 
     let keep = &mut scratch.keep;

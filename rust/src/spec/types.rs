@@ -33,9 +33,11 @@
 //! `runtime::host` speaks a session protocol to the engine thread with a
 //! host-side logits cache.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::time::Instant;
+use crate::sync::{Arc, Mutex};
 
 pub type Token = i32;
 
@@ -145,20 +147,28 @@ impl HealthTracker {
     /// consecutive-failure streak.
     pub fn record_success(&self) {
         self.consecutive.store(0, Ordering::Relaxed);
-        *self.open_since.lock().unwrap() = None;
+        *self.open_since.lock() = None;
     }
 
     /// Record a failed call (after any retries were exhausted).
     pub fn record_failure(&self, kind: FaultKind) {
+        self.record_failure_at(kind, Instant::now());
+    }
+
+    /// [`record_failure`](Self::record_failure) with an injected clock:
+    /// the breaker opens *as of* `now`. Deterministic boundary tests and
+    /// the loom models drive this directly; production code uses the
+    /// `Instant::now()` wrapper.
+    pub fn record_failure_at(&self, kind: FaultKind, now: Instant) {
         self.errors.fetch_add(1, Ordering::Relaxed);
         if kind == FaultKind::Timeout {
             self.timeouts.fetch_add(1, Ordering::Relaxed);
         }
         let streak = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
         if streak >= self.config.0.failure_threshold as u64 {
-            let mut open = self.open_since.lock().unwrap();
+            let mut open = self.open_since.lock();
             if open.is_none() {
-                *open = Some(Instant::now());
+                *open = Some(now);
             }
         }
     }
@@ -173,13 +183,22 @@ impl HealthTracker {
     /// breaker whose cooldown has elapsed grants exactly one probe call
     /// (and re-arms the cooldown so a failed probe waits again).
     pub fn healthy(&self) -> bool {
-        let mut open = self.open_since.lock().unwrap();
+        self.healthy_at(Instant::now())
+    }
+
+    /// [`healthy`](Self::healthy) with an injected clock. The cooldown
+    /// check is inclusive: a probe is granted when exactly `cooldown` has
+    /// elapsed since the breaker opened. Granting the probe re-arms the
+    /// timer *at `now`* under the same lock acquisition, so of any number
+    /// of concurrent callers at the same instant, exactly one wins it.
+    pub fn healthy_at(&self, now: Instant) -> bool {
+        let mut open = self.open_since.lock();
         match *open {
             None => true,
             Some(when) => {
-                if when.elapsed() >= self.config.0.cooldown {
+                if now.saturating_duration_since(when) >= self.config.0.cooldown {
                     // Half-open: let one probe through, re-arm the timer.
-                    *open = Some(Instant::now());
+                    *open = Some(now);
                     true
                 } else {
                     false
@@ -190,10 +209,17 @@ impl HealthTracker {
 
     /// Breaker state without side effects (does not consume the probe).
     pub fn breaker_state(&self) -> BreakerState {
-        let open = self.open_since.lock().unwrap();
+        self.breaker_state_at(Instant::now())
+    }
+
+    /// [`breaker_state`](Self::breaker_state) with an injected clock.
+    pub fn breaker_state_at(&self, now: Instant) -> BreakerState {
+        let open = self.open_since.lock();
         match *open {
             None => BreakerState::Closed,
-            Some(when) if when.elapsed() >= self.config.0.cooldown => BreakerState::HalfOpen,
+            Some(when) if now.saturating_duration_since(when) >= self.config.0.cooldown => {
+                BreakerState::HalfOpen
+            }
             Some(_) => BreakerState::Open,
         }
     }
@@ -792,6 +818,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // real-time sleep; the _at tests cover this deterministically
     fn breaker_cooldown_grants_single_probe() {
         let h = HealthTracker::new(HealthConfig {
             failure_threshold: 1,
@@ -808,5 +835,62 @@ mod tests {
         assert!(h.healthy());
         assert!(h.healthy());
         assert_eq!(h.breaker_state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_cooldown_boundary_is_inclusive() {
+        let cooldown = Duration::from_secs(5);
+        let h = HealthTracker::new(HealthConfig { failure_threshold: 1, cooldown });
+        let t0 = Instant::now();
+        h.record_failure_at(FaultKind::Transient, t0);
+        let just_before = t0 + (cooldown - Duration::from_nanos(1));
+        assert_eq!(h.breaker_state_at(just_before), BreakerState::Open);
+        assert!(!h.healthy_at(just_before), "1ns short of the cooldown: still open");
+        let boundary = t0 + cooldown;
+        assert_eq!(h.breaker_state_at(boundary), BreakerState::HalfOpen);
+        assert!(h.healthy_at(boundary), "probe granted exactly at the boundary tick");
+        assert!(!h.healthy_at(boundary), "probe consumed; cooldown re-armed at the boundary");
+    }
+
+    #[test]
+    fn breaker_probe_failure_reopens_with_reset_cooldown() {
+        let cooldown = Duration::from_secs(5);
+        let h = HealthTracker::new(HealthConfig { failure_threshold: 1, cooldown });
+        let t0 = Instant::now();
+        h.record_failure_at(FaultKind::Transient, t0);
+        let t1 = t0 + cooldown;
+        assert!(h.healthy_at(t1), "half-open probe granted");
+        // The probe fails: the breaker must stay open and wait out a full
+        // cooldown from the *probe* (the timer re-armed at t1), not grant
+        // another probe off the original t0 timestamp.
+        h.record_failure_at(FaultKind::Transient, t1);
+        assert_eq!(h.breaker_state_at(t1), BreakerState::Open);
+        assert!(!h.healthy_at(t1 + cooldown - Duration::from_nanos(1)));
+        assert!(h.healthy_at(t1 + cooldown), "next probe a full cooldown after the failed one");
+    }
+
+    #[test]
+    fn concurrent_failures_never_lose_streak_counts() {
+        use crate::sync::Arc;
+        let h = Arc::new(HealthTracker::new(HealthConfig {
+            failure_threshold: 1000,
+            cooldown: Duration::from_secs(60),
+        }));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        h.record_failure(FaultKind::Transient);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.consecutive_failures(), 100, "every increment must survive the race");
+        assert_eq!(h.errors(), 100);
+        assert!(h.healthy(), "threshold 1000 never reached: breaker closed");
     }
 }

@@ -1,0 +1,461 @@
+//! Synchronization facade: `std::sync` in production, [`loom`] under
+//! `--cfg loom`.
+//!
+//! Every module in the concurrency core (`coordinator::scheduler`,
+//! `coordinator::kv` + `coordinator::paged`, `DynamicBatcher`,
+//! `spec::types::HealthTracker`, `runtime::host`) imports its primitives
+//! from here instead of `std::sync`/`std::time`/`std::thread` directly
+//! (`cargo xtask check` enforces this). In a normal build everything below
+//! is a pure re-export or a `#[repr(transparent)]`-equivalent newtype over
+//! the `std` primitive, so the facade has **zero runtime cost** and the
+//! byte-identity suites see exactly the code they always saw. Under
+//! `RUSTFLAGS="--cfg loom"` the same names resolve to [`loom`]'s
+//! model-checked primitives, and `rust/tests/loom_models.rs` explores the
+//! bounded interleavings of the delicate protocols.
+//!
+//! Deviations from a 1:1 re-export, and why:
+//!
+//! * [`Mutex::lock`] / [`Condvar::wait`] return the guard directly
+//!   (parking_lot style), recovering from poisoning via
+//!   [`PoisonError::into_inner`](std::sync::PoisonError::into_inner). The
+//!   serving stack treats a panicking peer as a failed component (typed
+//!   faults, breakers), never as a reason to cascade panics through every
+//!   lock site — and the panic-free lint bans the `.lock().unwrap()`
+//!   idiom anyway.
+//! * [`Arc`] is always `std::sync::Arc`, even under loom: loom's `Arc`
+//!   cannot coerce to `Arc<dyn Trait>` (unsized coercion is not
+//!   implementable outside `std`), and the codebase shares
+//!   `Arc<dyn LanguageModel>` pervasively. `Arc` is pure memory
+//!   management here; the protocols under test live in the mutexes,
+//!   condvars and atomics, which are loom's.
+//! * Under loom there is no time: [`time::Instant`] is a logical stub
+//!   whose `now()` is always zero, [`thread::sleep`] is a yield, and
+//!   [`Condvar::wait_timeout`] never times out (a schedule that depends on
+//!   a timeout firing must be modeled explicitly). Deadline- and
+//!   cooldown-dependent code paths take an explicit `now: Instant`
+//!   parameter (`HealthTracker::healthy_at` and friends) so models can
+//!   drive the clock.
+
+use std::time::Duration;
+
+pub use std::sync::Arc;
+
+#[cfg(not(loom))]
+use std::sync as imp;
+
+#[cfg(loom)]
+use loom::sync as imp;
+
+/// Atomic integers and [`Ordering`](std::sync::atomic::Ordering).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Guard type of [`Mutex::lock`]: the backend's own guard, so condvar
+/// waits can consume and return it.
+pub type MutexGuard<'a, T> = imp::MutexGuard<'a, T>;
+
+/// Mutual exclusion with a non-poisoning, guard-returning [`lock`]
+/// (parking_lot-style API over the `std`/`loom` mutex).
+///
+/// [`lock`]: Mutex::lock
+pub struct Mutex<T>(imp::Mutex<T>);
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Self(imp::Mutex::new(value))
+    }
+
+    /// Acquire the lock, recovering the data if a previous holder
+    /// panicked. The panicking thread's own failure is surfaced through
+    /// the fault/breaker layer, not by poisoning every peer.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.0.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+/// Result of [`Condvar::wait_timeout`]. Own type (not `std`'s) so the
+/// loom backend, which has no time, can report "did not time out".
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+/// Condition variable paired with [`Mutex`]; waits recover from
+/// poisoning the same way [`Mutex::lock`] does.
+pub struct Condvar(imp::Condvar);
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self(imp::Condvar::new())
+    }
+
+    pub fn notify_one(&self) {
+        self.0.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.0.notify_all();
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.0.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Wait with a timeout. Under loom the timeout never fires (loom has
+    /// no clock): a protocol whose liveness depends on the timeout firing
+    /// deadlocks in the model — which is exactly the signal that it needs
+    /// an explicit wakeup instead.
+    #[cfg(not(loom))]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        let (guard, res) =
+            self.0.wait_timeout(guard, dur).unwrap_or_else(std::sync::PoisonError::into_inner);
+        (guard, WaitTimeoutResult { timed_out: res.timed_out() })
+    }
+
+    #[cfg(loom)]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        _dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        (self.wait(guard), WaitTimeoutResult { timed_out: false })
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Condvar")
+    }
+}
+
+/// Threads: `std::thread` in production, loom's model threads under
+/// `--cfg loom` (where `sleep` degenerates to a yield).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{sleep, spawn, yield_now, Builder, JoinHandle};
+
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+
+    /// Loom has no clock: sleeping is just an invitation to reschedule.
+    #[cfg(loom)]
+    pub fn sleep(_dur: std::time::Duration) {
+        loom::thread::yield_now();
+    }
+
+    /// Minimal stand-in for `std::thread::Builder` (loom spawns have no
+    /// builder); the name is accepted and dropped.
+    #[cfg(loom)]
+    #[derive(Debug, Default)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    #[cfg(loom)]
+    impl Builder {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            Ok(spawn(f))
+        }
+    }
+}
+
+/// Monotonic time. In production this is `std::time::Instant`; under loom
+/// it is a logical clock whose `now()` is always zero — code that must
+/// behave differently across time takes an explicit `now` parameter so
+/// models can fabricate instants (`Instant::now() + cooldown`).
+pub mod time {
+    pub use std::time::Duration;
+
+    #[cfg(not(loom))]
+    pub use std::time::Instant;
+
+    #[cfg(loom)]
+    pub use stub::Instant;
+
+    #[cfg(loom)]
+    mod stub {
+        use std::ops::{Add, AddAssign, Sub};
+        use std::time::Duration;
+
+        /// Logical instant for loom builds: a nanosecond counter with no
+        /// connection to wall time. `now()` is the epoch; models advance
+        /// the clock by adding `Duration`s.
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+        pub struct Instant {
+            nanos: u128,
+        }
+
+        impl Instant {
+            pub fn now() -> Self {
+                Self { nanos: 0 }
+            }
+
+            pub fn elapsed(&self) -> Duration {
+                Self::now().saturating_duration_since(*self)
+            }
+
+            pub fn duration_since(&self, earlier: Instant) -> Duration {
+                self.saturating_duration_since(earlier)
+            }
+
+            pub fn saturating_duration_since(&self, earlier: Instant) -> Duration {
+                let nanos = self.nanos.saturating_sub(earlier.nanos);
+                Duration::from_secs((nanos / 1_000_000_000) as u64)
+                    + Duration::from_nanos((nanos % 1_000_000_000) as u64)
+            }
+
+            pub fn checked_add(&self, dur: Duration) -> Option<Instant> {
+                self.nanos.checked_add(dur.as_nanos()).map(|nanos| Instant { nanos })
+            }
+
+            pub fn checked_sub(&self, dur: Duration) -> Option<Instant> {
+                self.nanos.checked_sub(dur.as_nanos()).map(|nanos| Instant { nanos })
+            }
+        }
+
+        impl Add<Duration> for Instant {
+            type Output = Instant;
+            fn add(self, dur: Duration) -> Instant {
+                Instant { nanos: self.nanos.saturating_add(dur.as_nanos()) }
+            }
+        }
+
+        impl AddAssign<Duration> for Instant {
+            fn add_assign(&mut self, dur: Duration) {
+                *self = *self + dur;
+            }
+        }
+
+        impl Sub<Duration> for Instant {
+            type Output = Instant;
+            fn sub(self, dur: Duration) -> Instant {
+                Instant { nanos: self.nanos.saturating_sub(dur.as_nanos()) }
+            }
+        }
+
+        impl Sub<Instant> for Instant {
+            type Output = Duration;
+            fn sub(self, earlier: Instant) -> Duration {
+                self.saturating_duration_since(earlier)
+            }
+        }
+    }
+}
+
+/// Multi-producer single-consumer channels. In production this is
+/// `std::sync::mpsc` verbatim. Under loom it is a small shim over the
+/// facade's own `Mutex`/`Condvar` (loom has no `recv_timeout`):
+/// `recv_timeout` blocks like `recv` and can only return `Disconnected`,
+/// never `Timeout`.
+#[cfg(not(loom))]
+pub mod mpsc {
+    pub use std::sync::mpsc::{
+        channel, Receiver, RecvError, RecvTimeoutError, SendError, Sender, TryRecvError,
+    };
+}
+
+#[cfg(loom)]
+pub mod mpsc {
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use super::{Condvar, Mutex};
+
+    #[derive(Debug)]
+    pub struct SendError<T>(pub T);
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub struct RecvError;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum RecvTimeoutError {
+        Timeout,
+        Disconnected,
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum TryRecvError {
+        Empty,
+        Disconnected,
+    }
+
+    struct State<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+        receiver_alive: bool,
+    }
+
+    struct Chan<T> {
+        state: Mutex<State<T>>,
+        cv: Condvar,
+    }
+
+    pub struct Sender<T>(Arc<Chan<T>>);
+
+    pub struct Receiver<T>(Arc<Chan<T>>);
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let chan = Arc::new(Chan {
+            state: Mutex::new(State { queue: VecDeque::new(), senders: 1, receiver_alive: true }),
+            cv: Condvar::new(),
+        });
+        (Sender(chan.clone()), Receiver(chan))
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+            let mut st = self.0.state.lock();
+            if !st.receiver_alive {
+                return Err(SendError(value));
+            }
+            st.queue.push_back(value);
+            self.0.cv.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            self.0.state.lock().senders += 1;
+            Sender(self.0.clone())
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut st = self.0.state.lock();
+            st.senders -= 1;
+            if st.senders == 0 {
+                self.0.cv.notify_all();
+            }
+        }
+    }
+
+    impl<T> std::fmt::Debug for Sender<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("Sender")
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut st = self.0.state.lock();
+            loop {
+                if let Some(v) = st.queue.pop_front() {
+                    return Ok(v);
+                }
+                if st.senders == 0 {
+                    return Err(RecvError);
+                }
+                st = self.0.cv.wait(st);
+            }
+        }
+
+        /// Blocks like [`recv`](Self::recv): loom has no clock, so the
+        /// timeout can never fire inside a model.
+        pub fn recv_timeout(&self, _dur: Duration) -> Result<T, RecvTimeoutError> {
+            self.recv().map_err(|RecvError| RecvTimeoutError::Disconnected)
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut st = self.0.state.lock();
+            match st.queue.pop_front() {
+                Some(v) => Ok(v),
+                None if st.senders == 0 => Err(TryRecvError::Disconnected),
+                None => Err(TryRecvError::Empty),
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            self.0.state.lock().receiver_alive = false;
+        }
+    }
+
+    impl<T> std::fmt::Debug for Receiver<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("Receiver")
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_lock_returns_guard_directly() {
+        let m = Mutex::new(41);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 42);
+    }
+
+    #[test]
+    fn mutex_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*m.lock(), 7, "data survives a panicking holder");
+    }
+
+    #[test]
+    fn condvar_wait_timeout_reports_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let guard = m.lock();
+        let (_guard, res) = cv.wait_timeout(guard, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

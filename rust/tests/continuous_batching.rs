@@ -2,7 +2,8 @@
 //! step-level round-robin, mid-flight admission, streaming, starvation
 //! guard, and the no-head-of-line-blocking guarantee.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use polyspec::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use polyspec::coordinator::api::{DecodeError, Method, Request, Response};
@@ -63,8 +64,8 @@ fn interactive_request_overtakes_long_batch_request() {
     let metrics = Arc::new(Metrics::default());
     let long = mk_req(1, 200, TaskKind::Summarization);
     let short = mk_req(2, 8, TaskKind::Qa);
-    kv.lock().unwrap().admit(1, 20).unwrap();
-    kv.lock().unwrap().admit(2, 20).unwrap();
+    kv.lock().admit(1, 20).unwrap();
+    kv.lock().admit(2, 20).unwrap();
 
     // The long request is already dispatched; the short one is only in the
     // admission queue and must join mid-flight.
@@ -116,7 +117,7 @@ fn interactive_request_overtakes_long_batch_request() {
     assert!(metrics.inflight_peak() >= 2, "peak {}", metrics.inflight_peak());
     assert_eq!(metrics.inflight(), 0);
     assert_eq!(metrics.ttft_latency.count(), 2);
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
 }
 
 /// Streamed deltas concatenate to exactly the final response tokens, and
@@ -127,7 +128,7 @@ fn deltas_concatenate_to_response() {
     let kv = kv_pool();
     let metrics = Arc::new(Metrics::default());
     let req = mk_req(5, 40, TaskKind::Qa);
-    kv.lock().unwrap().admit(5, 20).unwrap();
+    kv.lock().admit(5, 20).unwrap();
     let mut streamed: Vec<i32> = Vec::new();
     let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
     let batch = vec![QueueEntry::fresh(req, Instant::now())];
@@ -140,7 +141,7 @@ fn deltas_concatenate_to_response() {
     assert_eq!(resp.tokens.len(), 40);
     assert!(resp.ttft.expect("first token committed") <= resp.queue_time + resp.service_time);
     // KV tracked the live length and grew past the admitted reservation.
-    assert!(kv.lock().unwrap().peak_blocks() > 2, "live-length growth not tracked");
+    assert!(kv.lock().peak_blocks() > 2, "live-length growth not tracked");
 }
 
 /// Starvation guard: under sustained interactive arrivals, a batch-class
@@ -156,7 +157,7 @@ fn starved_batch_request_admitted_under_interactive_load() {
         starvation_wait: Duration::from_millis(10),
     });
     for id in 1..=4u64 {
-        kv.lock().unwrap().admit(id, 20).unwrap();
+        kv.lock().admit(id, 20).unwrap();
     }
     batcher.push(mk_req(1, 12, TaskKind::Summarization)); // batch class
     std::thread::sleep(Duration::from_millis(15)); // starve it
@@ -174,7 +175,7 @@ fn starved_batch_request_admitted_under_interactive_load() {
     assert_eq!(out.len(), 4);
     let ids: Vec<u64> = out.iter().map(|r| r.as_ref().unwrap().id).collect();
     assert_eq!(ids[0], 1, "starved batch request must be admitted first, got {ids:?}");
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0);
+    assert_eq!(kv.lock().active_seqs(), 0);
 }
 
 /// A pool smaller than one lone request's live footprint is genuine
@@ -195,7 +196,7 @@ fn kv_pool_smaller_than_one_request_fails_cleanly() {
     let metrics = Arc::new(Metrics::default());
     // Needs 3 + 100 + headroom tokens live by the end — far over the pool.
     let req = mk_req(9, 100, TaskKind::Qa);
-    kv.lock().unwrap().admit(9, 20).unwrap();
+    kv.lock().admit(9, 20).unwrap();
     let mut out: Vec<Result<Response, DecodeError>> = Vec::new();
     let batch = vec![QueueEntry::fresh(req, Instant::now())];
     run_batch(&chain, batch, None, 1, &kv, &metrics, |ev| {
@@ -205,7 +206,7 @@ fn kv_pool_smaller_than_one_request_fails_cleanly() {
     });
     assert_eq!(out.len(), 1);
     assert!(out[0].is_err(), "overgrown request must fail, not overcommit");
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "failed request must release KV");
+    assert_eq!(kv.lock().active_seqs(), 0, "failed request must release KV");
     assert_eq!(metrics.inflight(), 0);
     assert_eq!(
         metrics.requests_failed.load(std::sync::atomic::Ordering::Relaxed),

@@ -9,7 +9,8 @@
 //! overdue work at step boundaries — never leaking pool space.
 
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use polyspec::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use polyspec::coordinator::api::{DecodeError, Method, Request, Response};
@@ -166,7 +167,7 @@ fn prop_run_batch_survives_drafter_loss_byte_identically() {
     let batch: Vec<QueueEntry> = reqs
         .iter()
         .map(|r| {
-            kv.lock().unwrap().admit(r.id, 60).unwrap();
+            kv.lock().admit(r.id, 60).unwrap();
             QueueEntry::fresh(r.clone(), now)
         })
         .collect();
@@ -202,7 +203,7 @@ fn prop_run_batch_survives_drafter_loss_byte_identically() {
         "both speculative chains dropped the lost drafter"
     );
     assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 0);
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
     assert_eq!(metrics.inflight(), 0);
 }
 
@@ -215,11 +216,11 @@ fn target_loss_fails_with_engine_lost_and_releases_kv() {
     let req = greedy_req(1, Method::Polybasic { draft_k: 4, mu: 4 }, 32);
     let kv = kv_pool();
     let metrics = Arc::new(Metrics::default());
-    kv.lock().unwrap().admit(1, 60).unwrap();
+    kv.lock().admit(1, 60).unwrap();
     let out = drive(&chain, vec![QueueEntry::fresh(req, Instant::now())], &kv, &metrics);
     assert_eq!(out.len(), 1);
     assert_eq!(out[0].as_ref().unwrap_err(), &DecodeError::EngineLost);
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "failed request must release KV");
+    assert_eq!(kv.lock().active_seqs(), 0, "failed request must release KV");
     assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
     assert_eq!(metrics.inflight(), 0);
 }
@@ -232,10 +233,10 @@ fn hung_target_call_times_out_the_request() {
     let req = greedy_req(1, Method::Dualistic { draft_k: 4 }, 32);
     let kv = kv_pool();
     let metrics = Arc::new(Metrics::default());
-    kv.lock().unwrap().admit(1, 60).unwrap();
+    kv.lock().admit(1, 60).unwrap();
     let out = drive(&chain, vec![QueueEntry::fresh(req, Instant::now())], &kv, &metrics);
     assert_eq!(out[0].as_ref().unwrap_err(), &DecodeError::Timeout);
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "failed request must release KV");
+    assert_eq!(kv.lock().active_seqs(), 0, "failed request must release KV");
     assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
 }
 
@@ -249,12 +250,12 @@ fn deadline_expired_in_queue_is_refused_at_admission() {
     req.deadline = Some(Duration::from_millis(1));
     let kv = kv_pool();
     let metrics = Arc::new(Metrics::default());
-    kv.lock().unwrap().admit(1, 40).unwrap();
+    kv.lock().admit(1, 40).unwrap();
     let entry = QueueEntry::fresh(req, Instant::now());
     std::thread::sleep(Duration::from_millis(5)); // let the deadline lapse in queue
     let out = drive(&chain, vec![entry], &kv, &metrics);
     assert_eq!(out[0].as_ref().unwrap_err(), &DecodeError::Timeout);
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "reservation must be returned");
+    assert_eq!(kv.lock().active_seqs(), 0, "reservation must be returned");
     assert_eq!(metrics.deadline_cancellations.load(Ordering::Relaxed), 1);
     assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
     assert_eq!(metrics.ttft_latency.count(), 0, "no decode ever started");
@@ -270,10 +271,10 @@ fn deadline_exceeded_mid_decode_cancels_and_releases_kv() {
     req.deadline = Some(Duration::from_millis(8));
     let kv = kv_pool();
     let metrics = Arc::new(Metrics::default());
-    kv.lock().unwrap().admit(1, 40).unwrap();
+    kv.lock().admit(1, 40).unwrap();
     let out = drive(&chain, vec![QueueEntry::fresh(req, Instant::now())], &kv, &metrics);
     assert_eq!(out[0].as_ref().unwrap_err(), &DecodeError::Timeout);
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "cancellation must release KV");
+    assert_eq!(kv.lock().active_seqs(), 0, "cancellation must release KV");
     assert_eq!(metrics.deadline_cancellations.load(Ordering::Relaxed), 1);
     assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
     assert_eq!(metrics.inflight(), 0);
@@ -318,7 +319,7 @@ fn batched_entry_fault_degrades_only_its_own_task() {
     let batch: Vec<QueueEntry> = reqs
         .iter()
         .map(|r| {
-            kv.lock().unwrap().admit(r.id, 60).unwrap();
+            kv.lock().admit(r.id, 60).unwrap();
             QueueEntry::fresh(r.clone(), now)
         })
         .collect();
@@ -344,5 +345,5 @@ fn batched_entry_fault_degrades_only_its_own_task() {
         metrics.batched_calls.load(Ordering::Relaxed) > 0,
         "coalescing must have engaged"
     );
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
 }

@@ -11,7 +11,8 @@
 //! from the swap tier, and mid-decode chain degradation.
 
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use polyspec::sync::Mutex;
 use std::time::Instant;
 
 use polyspec::coordinator::api::{DecodeError, Method, Request, Response};
@@ -95,7 +96,7 @@ fn serve(
             }
         },
     );
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
     out.into_iter().map(|(id, r)| (id, r.expect("request failed"))).collect()
 }
 
@@ -126,14 +127,14 @@ fn prop_cached_serving_identical_to_full_recompute() {
 
     let kv = big_pool();
     for r in &reqs {
-        kv.lock().unwrap().admit(r.id, 60).unwrap();
+        kv.lock().admit(r.id, 60).unwrap();
     }
     let m_cached = Arc::new(Metrics::default());
     let cached = serve(&cached_chain, &reqs, &kv, &m_cached);
 
     let kv = big_pool();
     for r in &reqs {
-        kv.lock().unwrap().admit(r.id, 60).unwrap();
+        kv.lock().admit(r.id, 60).unwrap();
     }
     let m_stateless = Arc::new(Metrics::default());
     let stateless = serve(&stateless_chain, &reqs, &kv, &m_stateless);
@@ -186,10 +187,10 @@ fn prop_cached_swap_restore_identical_to_full_recompute() {
         swap_blocks: 128,
     })));
     let metrics = Arc::new(Metrics::default());
-    kv.lock().unwrap().attach_metrics(metrics.clone());
+    kv.lock().attach_metrics(metrics.clone());
     for r in &reqs {
         let need = r.prompt.len() + pipeline_headroom(&r.method, cached_chain.len());
-        kv.lock().unwrap().admit_fresh(r.id, need).unwrap();
+        kv.lock().admit_fresh(r.id, need).unwrap();
     }
     let out = serve(&cached_chain, &reqs, &kv, &metrics);
 
@@ -203,7 +204,7 @@ fn prop_cached_swap_restore_identical_to_full_recompute() {
     let ord = Ordering::Relaxed;
     assert!(metrics.preemptions.load(ord) >= 1, "scenario must saturate the pool");
     assert!(metrics.swapped_blocks.load(ord) > 0, "victims must take the swap path");
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0);
+    assert_eq!(kv.lock().active_seqs(), 0);
 }
 
 /// Mid-decode degradation does not leak cache state: a drafter fault drops
@@ -236,7 +237,7 @@ fn prop_cached_degradation_identical_to_full_recompute() {
         ),
     ];
     let kv = big_pool();
-    kv.lock().unwrap().admit(1, 60).unwrap();
+    kv.lock().admit(1, 60).unwrap();
     let metrics = Arc::new(Metrics::default());
     let out = serve(&chain, &[mk_req()], &kv, &metrics);
 

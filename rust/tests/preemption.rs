@@ -10,7 +10,8 @@
 //! and restore without re-scoring — same byte-identity, strictly less
 //! wasted recompute than the discard path.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use polyspec::sync::Mutex;
 use std::time::Instant;
 
 use polyspec::coordinator::api::{DecodeError, Method, Request, Response};
@@ -54,7 +55,7 @@ fn mixed_workload() -> Vec<Request> {
 /// through the fresh-arrival path that honors resume debt.
 fn router_admit(kv: &Arc<Mutex<KvManager>>, chain_len: usize, req: &Request) {
     let need = req.prompt.len() + pipeline_headroom(&req.method, chain_len);
-    kv.lock().unwrap().admit_fresh(req.id, need).unwrap();
+    kv.lock().admit_fresh(req.id, need).unwrap();
 }
 
 /// Per-request concatenation of streamed deltas.
@@ -144,7 +145,7 @@ fn prop_saturated_pool_preempts_and_completes_byte_identically() {
         per_request, preemptions,
         "per-response preemption counts must account for every eviction"
     );
-    assert_eq!(kv.lock().unwrap().resume_debt(), 0, "all resume debt must settle");
+    assert_eq!(kv.lock().resume_debt(), 0, "all resume debt must settle");
     assert!(
         metrics.wasted_recompute_tokens.load(std::sync::atomic::Ordering::Relaxed) > 0,
         "resumes re-score their prefix; the gauge must show it"
@@ -154,7 +155,7 @@ fn prop_saturated_pool_preempts_and_completes_byte_identically() {
         metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
         reqs.len() as u64
     );
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+    assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
     assert_eq!(metrics.inflight(), 0);
 }
 
@@ -205,8 +206,8 @@ fn preemption_via_batcher_resumed_lane_completes_all() {
     );
     assert_eq!(metrics.requests_failed.load(std::sync::atomic::Ordering::Relaxed), 0);
     assert!(batcher.is_empty(), "resumed lane must drain");
-    assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
-    assert_eq!(kv.lock().unwrap().resume_debt(), 0, "all resume debt must settle");
+    assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
+    assert_eq!(kv.lock().resume_debt(), 0, "all resume debt must settle");
 }
 
 /// Suspend-to-swap vs discard, on the same scripted saturating workload:
@@ -231,7 +232,7 @@ fn swap_tier_eliminates_resume_recompute_byte_identically() {
             swap_blocks,
         })));
         let metrics = Arc::new(Metrics::default());
-        kv.lock().unwrap().attach_metrics(metrics.clone());
+        kv.lock().attach_metrics(metrics.clone());
         let now = Instant::now();
         let batch: Vec<QueueEntry> = reqs
             .iter()
@@ -283,7 +284,7 @@ fn swap_tier_eliminates_resume_recompute_byte_identically() {
         0,
         "a zero-block tier must never accept a victim"
     );
-    let kvm = swap_kv.lock().unwrap();
+    let kvm = swap_kv.lock();
     assert_eq!(kvm.swapped_blocks(), 0, "the swap tier must drain by completion");
     assert_eq!(kvm.resume_debt(), 0, "all resume debt must settle");
     assert_eq!(kvm.active_seqs(), 0, "KV leaked");

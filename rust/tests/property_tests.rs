@@ -4,7 +4,8 @@
 //! properties: seeded random input generation (PCG32) with many iterations
 //! per property and failure messages that include the seed for replay.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use polyspec::sync::Mutex;
 use std::time::Instant;
 
 use polyspec::coordinator::api::{Method, Request};
@@ -142,7 +143,7 @@ fn prop_prefix_shared_decode_identical_to_uncontended() {
                 .iter()
                 .enumerate()
                 .map(|(i, r)| {
-                    let mut kvm = kv.lock().unwrap();
+                    let mut kvm = kv.lock();
                     kvm.admit_fresh_prefixed(r.id, &r.prompt, r.prompt.len() + headroom)
                         .unwrap();
                     allocated_after[i] = kvm.allocated_blocks();
@@ -151,7 +152,7 @@ fn prop_prefix_shared_decode_identical_to_uncontended() {
                 })
                 .collect();
             {
-                let kvm = kv.lock().unwrap();
+                let kvm = kv.lock();
                 // The sharing criterion: two admissions sharing a prefix
                 // consume strictly fewer blocks than two lone admissions.
                 assert!(
@@ -191,7 +192,7 @@ fn prop_prefix_shared_decode_identical_to_uncontended() {
                     r.id
                 );
             }
-            let kvm = kv.lock().unwrap();
+            let kvm = kv.lock();
             assert_eq!(kvm.active_seqs(), 0, "{method:?} {rule:?}: KV leaked");
         }
     }
@@ -242,7 +243,7 @@ fn prop_batched_verification_identical_to_unbatched() {
         let batch: Vec<QueueEntry> = reqs
             .iter()
             .map(|r| {
-                kv.lock().unwrap().admit(r.id, 60).unwrap();
+                kv.lock().admit(r.id, 60).unwrap();
                 QueueEntry::fresh(r.clone(), now)
             })
             .collect();
@@ -252,7 +253,7 @@ fn prop_batched_verification_identical_to_unbatched() {
                 got.insert(id, response.expect("no faults in this workload").tokens);
             }
         });
-        assert_eq!(kv.lock().unwrap().active_seqs(), 0, "KV leaked");
+        assert_eq!(kv.lock().active_seqs(), 0, "KV leaked");
         (got, metrics)
     };
     let (batched, m_on) = run(scheduler::SchedulerOpts { coalesce: true });

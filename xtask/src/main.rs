@@ -1,0 +1,556 @@
+//! `cargo xtask check` — repo-specific invariant lints the generic tools
+//! (clippy, rustc) cannot express. Pure-std lexical analysis over
+//! `rust/src` (plus `examples/` for the counters rule); no syn, no
+//! network. See `rust/docs/verification.md` for the full invariant list.
+//!
+//! Rules (each violation prints `error[<rule>] <file>:<line>: <msg>`):
+//!
+//! - `panic` — no `.unwrap()` / `.expect(` / `panic!` / `unreachable!`
+//!   outside `#[cfg(test)]` regions. Escapes: the engine-boundary
+//!   allowlist (`main.rs`, `runtime/engine.rs`), `unwrap_or*`
+//!   combinators, the JSON scanner's own `self.expect(` method, and an
+//!   `// xtask:allow(panic): <why>` annotation.
+//! - `kv-pairing` — a module whose non-test code calls a KV `admit`
+//!   method must also call `release`/`release_cached`/`suspend`, or carry
+//!   an `// xtask:allow(kv-pairing): <why>` annotation on the first
+//!   admit site (ownership-transfer modules like the router).
+//! - `facade` — modules routed through the `crate::sync` facade must not
+//!   name `std::sync`, `std::thread`, or `std::time::Instant` outside
+//!   tests (loom model checking depends on it); escape with
+//!   `// xtask:allow(facade): <why>`.
+//! - `counters` — every `pub ...: AtomicU64` field of `Metrics` must be
+//!   emitted by `snapshot()`, and the serve benchmark must write the
+//!   snapshot into BENCH_serve.json (a counter nobody exports is a
+//!   counter nobody will ever see regress).
+//! - `no-debug` — no `todo!(` or `dbg!(` anywhere, tests included.
+//!
+//! Annotations bind to the same line or the contiguous `//` comment block
+//! immediately above the flagged line.
+
+#![forbid(unsafe_code)]
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files where panics are an accepted part of the contract: the CLI
+/// binary (top-level error reporting) and the PJRT engine boundary
+/// (feature-gated FFI shims whose failures are unrecoverable anyway).
+const PANIC_ALLOWED_PATHS: &[&str] = &["rust/src/main.rs", "rust/src/runtime/engine.rs"];
+
+/// Modules whose concurrency primitives must come from `crate::sync` so
+/// the loom suite models the real code. Prefix match (covers
+/// `coordinator/paged/*`).
+const FACADE_ROUTED: &[&str] = &[
+    "rust/src/coordinator/batcher.rs",
+    "rust/src/coordinator/kv.rs",
+    "rust/src/coordinator/scheduler.rs",
+    "rust/src/coordinator/router.rs",
+    "rust/src/coordinator/server.rs",
+    "rust/src/coordinator/metrics.rs",
+    "rust/src/coordinator/paged/",
+    "rust/src/spec/types.rs",
+    "rust/src/runtime/host.rs",
+];
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "error[{}] {}:{}: {}", self.rule, self.file, self.line, self.msg)
+    }
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("check") | None => run_check(),
+        Some(other) => {
+            eprintln!("unknown xtask `{other}`; available: check");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_check() -> ExitCode {
+    // CARGO_MANIFEST_DIR is xtask/; the workspace root is its parent.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+
+    let mut violations = Vec::new();
+    let mut files = Vec::new();
+    collect_rust_files(&root.join("rust/src"), &mut files);
+    files.sort();
+
+    for path in &files {
+        let Ok(content) = std::fs::read_to_string(path) else {
+            eprintln!("warning: cannot read {}", path.display());
+            continue;
+        };
+        let label = rel_label(&root, path);
+        violations.extend(check_panics(&label, &content));
+        violations.extend(check_kv_pairing(&label, &content));
+        violations.extend(check_facade(&label, &content));
+        violations.extend(check_no_debug(&label, &content));
+    }
+
+    let metrics = root.join("rust/src/coordinator/metrics.rs");
+    let bench = root.join("examples/serve_specbench.rs");
+    let metrics_src = std::fs::read_to_string(&metrics).unwrap_or_default();
+    let bench_src = std::fs::read_to_string(&bench).unwrap_or_default();
+    violations.extend(check_counters(
+        &rel_label(&root, &metrics),
+        &metrics_src,
+        &rel_label(&root, &bench),
+        &bench_src,
+    ));
+
+    if violations.is_empty() {
+        println!("xtask check: {} files, 0 violations", files.len());
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            println!("{v}");
+        }
+        println!("xtask check: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn rel_label(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Lines before the first `#[cfg(test)]` / `#[cfg(all(test, ...))]` —
+/// the convention in this repo is a single trailing test module.
+fn non_test_region(content: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    for line in content.lines() {
+        let t = line.trim_start();
+        if t.starts_with("#[cfg(test)]") || t.starts_with("#[cfg(all(test") {
+            break;
+        }
+        out.push(line);
+    }
+    out
+}
+
+/// An `// xtask:allow(<rule>): why` annotation on the flagged line or in
+/// the contiguous comment block immediately above it.
+fn annotated(lines: &[&str], idx: usize, rule: &str) -> bool {
+    let marker = format!("xtask:allow({rule})");
+    if lines[idx].contains(&marker) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].trim_start();
+        if !t.starts_with("//") {
+            return false;
+        }
+        if t.contains(&marker) {
+            return true;
+        }
+    }
+    false
+}
+
+fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+fn check_panics(label: &str, content: &str) -> Vec<Violation> {
+    if PANIC_ALLOWED_PATHS.contains(&label) {
+        return Vec::new();
+    }
+    let lines = non_test_region(content);
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        if is_comment(raw) {
+            continue;
+        }
+        // `unwrap_or*` combinators are fallbacks, not panics, and the JSON
+        // scanner's `self.expect(byte)` is its own (Result-returning)
+        // parser method — neither is a panic site.
+        let line = raw.replace(".unwrap_or", "").replace("self.expect(", "");
+        let hit = [".unwrap()", ".expect(", "panic!(", "unreachable!("]
+            .iter()
+            .find(|pat| line.contains(*pat));
+        let Some(pat) = hit else { continue };
+        if annotated(&lines, i, "panic") {
+            continue;
+        }
+        out.push(Violation {
+            file: label.to_string(),
+            line: i + 1,
+            rule: "panic",
+            msg: format!(
+                "`{}` outside tests; return an error, or justify with \
+                 `// xtask:allow(panic): <why>`",
+                pat.trim_end_matches('(')
+            ),
+        });
+    }
+    out
+}
+
+fn check_kv_pairing(label: &str, content: &str) -> Vec<Violation> {
+    const ADMITS: &[&str] =
+        &[".admit(", ".admit_fresh(", ".admit_fresh_prefixed(", ".admit_resumed_prefixed("];
+    const PAIRS: &[&str] = &[".release(", ".release_cached(", ".suspend("];
+    let lines = non_test_region(content);
+    let mut first_admit = None;
+    let mut paired = false;
+    for (i, raw) in lines.iter().enumerate() {
+        if is_comment(raw) {
+            continue;
+        }
+        if ADMITS.iter().any(|p| raw.contains(p)) && first_admit.is_none() {
+            first_admit = Some(i);
+        }
+        if PAIRS.iter().any(|p| raw.contains(p)) {
+            paired = true;
+        }
+    }
+    match first_admit {
+        Some(i) if !paired && !annotated(&lines, i, "kv-pairing") => vec![Violation {
+            file: label.to_string(),
+            line: i + 1,
+            rule: "kv-pairing",
+            msg: "module admits KV sequences but never releases or suspends any; \
+                  pair the allocation or justify the ownership transfer with \
+                  `// xtask:allow(kv-pairing): <why>`"
+                .to_string(),
+        }],
+        _ => Vec::new(),
+    }
+}
+
+fn check_facade(label: &str, content: &str) -> Vec<Violation> {
+    if !FACADE_ROUTED.iter().any(|p| label == *p || label.starts_with(p)) {
+        return Vec::new();
+    }
+    let lines = non_test_region(content);
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        if is_comment(raw) {
+            continue;
+        }
+        let hit = ["std::sync", "std::thread", "std::time::Instant"]
+            .iter()
+            .find(|pat| raw.contains(*pat));
+        let Some(pat) = hit else { continue };
+        if annotated(&lines, i, "facade") {
+            continue;
+        }
+        out.push(Violation {
+            file: label.to_string(),
+            line: i + 1,
+            rule: "facade",
+            msg: format!(
+                "`{pat}` in a facade-routed module; use `crate::sync` so the \
+                 loom models cover this code, or justify with \
+                 `// xtask:allow(facade): <why>`"
+            ),
+        });
+    }
+    out
+}
+
+fn check_no_debug(label: &str, content: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (i, raw) in content.lines().enumerate() {
+        if is_comment(raw) {
+            continue;
+        }
+        let hit = ["todo!(", "dbg!("].iter().find(|pat| raw.contains(*pat));
+        if let Some(pat) = hit {
+            out.push(Violation {
+                file: label.to_string(),
+                line: i + 1,
+                rule: "no-debug",
+                msg: format!("`{}` must not ship, tests included", pat.trim_end_matches('(')),
+            });
+        }
+    }
+    out
+}
+
+/// Every `pub <name>: AtomicU64` field of `Metrics` must be named in the
+/// `snapshot()` body, and the serve benchmark must export the snapshot.
+fn check_counters(
+    metrics_label: &str,
+    metrics_src: &str,
+    bench_label: &str,
+    bench_src: &str,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if metrics_src.is_empty() {
+        out.push(Violation {
+            file: metrics_label.to_string(),
+            line: 1,
+            rule: "counters",
+            msg: "cannot read the metrics module".to_string(),
+        });
+        return out;
+    }
+    let fields = struct_pub_atomic_fields(metrics_src, "Metrics");
+    let snapshot = fn_body(metrics_src, "fn snapshot");
+    if snapshot.is_empty() {
+        out.push(Violation {
+            file: metrics_label.to_string(),
+            line: 1,
+            rule: "counters",
+            msg: "Metrics has no snapshot() to export its counters".to_string(),
+        });
+        return out;
+    }
+    for (line, name) in fields {
+        if !snapshot.contains(&name) {
+            out.push(Violation {
+                file: metrics_label.to_string(),
+                line,
+                rule: "counters",
+                msg: format!(
+                    "counter `{name}` is never emitted by snapshot(); \
+                     a counter nobody exports cannot be watched for regressions"
+                ),
+            });
+        }
+    }
+    if !bench_src.is_empty() && !bench_src.contains(".snapshot()") {
+        out.push(Violation {
+            file: bench_label.to_string(),
+            line: 1,
+            rule: "counters",
+            msg: "serve benchmark must write the metrics snapshot into BENCH_serve.json"
+                .to_string(),
+        });
+    }
+    out
+}
+
+/// `(line, name)` of each `pub <name>: AtomicU64` field in `struct <name>`.
+fn struct_pub_atomic_fields(src: &str, struct_name: &str) -> Vec<(usize, String)> {
+    let header = format!("struct {struct_name} ");
+    let header_brace = format!("struct {struct_name} {{");
+    let mut out = Vec::new();
+    let mut in_struct = false;
+    let mut depth = 0i32;
+    for (i, line) in src.lines().enumerate() {
+        if !in_struct {
+            let t = line.trim_start();
+            if is_comment(line) {
+                continue;
+            }
+            if t.contains(&header_brace) || t.ends_with(header.trim_end()) {
+                in_struct = true;
+                depth = brace_delta(line);
+            }
+            continue;
+        }
+        depth += brace_delta(line);
+        if depth <= 0 {
+            break;
+        }
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some((name, ty)) = rest.split_once(':') {
+                if ty.trim().trim_end_matches(',') == "AtomicU64" {
+                    out.push((i + 1, name.trim().to_string()));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Body of the first function whose signature line contains `sig`,
+/// delimited by brace counting from its opening `{`.
+fn fn_body(src: &str, sig: &str) -> String {
+    let mut body = String::new();
+    let mut depth = 0i32;
+    let mut started = false;
+    for line in src.lines() {
+        if !started {
+            if line.contains(sig) && !is_comment(line) {
+                started = true;
+                depth = brace_delta(line);
+            }
+            continue;
+        }
+        depth += brace_delta(line);
+        body.push_str(line);
+        body.push('\n');
+        if depth <= 0 {
+            break;
+        }
+    }
+    body
+}
+
+/// Net `{`/`}` count of a line. Lexically naive (braces in strings count),
+/// which is fine for the struct/fn scopes this tool measures.
+fn brace_delta(line: &str) -> i32 {
+    let mut d = 0i32;
+    for c in line.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance fixture: an unpaired admit AND a hot-path unwrap in
+    /// one module — both must be reported, by the right rules.
+    #[test]
+    fn seeded_violations_are_both_reported() {
+        let fixture = r#"
+pub fn admit_only(kv: &mut KvManager) {
+    kv.admit_fresh(1, 16).unwrap();
+}
+"#;
+        let panics = check_panics("rust/src/coordinator/fixture.rs", fixture);
+        assert_eq!(panics.len(), 1, "{panics:?}");
+        assert_eq!(panics[0].rule, "panic");
+        assert_eq!(panics[0].line, 3);
+
+        let pairing = check_kv_pairing("rust/src/coordinator/fixture.rs", fixture);
+        assert_eq!(pairing.len(), 1, "{pairing:?}");
+        assert_eq!(pairing[0].rule, "kv-pairing");
+        assert_eq!(pairing[0].line, 3);
+    }
+
+    #[test]
+    fn annotations_suppress_with_reason() {
+        let fixture = r#"
+// xtask:allow(kv-pairing): ownership transfers to the scheduler.
+kv.admit_fresh(1, 16)?;
+// A longer justification that spans the contiguous comment block
+// xtask:allow(panic): the branch above proves the key exists.
+let v = map.get(&k).unwrap();
+"#;
+        assert!(check_kv_pairing("x.rs", fixture).is_empty());
+        assert!(check_panics("x.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn annotation_does_not_leak_past_code_lines() {
+        let fixture = r#"
+// xtask:allow(panic): only blesses the next statement.
+let a = x.unwrap();
+let b = y.unwrap();
+"#;
+        let v = check_panics("x.rs", fixture);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn test_regions_and_allowlisted_paths_are_skipped() {
+        let fixture = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        assert!(check_panics("rust/src/spec/x.rs", fixture).is_empty());
+        assert!(check_panics("rust/src/main.rs", "fn f() { x.unwrap(); }").is_empty());
+        // ...but no-debug applies even inside tests.
+        let t = "#[cfg(test)]\nmod tests {\n    fn f() { dbg!(1); }\n}\n";
+        assert_eq!(check_no_debug("rust/src/spec/x.rs", t).len(), 1);
+    }
+
+    #[test]
+    fn unwrap_or_and_scanner_expect_are_not_panics() {
+        let fixture = r#"
+let a = x.unwrap_or(0);
+let b = x.unwrap_or_else(|| 0);
+let c = x.unwrap_or_default();
+self.expect(b'{')?;
+"#;
+        assert!(check_panics("x.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn facade_rule_applies_only_to_routed_modules() {
+        let src = "use std::sync::Mutex;\n";
+        assert_eq!(check_facade("rust/src/coordinator/batcher.rs", src).len(), 1);
+        assert_eq!(check_facade("rust/src/coordinator/paged/radix.rs", src).len(), 1);
+        assert!(check_facade("rust/src/harness.rs", src).is_empty());
+        let ann = "// xtask:allow(facade): monitoring-only atomics.\nuse std::sync::atomic::AtomicU64;\n";
+        assert!(check_facade("rust/src/coordinator/metrics.rs", ann).is_empty());
+    }
+
+    #[test]
+    fn paired_admit_release_passes() {
+        let fixture = r#"
+kv.admit_fresh(1, 16)?;
+kv.release(1)?;
+"#;
+        assert!(check_kv_pairing("x.rs", fixture).is_empty());
+        let suspends = r#"
+kv.admit(1, 16)?;
+kv.suspend(1, 16, 16)?;
+"#;
+        assert!(check_kv_pairing("x.rs", suspends).is_empty());
+    }
+
+    #[test]
+    fn counters_rule_finds_unexported_field() {
+        let metrics = r#"
+pub struct Metrics {
+    pub good_counter: AtomicU64,
+    pub lost_counter: AtomicU64,
+    private_counter: AtomicU64,
+    pub histogram: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> Json {
+        put("good_counter", self.good_counter.load(Ordering::Relaxed));
+    }
+}
+"#;
+        let v = check_counters("m.rs", metrics, "b.rs", "metrics.snapshot()");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("lost_counter"));
+
+        let missing_export = check_counters("m.rs", metrics, "b.rs", "no snapshot call");
+        assert_eq!(missing_export.len(), 2);
+        assert!(missing_export[1].msg.contains("BENCH_serve.json"));
+    }
+
+    #[test]
+    fn fn_body_is_brace_delimited() {
+        let src = "impl X {\n    pub fn snapshot(&self) -> J {\n        a();\n    }\n    pub fn other(&self) { b(); }\n}\n";
+        let body = fn_body(src, "fn snapshot");
+        assert!(body.contains("a()"));
+        assert!(!body.contains("b()"));
+    }
+}
